@@ -1,0 +1,58 @@
+"""Paper Fig. 6: ReRAM crossbars required vs unpruned (iso-performance).
+
+Deterministic: runs the real group-pruning machinery to each method's
+published Fig.-5 sparsity on the FULL VGG-11/16/19 + ResNet-18 configs,
+maps masks onto 128×128 crossbars, and applies the iso-performance
+replication from the pipelined execution model.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+from benchmarks.common import (CONV_PRED, PAPER_FIG5_REMAINING,
+                               PAPER_FIG6_SAVINGS, Timer, cnn_params,
+                               csv_line, hw_report, masks_at_sparsity)
+from repro.core import perf_model as pm
+from repro.core.hardware import cnn_activation_volumes
+from repro.core.masks import path_str
+
+CNNS = ("vgg11", "vgg16", "vgg19", "resnet18")
+
+
+def xbars_per_layer(report):
+    return {l.path: l.stats.xbars_needed_packed for l in report.layers}
+
+
+def run() -> Dict[str, Dict[str, float]]:
+    out = {}
+    lines = []
+    for method, remaining in PAPER_FIG5_REMAINING.items():
+        target = 1.0 - remaining
+        ratios = []
+        with Timer() as t:
+            for name in CNNS:
+                cfg, params = cnn_params(name)
+                masks = masks_at_sparsity(params, target, method)
+                rep = hw_report(name, masks)
+                vols = cnn_activation_volumes(cfg)
+                unpruned = pm.conv_layer_perf(
+                    cfg, {l.path: l.stats.n_xbars for l in rep.layers}, vols)
+                pruned = pm.conv_layer_perf(cfg, xbars_per_layer(rep), vols)
+                iso = pm.iso_perf_xbars(unpruned, pruned)
+                ratios.append(iso["savings"])
+        mean_savings = float(np.mean(ratios))
+        out[method] = {"savings": mean_savings,
+                       "paper": PAPER_FIG6_SAVINGS[method]}
+        lines.append(csv_line(
+            f"fig6_xbar_savings_{method}", t.us,
+            f"measured={mean_savings:.3f};paper={PAPER_FIG6_SAVINGS[method]:.3f};"
+            + ";".join(f"{n}={r:.3f}" for n, r in zip(CNNS, ratios))))
+    for line in lines:
+        print(line)
+    return out
+
+
+if __name__ == "__main__":
+    run()

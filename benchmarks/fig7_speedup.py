@@ -1,0 +1,77 @@
+"""Paper Fig. 7: training speedup vs unpruned under iso-area.
+
+Pruned masks free crossbars; the waterfill replicates slow layers with
+the freed budget; speedup = pipelined time ratio (3-pass training).
+
+Two accountings are reported:
+  * ``raw``        — the paper's literal 24576-crossbar budget with OUR
+    (dense, row-packed) weight→crossbar mapping.  Our unpruned nets use
+    only ~20-50% of the chip, so replication headroom exists even
+    unpruned, and speedups land at ~3×.
+  * ``calibrated`` — chip budget scaled so the unpruned model uses 95%
+    of storage, matching the paper's own utilisation (Fig. 8: weights of
+    C11-C17 alone ">80% of the ReRAM crossbars").  This isolates the
+    paper's claimed mechanism (pruning frees replication budget) from
+    the mapping-density difference, and reproduces the ~20× band.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+from benchmarks.common import (PAPER_FIG5_REMAINING, PAPER_FIG7_SPEEDUP,
+                               Timer, cnn_params, csv_line, hw_report,
+                               masks_at_sparsity)
+from repro.core import perf_model as pm
+from repro.core.hardware import cnn_activation_volumes
+
+CNNS = ("vgg11", "vgg16", "vgg19", "resnet18")
+CALIBRATED_UTIL = 0.95
+
+
+def _layer_perfs(name, method, target):
+    cfg, params = cnn_params(name)
+    masks = masks_at_sparsity(params, target, method)
+    rep = hw_report(name, masks)
+    vols = cnn_activation_volumes(cfg)
+    unpruned = pm.conv_layer_perf(
+        cfg, {l.path: l.stats.n_xbars for l in rep.layers}, vols)
+    pruned_acts = {l.path: vols[l.path] * l.alive_outputs
+                   / max(l.total_outputs, 1)
+                   for l in rep.layers if l.path in vols}
+    pruned = pm.conv_layer_perf(
+        cfg, {l.path: l.stats.xbars_needed_packed for l in rep.layers},
+        pruned_acts)
+    return unpruned, pruned
+
+
+def run() -> Dict[str, Dict[str, float]]:
+    out = {}
+    lines = []
+    for method, remaining in PAPER_FIG5_REMAINING.items():
+        target = 1.0 - remaining
+        raw, cal = [], []
+        with Timer() as t:
+            for name in CNNS:
+                unpruned, pruned = _layer_perfs(name, method, target)
+                raw.append(pm.iso_area_speedup(unpruned, pruned))
+                storage = sum(l.xbars + l.act_xbars for l in unpruned)
+                budget = int(storage / CALIBRATED_UTIL)
+                cal.append(pm.iso_area_speedup(unpruned, pruned,
+                                               budget=budget))
+        out[method] = {"raw": float(np.mean(raw)),
+                       "calibrated": float(np.mean(cal))}
+        paper = PAPER_FIG7_SPEEDUP.get(method)
+        extra = f";paper={paper:.1f}" if paper else ""
+        lines.append(csv_line(
+            f"fig7_speedup_{method}", t.us,
+            f"raw={np.mean(raw):.2f}x;calibrated={np.mean(cal):.2f}x{extra};"
+            + ";".join(f"{n}={s:.1f}x" for n, s in zip(CNNS, cal))))
+    for line in lines:
+        print(line)
+    return out
+
+
+if __name__ == "__main__":
+    run()

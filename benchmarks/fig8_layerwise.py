@@ -1,0 +1,43 @@
+"""Paper Fig. 8: per-layer crossbars + compute time, unpruned ResNet-18.
+
+Reproduces the motivating observation: C1-C5 dominate execution time
+while C11-C17 hold >60-80% of the crossbars.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import Timer, cnn_params, csv_line
+from repro.core import crossbar as xb
+from repro.core import perf_model as pm
+
+
+def run() -> Dict[str, List[float]]:
+    with Timer() as t:
+        cfg, params = cnn_params("resnet18")
+        xbars = {}
+        for i, spec in enumerate(cfg.convs):
+            w = np.asarray(params["convs"][i]["w"])
+            grid = xb.grid_of(xb.conv_to_matrix(w).shape)
+            xbars[f"convs/{i}/w"] = grid.n_xbars
+        layers = pm.conv_layer_perf(cfg, xbars)
+        total_xb = sum(l.xbars for l in layers)
+        total_t = sum(l.out_positions for l in layers)
+        xb_frac = [l.xbars / total_xb for l in layers]
+        t_frac = [l.out_positions / total_t for l in layers]
+    early_time = sum(t_frac[:5])
+    late_xbars = sum(xb_frac[10:])
+    print(csv_line(
+        "fig8_resnet18_layerwise", t.us,
+        f"time_frac_C1-C5={early_time:.3f};xbar_frac_C11-C17={late_xbars:.3f};"
+        + ";".join(f"C{i+1}={f:.4f}" for i, f in enumerate(t_frac))))
+    print(csv_line(
+        "fig8_resnet18_xbars", 0.0,
+        ";".join(f"C{i+1}={f:.4f}" for i, f in enumerate(xb_frac))))
+    return {"xbar_frac": xb_frac, "time_frac": t_frac}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,68 @@
+"""Roofline table: scan-corrected terms for every dry-run cell.
+
+Reads ``dryrun_results.json`` (written by ``repro.launch.dryrun``),
+applies the scan-trip-count correction κ (see ``repro.launch.costs``),
+and prints one CSV row per (arch × shape × mesh) cell with the three
+terms, the dominant bottleneck, and MODEL_FLOPS/HLO_FLOPs.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import Dict, List
+
+from benchmarks.common import csv_line
+from repro.configs import get_arch, get_shape
+from repro.launch.costs import corrected_roofline
+
+RESULTS = os.environ.get("DRYRUN_RESULTS", "dryrun_results.json")
+
+
+def load_corrected(path: str = RESULTS) -> List[Dict]:
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        records = json.load(f)
+    out = []
+    for rec in records:
+        if rec.get("status") != "OK":
+            out.append(rec)
+            continue
+        cfg = get_arch(rec["arch"])
+        shape = get_shape(rec["shape"])
+        rec = dict(rec)
+        rec["roofline_corrected"] = corrected_roofline(
+            rec["roofline"], cfg, shape)
+        out.append(rec)
+    return out
+
+
+def run():
+    records = load_corrected()
+    if not records:
+        print(csv_line("roofline_missing", 0.0,
+                       f"no {RESULTS}; run python -m repro.launch.dryrun"))
+        return
+    for rec in sorted(records, key=lambda r: (r["arch"], r["shape"],
+                                              r["mesh"])):
+        name = f"roofline_{rec['arch']}_{rec['shape']}_{rec['mesh']}"
+        if rec["status"] == "SKIP":
+            print(csv_line(name, 0.0, f"SKIP;{rec['reason'][:60]}"))
+            continue
+        if rec["status"] == "FAIL":
+            print(csv_line(name, 0.0, f"FAIL;{rec['error'][:60]}"))
+            continue
+        r = rec["roofline_corrected"]
+        gib = rec["memory"]["total_bytes_per_device"] / 2 ** 30
+        print(csv_line(
+            name, rec.get("compile_s", 0) * 1e6,
+            f"compute_s={r['compute_s']:.3e};memory_s={r['memory_s']:.3e};"
+            f"collective_s={r['collective_s']:.3e};"
+            f"bottleneck={r['bottleneck']};kappa={r['kappa']:.1f};"
+            f"useful={r.get('useful_flops_ratio', 0):.3f};"
+            f"mfu={r.get('mfu', 0):.4f};mem_gib={gib:.1f}"))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,45 @@
+"""Benchmark harness: one module per paper table/figure + kernel/roofline.
+
+Prints ``name,us_per_call,derived`` CSV (one line per measurement).
+
+  fig5_sparsity   — paper Fig. 5 (achievable sparsity per method)
+  fig6_crossbars  — paper Fig. 6 (crossbar savings, iso-performance)
+  fig7_speedup    — paper Fig. 7 (training speedup, iso-area)
+  fig8_layerwise  — paper Fig. 8 (ResNet-18 per-layer xbars/time)
+  kernels_bench   — block-sparse matmul tile-skip scaling
+  roofline        — corrected roofline table from the dry-run cache
+
+Run all: ``PYTHONPATH=src python -m benchmarks.run``
+One:     ``PYTHONPATH=src python -m benchmarks.run fig6``
+"""
+import sys
+
+
+def main() -> None:
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    print("name,us_per_call,derived")
+    mods = []
+    if which in ("all", "fig8"):
+        from benchmarks import fig8_layerwise
+        mods.append(fig8_layerwise)
+    if which in ("all", "fig6"):
+        from benchmarks import fig6_crossbars
+        mods.append(fig6_crossbars)
+    if which in ("all", "fig7"):
+        from benchmarks import fig7_speedup
+        mods.append(fig7_speedup)
+    if which in ("all", "kernels"):
+        from benchmarks import kernels_bench
+        mods.append(kernels_bench)
+    if which in ("all", "roofline"):
+        from benchmarks import roofline
+        mods.append(roofline)
+    if which in ("all", "fig5"):
+        from benchmarks import fig5_sparsity
+        mods.append(fig5_sparsity)
+    for m in mods:
+        m.run()
+
+
+if __name__ == '__main__':
+    main()

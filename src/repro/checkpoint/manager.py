@@ -1,0 +1,178 @@
+"""Fault-tolerant checkpointing: atomic, sharded, async, resharding.
+
+Layout (one directory per step):
+
+    ckpt_dir/
+      step_000123/
+        manifest.json        # pytree structure + leaf → file map + meta
+        leaf_00000.npy ...   # one file per leaf (host-local values)
+      step_000123.COMMITTED  # atomic commit marker (rename-last)
+      LATEST                 # text file holding the newest committed step
+
+Guarantees used by the fault-tolerance layer:
+  * a checkpoint is visible only after its COMMITTED marker exists
+    (writer crashes leave at most a garbage step_* dir, never a torn
+    "latest");
+  * ``restore`` can load onto a *different* mesh than the one that
+    saved: leaves are saved as full (addressable) arrays and re-placed
+    with the target sharding — elastic restart after losing hosts;
+  * async mode runs serialization on a background thread so the train
+    loop only blocks on device→host transfer.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.masks import path_str
+
+
+def _flatten_with_paths(tree):
+    leaves = []
+
+    def visit(path, leaf):
+        leaves.append((path_str(path), leaf))
+        return leaf
+
+    jax.tree_util.tree_map_with_path(visit, tree,
+                                     is_leaf=lambda x: x is None)
+    return leaves
+
+
+def save_pytree(tree, directory: str):
+    """Write one pytree to ``directory`` (no commit semantics)."""
+    os.makedirs(directory, exist_ok=True)
+    manifest = {"leaves": [], "version": 1}
+    for i, (path, leaf) in enumerate(_flatten_with_paths(tree)):
+        entry = {"path": path, "index": i}
+        if leaf is None:
+            entry["none"] = True
+        else:
+            arr = np.asarray(leaf)
+            fname = f"leaf_{i:05d}.npy"
+            np.save(os.path.join(directory, fname), arr)
+            entry.update({"file": fname, "dtype": str(arr.dtype),
+                          "shape": list(arr.shape)})
+        manifest["leaves"].append(entry)
+    with open(os.path.join(directory, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+
+
+def load_pytree(directory: str, template, shardings=None):
+    """Load into the structure of ``template``; optionally device_put with
+    per-leaf shardings (pytree of NamedSharding or None)."""
+    with open(os.path.join(directory, "manifest.json")) as f:
+        manifest = json.load(f)
+    by_path = {e["path"]: e for e in manifest["leaves"]}
+
+    flat_sh = {}
+    if shardings is not None:
+        for p, s in _flatten_with_paths(shardings):
+            flat_sh[p] = s
+
+    def fill(path, leaf):
+        p = path_str(path)
+        e = by_path.get(p)
+        if e is None or e.get("none"):
+            return leaf
+        arr = np.load(os.path.join(directory, e["file"]))
+        sh = flat_sh.get(p)
+        if sh is not None:
+            return jax.device_put(arr, sh)
+        return jnp.asarray(arr)
+
+    return jax.tree_util.tree_map_with_path(fill, template,
+                                            is_leaf=lambda x: x is None)
+
+
+class CheckpointManager:
+    def __init__(self, root: str, keep: int = 3, async_save: bool = False):
+        self.root = root
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(root, exist_ok=True)
+
+    # -- paths ------------------------------------------------------------
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.root, f"step_{step:08d}")
+
+    def _marker(self, step: int) -> str:
+        return self._step_dir(step) + ".COMMITTED"
+
+    # -- save -------------------------------------------------------------
+    def save(self, step: int, tree, blocking: Optional[bool] = None):
+        """Checkpoint ``tree`` at ``step`` (atomically)."""
+        host_tree = jax.tree.map(
+            lambda x: None if x is None else np.asarray(x), tree,
+            is_leaf=lambda x: x is None)
+        if self.async_save and not (blocking or False):
+            self.wait()
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host_tree), daemon=True)
+            self._thread.start()
+        else:
+            self._write(step, host_tree)
+
+    def _write(self, step: int, host_tree):
+        d = self._step_dir(step)
+        tmp = d + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        save_pytree(host_tree, tmp)
+        if os.path.exists(d):
+            shutil.rmtree(d)
+        os.rename(tmp, d)
+        with open(self._marker(step), "w") as f:
+            f.write(str(time.time()))
+        with open(os.path.join(self.root, "LATEST.tmp"), "w") as f:
+            f.write(str(step))
+        os.replace(os.path.join(self.root, "LATEST.tmp"),
+                   os.path.join(self.root, "LATEST"))
+        self._gc()
+
+    def wait(self):
+        if self._thread is not None and self._thread.is_alive():
+            self._thread.join()
+
+    # -- restore ----------------------------------------------------------
+    def latest_step(self) -> Optional[int]:
+        committed = []
+        for name in os.listdir(self.root):
+            m = re.fullmatch(r"step_(\d+)\.COMMITTED", name)
+            if m and os.path.isdir(self._step_dir(int(m.group(1)))):
+                committed.append(int(m.group(1)))
+        return max(committed) if committed else None
+
+    def restore(self, template, step: Optional[int] = None, shardings=None):
+        """Load the newest committed checkpoint (or ``step``) into the
+        template's structure; returns (step, tree) or (None, template)."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            return None, template
+        tree = load_pytree(self._step_dir(step), template, shardings)
+        return step, tree
+
+    # -- retention ---------------------------------------------------------
+    def _gc(self):
+        steps = []
+        for name in os.listdir(self.root):
+            m = re.fullmatch(r"step_(\d+)\.COMMITTED", name)
+            if m:
+                steps.append(int(m.group(1)))
+        for s in sorted(steps)[:-self.keep]:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+            try:
+                os.remove(self._marker(s))
+            except OSError:
+                pass

@@ -1,0 +1,363 @@
+"""Config system: architecture + shape + pruning + run configs.
+
+Every assigned architecture is a frozen ``ArchConfig`` in its own module
+under ``repro.configs``; ``get_arch(name)`` resolves ``--arch`` ids.
+
+Configs are plain dataclasses (no framework deps) so that importing a
+config never touches jax device state — required for the dry-run, which
+must set XLA_FLAGS before any jax initialisation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from typing import Optional, Sequence, Tuple
+
+# ---------------------------------------------------------------------------
+# Block kinds for the hybrid/ssm families.
+# ---------------------------------------------------------------------------
+ATTN = "attn"            # (global) self-attention block
+LOCAL_ATTN = "local"     # sliding-window / chunked self-attention block
+RGLRU = "rglru"          # recurrentgemma RG-LRU recurrent block
+MLSTM = "mlstm"          # xLSTM matrix-LSTM block
+SLSTM = "slstm"          # xLSTM scalar-LSTM block
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    num_shared_experts: int = 0
+    d_ff_shared: int = 0
+    # layers [first_moe_layer, n_layers) are MoE; earlier layers use dense FFN
+    first_moe_layer: int = 0
+    # MoE every k-th layer from first_moe_layer (llama4 interleaving = 2)
+    moe_every: int = 1
+    router_noise: float = 0.0
+    capacity_factor: float = 1.25
+
+    def is_moe_layer(self, i: int) -> bool:
+        return i >= self.first_moe_layer and (i - self.first_moe_layer) % self.moe_every == 0
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    """DeepSeek-style Multi-head Latent Attention dims."""
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    """One assigned input-shape cell."""
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind == "decode"
+
+
+TRAIN_4K = ShapeSpec("train_4k", 4096, 256, "train")
+PREFILL_32K = ShapeSpec("prefill_32k", 32768, 32, "prefill")
+DECODE_32K = ShapeSpec("decode_32k", 32768, 128, "decode")
+LONG_500K = ShapeSpec("long_500k", 524288, 1, "decode")
+ALL_SHAPES: Tuple[ShapeSpec, ...] = (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+
+
+def get_shape(name: str) -> ShapeSpec:
+    for s in ALL_SHAPES:
+        if s.name == name:
+            return s
+    raise KeyError(f"unknown shape {name!r}; known: {[s.name for s in ALL_SHAPES]}")
+
+
+@dataclass(frozen=True)
+class PruneConfig:
+    """ReaLPrune / baseline pruning configuration (paper Algorithm 1)."""
+    method: str = "realprune"          # realprune | ltp | block | cap | none
+    prune_fraction: float = 0.25       # p: fraction of remaining weights pruned / iter
+    max_iters: int = 20                # MAX_ITER
+    epochs_per_iter: int = 1           # E (paper: epochs; here: eval-gated rounds)
+    xbar_rows: int = 128               # ReRAM crossbar geometry == TPU tile geometry
+    xbar_cols: int = 128
+    accuracy_tolerance: float = 0.0    # allowed drop vs baseline ("no accuracy drop")
+    granularities: Tuple[str, ...] = ("filter", "channel", "index")
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                        # dense | moe | hybrid | ssm | vlm | audio | cnn
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None     # default d_model // n_heads
+    qkv_bias: bool = False             # qwen2-style QKV bias
+    mlp_bias: bool = False
+    tie_embeddings: bool = False
+    norm: str = "rmsnorm"              # rmsnorm | layernorm
+    act: str = "silu"                  # silu (gated) | gelu
+    gated_mlp: bool = True             # llama-style SwiGLU (d_ff is the hidden dim)
+    rope_theta: float = 10_000.0
+    # attention windowing: None = full attention; int = sliding window size
+    local_window: Optional[int] = None
+    # per-layer block pattern; None => all ATTN. Cycled to n_layers.
+    block_pattern: Optional[Tuple[str, ...]] = None
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    # recurrent (rglru / xlstm) extras
+    rnn_width: Optional[int] = None
+    conv1d_width: int = 4
+    # enc-dec (whisper)
+    is_encoder_decoder: bool = False
+    n_encoder_layers: int = 0
+    encoder_seq_len: int = 1500
+    # vlm stub: number of prepended image-patch embeddings for train shapes
+    num_patch_tokens: int = 0
+    # does this arch support sub-quadratic long-context decode?
+    subquadratic: bool = False
+    # dtype for params/compute at scale
+    dtype: str = "bfloat16"
+    prune: PruneConfig = field(default_factory=PruneConfig)
+    source: str = ""                   # provenance note [source; tier]
+
+    # ---- derived ----
+    @property
+    def head_dim_(self) -> int:
+        if self.head_dim is not None:
+            return self.head_dim
+        return self.d_model // self.n_heads
+
+    @property
+    def blocks(self) -> Tuple[str, ...]:
+        if self.block_pattern is None:
+            return tuple([ATTN] * self.n_layers)
+        pat = self.block_pattern
+        return tuple(pat[i % len(pat)] for i in range(self.n_layers))
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab padded so the unembedding shards 16-ways × 128 lanes."""
+        mult = 2048
+        return ((self.vocab_size + mult - 1) // mult) * mult
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding + blocks + norms)."""
+        d, v = self.d_model, self.padded_vocab
+        total = v * d  # embed
+        if not self.tie_embeddings:
+            total += v * d
+        for i, kind in enumerate(self.blocks):
+            total += self._block_params(kind, layer=i)
+        total += d  # final norm
+        if self.is_encoder_decoder:
+            for _ in range(self.n_encoder_layers):
+                total += self._block_params(ATTN, cross=False)
+            total += d
+        return total
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: only routed top-k + shared)."""
+        if self.moe is None:
+            return self.param_count()
+        d = self.d_model
+        m = self.moe
+        total = self.param_count()
+        n_moe_layers = sum(
+            1 for i, _k in enumerate(self.blocks) if m.is_moe_layer(i)
+        )
+        ff_mult = 3 if self.gated_mlp else 2
+        dense_all = n_moe_layers * m.num_experts * ff_mult * d * m.d_ff_expert
+        dense_active = n_moe_layers * m.top_k * ff_mult * d * m.d_ff_expert
+        return total - dense_all + dense_active
+
+    def _block_params(self, kind: str, cross: bool = False, layer: int = 10**9) -> int:
+        d = self.d_model
+        hd = self.head_dim_
+        nq, nkv = self.n_heads, self.n_kv_heads
+        p = 2 * d  # two norms
+        if kind in (ATTN, LOCAL_ATTN):
+            if self.mla is not None:
+                m = self.mla
+                qk_hd = m.qk_nope_head_dim + m.qk_rope_head_dim
+                p += d * m.q_lora_rank + m.q_lora_rank * nq * qk_hd
+                p += d * (m.kv_lora_rank + m.qk_rope_head_dim)
+                p += m.kv_lora_rank * nq * (m.qk_nope_head_dim + m.v_head_dim)
+                p += nq * m.v_head_dim * d
+            else:
+                p += d * nq * hd + 2 * d * nkv * hd + nq * hd * d
+                if self.qkv_bias:
+                    p += (nq + 2 * nkv) * hd
+        elif kind == RGLRU:
+            w = self.rnn_width or d
+            p += d * w * 2 + w * d        # in (x,gate) + out proj
+            p += w * self.conv1d_width    # temporal conv
+            p += 3 * w                    # a-gate, input-gate params, a_param
+        elif kind == MLSTM:
+            w = self.rnn_width or 2 * d
+            p += d * w * 2 + w * d        # up (x2) + down
+            p += 3 * (w // max(self.n_heads, 1)) * w  # q,k,v per-head proj approx
+            p += 3 * w                    # i,f,o gates (per-channel)
+        elif kind == SLSTM:
+            w = self.rnn_width or d
+            p += 4 * d * w + 4 * w * w    # ifzo input + recurrent
+            p += d * w * 2 + w * d        # up/down proj
+        # FFN
+        if kind in (ATTN, LOCAL_ATTN, RGLRU) and self.d_ff > 0:
+            mlt = 3 if self.gated_mlp else 2
+            if self.moe is not None and self.moe.is_moe_layer(layer):
+                m = self.moe
+                p += d * m.num_experts  # router
+                p += m.num_experts * mlt * d * m.d_ff_expert
+                p += m.num_shared_experts * mlt * d * (m.d_ff_shared or m.d_ff_expert)
+            else:
+                p += mlt * d * self.d_ff
+        if cross:
+            p += d + d * nq * hd + 2 * d * nkv * hd + nq * hd * d  # cross-attn + norm
+        return p
+
+
+# ---------------------------------------------------------------------------
+# CNN configs (the paper's own models: VGG-11/16/19, ResNet-18 on CIFAR-10)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ConvSpec:
+    out_channels: int
+    kernel: int = 3
+    stride: int = 1
+    pool: bool = False       # 2x2 maxpool after this conv (VGG style)
+    residual: bool = False   # start of a ResNet basic block
+
+
+@dataclass(frozen=True)
+class CNNConfig:
+    name: str
+    family: str
+    convs: Tuple[ConvSpec, ...]
+    fc: Tuple[int, ...]
+    num_classes: int = 10
+    in_channels: int = 3
+    image_size: int = 32
+    prune: PruneConfig = field(default_factory=PruneConfig)
+    source: str = ""
+
+    def param_count(self) -> int:
+        total, ic = 0, self.in_channels
+        for c in self.convs:
+            total += c.out_channels * ic * c.kernel * c.kernel
+            ic = c.out_channels
+        feat = ic
+        for f in self.fc:
+            total += feat * f
+            feat = f
+        total += feat * self.num_classes
+        return total
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+_ARCH_REGISTRY = {}
+_CNN_REGISTRY = {}
+
+
+def register(cfg):
+    if isinstance(cfg, ArchConfig):
+        _ARCH_REGISTRY[cfg.name] = cfg
+    elif isinstance(cfg, CNNConfig):
+        _CNN_REGISTRY[cfg.name] = cfg
+    else:  # pragma: no cover
+        raise TypeError(type(cfg))
+    return cfg
+
+
+def get_arch(name: str) -> ArchConfig:
+    _ensure_loaded()
+    if name not in _ARCH_REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_ARCH_REGISTRY)}")
+    return _ARCH_REGISTRY[name]
+
+
+def get_cnn(name: str) -> CNNConfig:
+    _ensure_loaded()
+    if name not in _CNN_REGISTRY:
+        raise KeyError(f"unknown cnn {name!r}; known: {sorted(_CNN_REGISTRY)}")
+    return _CNN_REGISTRY[name]
+
+
+def list_archs() -> Sequence[str]:
+    _ensure_loaded()
+    return sorted(_ARCH_REGISTRY)
+
+
+def list_cnns() -> Sequence[str]:
+    _ensure_loaded()
+    return sorted(_CNN_REGISTRY)
+
+
+_LOADED = False
+
+
+def _ensure_loaded():
+    global _LOADED
+    if _LOADED:
+        return
+    _LOADED = True
+    import importlib
+
+    for mod in (
+        "recurrentgemma_2b", "phi3_vision_4_2b", "yi_6b", "command_r_35b",
+        "llama3_2_3b", "qwen2_72b", "deepseek_v3_671b", "llama4_maverick_400b",
+        "whisper_tiny", "xlstm_125m",
+        "vgg11", "vgg16", "vgg19", "resnet18",
+    ):
+        importlib.import_module(f"repro.configs.{mod}")
+
+
+def scaled_down(cfg: ArchConfig, **overrides) -> ArchConfig:
+    """Reduced same-family config for CPU smoke tests."""
+    moe = cfg.moe
+    if moe is not None:
+        moe = dataclasses.replace(
+            moe,
+            num_experts=min(moe.num_experts, 8),
+            top_k=min(moe.top_k, 2),
+            d_ff_expert=64,
+            d_ff_shared=64 if moe.num_shared_experts else 0,
+            first_moe_layer=min(moe.first_moe_layer, 1),
+        )
+    mla = cfg.mla
+    if mla is not None:
+        mla = MLAConfig(q_lora_rank=32, kv_lora_rank=16,
+                        qk_nope_head_dim=16, qk_rope_head_dim=8, v_head_dim=16)
+    small = dict(
+        n_layers=min(cfg.n_layers, 4 if cfg.block_pattern is None
+                     else max(4, len(cfg.block_pattern))),
+        d_model=128,
+        n_heads=4,
+        n_kv_heads=min(cfg.n_kv_heads, 2) if cfg.n_kv_heads < cfg.n_heads else 4,
+        d_ff=256 if cfg.d_ff > 0 else 0,
+        head_dim=32,
+        vocab_size=512,
+        rnn_width=128 if cfg.rnn_width else None,
+        local_window=min(cfg.local_window, 64) if cfg.local_window else None,
+        n_encoder_layers=min(cfg.n_encoder_layers, 2),
+        encoder_seq_len=min(cfg.encoder_seq_len, 64),
+        num_patch_tokens=min(cfg.num_patch_tokens, 16),
+        moe=moe,
+        mla=mla,
+        name=cfg.name + "-smoke",
+    )
+    small.update(overrides)
+    return dataclasses.replace(cfg, **small)

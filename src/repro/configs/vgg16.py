@@ -1,0 +1,20 @@
+"""VGG-16 (CIFAR-10 variant) — one of the paper's four evaluation CNNs.
+
+[arXiv:1409.1556 config D; verified]
+"""
+from repro.configs.base import CNNConfig, ConvSpec, register
+
+CONFIG = register(CNNConfig(
+    name="vgg16",
+    family="cnn",
+    convs=(
+        ConvSpec(64), ConvSpec(64, pool=True),
+        ConvSpec(128), ConvSpec(128, pool=True),
+        ConvSpec(256), ConvSpec(256), ConvSpec(256, pool=True),
+        ConvSpec(512), ConvSpec(512), ConvSpec(512, pool=True),
+        ConvSpec(512), ConvSpec(512), ConvSpec(512, pool=True),
+    ),
+    fc=(),
+    num_classes=10,
+    source="[arXiv:1409.1556; verified]",
+))

@@ -1,0 +1,17 @@
+"""ReaLPrune core: the paper's contribution as a composable library.
+
+crossbar.py — weight→crossbar unroll mapping + tile accounting
+masks.py    — mask pytrees, prunability predicates
+scoring.py  — filter/channel/index (+ltp/block/cap) group scoring
+realprune.py— Algorithm 1 (iterative coarse→fine prune + rewind)
+lottery.py  — winning-ticket snapshot/rewind/export
+hardware.py — crossbar savings accounting (Figs 2 & 6)
+perf_model.py — pipelined ReRAM execution model (Figs 7 & 8)
+"""
+from repro.core.masks import (  # noqa: F401
+    apply_masks, cnn_is_conv, cnn_prunable, lm_prunable, make_masks,
+    mask_grads, sparsity, sparsity_fraction,
+)
+from repro.core.algorithm import (  # noqa: F401
+    PruneResult, lottery_baseline, prune_step, realprune,
+)

@@ -1,0 +1,178 @@
+"""ReaLPrune — Algorithm 1 of the paper.
+
+    Input : model, pruning percentage p
+    Output: pruned model (masks + rewound weights)
+    1: w ← w_initial
+    2: while itr < MAX_ITER and no accuracy drop:
+    3:     Train for E epochs
+    4:     Prune(p) by crossbar structure + weight magnitude
+    5:     if new_accuracy < baseline_accuracy:
+    6:         undo last pruning step
+    7:         switch to finer pruning strategy
+    8:     reinitialize remaining weights with w_initial
+    return pruned model
+
+The engine is model-agnostic: callers supply ``train_fn`` and
+``eval_fn`` closures plus a prunability predicate.  Pruning decisions
+run host-side (numpy) — pruning is a one-time offline effort (paper
+§V.C); training/eval run in JAX.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import PruneConfig
+from repro.core import masks as masks_lib
+from repro.core import scoring
+from repro.core.masks import apply_masks, path_str, sparsity_fraction
+
+log = logging.getLogger("realprune")
+
+
+@dataclass
+class PruneEvent:
+    iteration: int
+    granularity: str
+    sparsity_before: float
+    sparsity_after: float
+    accuracy: float
+    accepted: bool
+
+
+@dataclass
+class PruneResult:
+    masks: dict
+    params: dict                     # rewound to w_init ⊙ mask
+    history: List[PruneEvent] = field(default_factory=list)
+
+    @property
+    def sparsity(self) -> float:
+        return sparsity_fraction(self.masks)
+
+
+def _leaf_items(params, masks, prunable_conv: Callable[[str], bool]):
+    """[(path, np weight, np mask, is_conv)] for prunable leaves."""
+    flat_p = {}
+
+    def visit(path, leaf):
+        flat_p[path_str(path)] = np.asarray(leaf)
+        return leaf
+
+    jax.tree_util.tree_map_with_path(visit, params)
+    items = []
+
+    def visit_m(path, leaf):
+        if leaf is not None:
+            p = path_str(path)
+            items.append((p, flat_p[p], np.asarray(leaf), prunable_conv(p)))
+        return leaf
+
+    jax.tree_util.tree_map_with_path(visit_m, masks,
+                                     is_leaf=lambda x: x is None)
+    return items
+
+
+def prune_step(params, masks, granularity: str, fraction: float,
+               conv_pred: Callable[[str], bool], block: int = 32):
+    """One crossbar-aware prune of ``fraction`` of remaining weights."""
+    items = _leaf_items(params, masks, conv_pred)
+    group_sets = [scoring.group_scores(p, w, m, granularity, conv)
+                  for (p, w, m, conv) in items]
+    remaining = sum(int(m.sum()) for (_, _, m, _) in items)
+    kills = scoring.select_global_prune(group_sets, fraction, remaining)
+    gs_by_path = {gs.path: gs for gs in group_sets}
+    new_masks = masks
+    for path, kill in kills.items():
+        gs = gs_by_path[path]
+        old = np.asarray(
+            _get_by_path(masks, path))
+        new_leaf = scoring.zero_groups(old, gs, kill)
+        new_masks = masks_lib.tree_set(new_masks, path,
+                                       jnp.asarray(new_leaf, jnp.float32))
+    return new_masks
+
+
+def _get_by_path(tree, path: str):
+    node = tree
+    for k in path.split("/"):
+        if isinstance(node, dict):
+            node = node[k]
+        else:
+            node = node[int(k)]
+    return node
+
+
+def realprune(
+    *,
+    init_params,
+    train_fn: Callable,            # (params, masks) -> trained params
+    eval_fn: Callable,             # (params, masks) -> accuracy (float)
+    prunable: Callable,            # (path, leaf) -> bool
+    conv_pred: Callable,           # (path) -> bool: leaf is a conv kernel
+    cfg: PruneConfig,
+    baseline_accuracy: Optional[float] = None,
+    granularities: Optional[Sequence[str]] = None,
+) -> PruneResult:
+    """Run Algorithm 1 and return the sparsest no-accuracy-drop model."""
+    w_init = jax.tree.map(lambda x: x, init_params)     # t=0 snapshot
+    masks = masks_lib.make_masks(init_params, prunable)
+    grans = list(granularities or cfg.granularities)
+    g_idx = 0
+    history: List[PruneEvent] = []
+
+    if baseline_accuracy is None:
+        trained = train_fn(w_init, masks)
+        baseline_accuracy = float(eval_fn(trained, masks))
+        log.info("baseline accuracy: %.4f", baseline_accuracy)
+
+    params = w_init
+    best = (masks, 0.0)
+    itr = 0
+    while itr < cfg.max_iters and g_idx < len(grans):
+        itr += 1
+        trained = train_fn(params, masks)                       # line 3
+        cand = prune_step(trained, masks, grans[g_idx],          # line 4
+                          cfg.prune_fraction, conv_pred)
+        cand_params = apply_masks(trained, cand)
+        acc = float(eval_fn(cand_params, cand))                  # line 5
+        s_before = sparsity_fraction(masks)
+        s_after = sparsity_fraction(cand)
+        ok = acc >= baseline_accuracy - cfg.accuracy_tolerance
+        history.append(PruneEvent(itr, grans[g_idx], s_before, s_after,
+                                  acc, ok))
+        log.info("iter %d [%s] sparsity %.3f->%.3f acc %.4f (%s)", itr,
+                 grans[g_idx], s_before, s_after, acc,
+                 "keep" if ok else "undo")
+        if ok:
+            masks = cand
+            if s_after > best[1]:
+                best = (cand, s_after)
+        else:
+            g_idx += 1                                           # lines 6-7
+        params = apply_masks(w_init, masks)                      # line 8
+    final_params = apply_masks(w_init, masks)
+    return PruneResult(masks=masks, params=final_params, history=history)
+
+
+def lottery_baseline(*, init_params, train_fn, eval_fn, prunable, conv_pred,
+                     cfg: PruneConfig, method: str,
+                     baseline_accuracy: Optional[float] = None) -> PruneResult:
+    """Iterative single-granularity baselines: LTP / Block / CAP.
+
+    Same loop as Algorithm 1 but with one granularity and no
+    coarse-to-fine switch (the paper's baselines, §V.A: 25% of the
+    remaining weights pruned per iteration, iterated to the sparsest
+    no-accuracy-drop model).
+    """
+    gran = {"ltp": "ltp", "block": "block", "cap": "cap"}[method]
+    return realprune(init_params=init_params, train_fn=train_fn,
+                     eval_fn=eval_fn, prunable=prunable, conv_pred=conv_pred,
+                     cfg=cfg, baseline_accuracy=baseline_accuracy,
+                     granularities=[gran])

@@ -1,0 +1,149 @@
+"""Hardware-savings accounting (paper Figs. 2 & 6).
+
+'Hardware savings' = fraction of ReRAM cells that can be turned off or
+reused; a cell qualifies only when its entire crossbar row or column is
+zero (Fig. 2).  Crossbar *count* savings additionally assume freed
+rows/columns can be repacked with other layers' live weights (the
+paper's "reused for other purposes"): needed crossbars = ⌈live area /
+crossbar area⌉, where live area per crossbar is live_rows × live_cols.
+
+Training also stores activations (paper §IV.A): only *filter-wise*
+pruning (a dead output unit) removes an activation, so activation
+savings = fraction of dead output columns, weighted by each layer's
+activation volume.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core import crossbar as xb
+from repro.core.masks import path_str
+
+
+@dataclass
+class LayerHW:
+    path: str
+    stats: xb.XbarStats
+    alive_outputs: int
+    total_outputs: int
+    activation_volume: float = 0.0   # elements per sample (for weighting)
+
+
+@dataclass
+class HWReport:
+    layers: List[LayerHW] = field(default_factory=list)
+
+    # ---- weights ----
+    @property
+    def total_cells(self):
+        return sum(l.stats.total_cells for l in self.layers)
+
+    @property
+    def nonzero_cells(self):
+        return sum(l.stats.nonzero_cells for l in self.layers)
+
+    @property
+    def saved_cells(self):
+        return sum(l.stats.saved_cells for l in self.layers)
+
+    @property
+    def sparsity(self) -> float:
+        return 1.0 - self.nonzero_cells / max(self.total_cells, 1)
+
+    @property
+    def cell_savings(self) -> float:
+        """Paper's 'hardware savings' over weight cells."""
+        return self.saved_cells / max(self.total_cells, 1)
+
+    @property
+    def xbars_unpruned(self) -> int:
+        return sum(l.stats.n_xbars for l in self.layers)
+
+    @property
+    def xbars_needed(self) -> int:
+        return sum(l.stats.xbars_needed_packed for l in self.layers)
+
+    @property
+    def xbars_needed_strict(self) -> int:
+        return sum(l.stats.xbars_needed_strict for l in self.layers)
+
+    @property
+    def xbar_savings(self) -> float:
+        return 1.0 - self.xbars_needed / max(self.xbars_unpruned, 1)
+
+    # ---- activations ----
+    @property
+    def activation_savings(self) -> float:
+        tot = sum(l.activation_volume for l in self.layers)
+        if tot == 0:
+            return 0.0
+        dead = sum(l.activation_volume * (1 - l.alive_outputs
+                                          / max(l.total_outputs, 1))
+                   for l in self.layers)
+        return dead / tot
+
+    def combined_xbar_savings(self, act_cells_per_xbar: float = 16384.0,
+                              act_weight: float = 1.0) -> float:
+        """Crossbar savings counting weight + activation storage.
+
+        Activations of layer l occupy ⌈volume/16384⌉ crossbars; only
+        filter-pruned outputs are removed (paper §V.B: "fewer
+        activations are pruned than weights").
+        """
+        w_base = self.xbars_unpruned
+        w_need = self.xbars_needed
+        a_base = a_need = 0.0
+        for l in self.layers:
+            if l.activation_volume <= 0:
+                continue
+            per_out = l.activation_volume / max(l.total_outputs, 1)
+            a_base += np.ceil(l.activation_volume * act_weight
+                              / act_cells_per_xbar)
+            a_need += np.ceil(per_out * l.alive_outputs * act_weight
+                              / act_cells_per_xbar)
+        base, need = w_base + a_base, w_need + a_need
+        return 1.0 - need / max(base, 1.0)
+
+
+def analyze_masks(masks, conv_pred: Callable[[str], bool],
+                  activation_volumes: Optional[Dict[str, float]] = None
+                  ) -> HWReport:
+    """Crossbar accounting for every prunable leaf of a mask pytree."""
+    report = HWReport()
+    vols = activation_volumes or {}
+
+    def visit(path, leaf):
+        if leaf is None:
+            return leaf
+        p = path_str(path)
+        mats, _ = xb.leaf_matrices(np.asarray(leaf), conv_pred(p))
+        agg = xb.XbarStats()
+        alive_out = total_out = 0
+        for b in range(mats.shape[0]):
+            st = xb.xbar_stats(mats[b] != 0)
+            agg.merge(st)
+            alive_out += int(xb.alive_columns(mats[b] != 0).sum())
+            total_out += mats[b].shape[1]
+        report.layers.append(LayerHW(p, agg, alive_out, total_out,
+                                     vols.get(p, 0.0)))
+        return leaf
+
+    jax.tree_util.tree_map_with_path(visit, masks,
+                                     is_leaf=lambda x: x is None)
+    return report
+
+
+def cnn_activation_volumes(cfg) -> Dict[str, float]:
+    """Activation elements per sample for each conv layer of a CNNConfig."""
+    size = cfg.image_size
+    vols = {}
+    for i, spec in enumerate(cfg.convs):
+        size = size // spec.stride if spec.stride > 1 else size
+        vols[f"convs/{i}/w"] = float(size * size * spec.out_channels)
+        if spec.pool:
+            size //= 2
+    return vols

@@ -1,0 +1,65 @@
+"""Lottery-ticket utilities: rewind snapshots and winning-ticket export.
+
+The winning ticket is (w_initial, masks).  ``export_ticket`` /
+``import_ticket`` serialise it with numpy so a ticket pruned once can be
+"made available publicly ... and reused for training any number of
+times" (paper §V.C).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.masks import apply_masks, path_str
+
+
+def snapshot(params):
+    """Host-side copy of w_initial (t = 0)."""
+    return jax.tree.map(lambda x: np.asarray(x).copy(), params)
+
+
+def rewind(w_init, masks):
+    """Winning-ticket weights: w_initial ⊙ mask."""
+    return apply_masks(jax.tree.map(jnp.asarray, w_init), masks)
+
+
+def export_ticket(path: str, w_init, masks):
+    os.makedirs(path, exist_ok=True)
+    flat = {}
+
+    def visit(prefix, tree, store):
+        def f(p, leaf):
+            if leaf is not None:
+                store[f"{prefix}:{path_str(p)}"] = np.asarray(leaf)
+            return leaf
+        jax.tree_util.tree_map_with_path(f, tree,
+                                         is_leaf=lambda x: x is None)
+
+    visit("w", w_init, flat)
+    visit("m", masks, flat)
+    np.savez_compressed(os.path.join(path, "ticket.npz"), **flat)
+    treedef = jax.tree_util.tree_structure(
+        masks, is_leaf=lambda x: x is None)
+    with open(os.path.join(path, "ticket.json"), "w") as f:
+        json.dump({"treedef": str(treedef)}, f)
+
+
+def import_ticket(path: str, params_template, masks_template):
+    """Load a ticket into pytrees shaped like the given templates."""
+    data = np.load(os.path.join(path, "ticket.npz"))
+
+    def load(prefix, template):
+        def f(p, leaf):
+            key = f"{prefix}:{path_str(p)}"
+            if leaf is None:
+                return None
+            return jnp.asarray(data[key]) if key in data else leaf
+        return jax.tree_util.tree_map_with_path(
+            f, template, is_leaf=lambda x: x is None)
+
+    return load("w", params_template), load("m", masks_template)

@@ -1,0 +1,132 @@
+"""Mask pytrees and prunability predicates.
+
+A mask pytree mirrors the parameter pytree: prunable leaves get a
+{0,1} array of the same shape; non-prunable leaves get ``None``.
+
+Prunable (paper + standard LTH conventions):
+  * CNN: all conv kernels and FC matrices (paths under convs/shortcuts/
+    fc/head) — BN scales/biases excluded.
+  * LM: every ≥2-D projection matrix (attention, MLP, MoE experts,
+    recurrent in/out projections) — embeddings, unembedding, norms,
+    per-channel gate vectors, conv1d kernels and routers excluded.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# path substrings excluded from pruning for LM params
+_LM_EXCLUDE = ("embed", "unembed", "norm", "router", "lam", "conv",
+               "patch_proj", "frame_adapter", "bi", "bf", "bq", "bk", "bv",
+               "up_b", "down_b", "bz", "bo")
+
+
+def path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def lm_prunable(path: str, leaf) -> bool:
+    if leaf.ndim < 2:
+        return False
+    low = path.lower()
+    return not any(tok in low.split("/")[-1] or tok in low
+                   for tok in _LM_EXCLUDE)
+
+
+def cnn_prunable(path: str, leaf) -> bool:
+    low = path.lower()
+    if "bn" in low or "scale" in low or "bias" in low:
+        return False
+    if low.endswith("/b"):
+        return False
+    return leaf.ndim >= 2
+
+
+def cnn_is_conv(path: str, leaf) -> bool:
+    return leaf.ndim == 4
+
+
+def make_masks(params, prunable: Callable[[str, Any], bool]):
+    """Full-ones masks for prunable leaves, None elsewhere."""
+    def mk(path, leaf):
+        p = path_str(path)
+        if prunable(p, leaf):
+            return jnp.ones(leaf.shape, jnp.float32)
+        return None
+    return jax.tree_util.tree_map_with_path(mk, params)
+
+
+def apply_masks(params, masks):
+    """params ⊙ masks (identity where mask is None)."""
+    def ap(p, m):
+        return p if m is None else p * m.astype(p.dtype)
+    return jax.tree.map(ap, params, masks,
+                        is_leaf=lambda x: x is None)
+
+
+def mask_grads(grads, masks):
+    """Zero gradients of pruned weights (keeps them pruned under any opt)."""
+    return apply_masks(grads, masks)
+
+
+def sparsity(masks) -> Tuple[int, int]:
+    """(pruned_weights, total_prunable_weights)."""
+    total = pruned = 0
+    for m in jax.tree.leaves(masks):
+        if m is None:
+            continue
+        m = np.asarray(m)
+        total += m.size
+        pruned += int(m.size - m.sum())
+    return pruned, total
+
+
+def sparsity_fraction(masks) -> float:
+    p, t = sparsity(masks)
+    return p / max(t, 1)
+
+
+def flat_mask_items(masks, prunable_paths=None):
+    """[(path, np.ndarray mask)] for prunable leaves, stable order."""
+    items = []
+
+    def visit(path, leaf):
+        if leaf is not None:
+            items.append((path_str(path), np.asarray(leaf)))
+        return leaf
+
+    jax.tree_util.tree_map_with_path(visit, masks,
+                                     is_leaf=lambda x: x is None)
+    return items
+
+
+def tree_set(tree, path: str, value):
+    """Functionally set a leaf by its path string (host-side, numpy ok)."""
+    keys = path.split("/")
+
+    def rec(node, ks):
+        k = ks[0]
+        if isinstance(node, dict):
+            new = dict(node)
+            key = k
+            new[key] = value if len(ks) == 1 else rec(node[key], ks[1:])
+            return new
+        if isinstance(node, (list, tuple)):
+            idx = int(k)
+            items = list(node)
+            items[idx] = value if len(ks) == 1 else rec(items[idx], ks[1:])
+            return type(node)(items) if not isinstance(node, list) else items
+        raise TypeError(f"cannot descend into {type(node)} at {k}")
+
+    return rec(tree, keys)

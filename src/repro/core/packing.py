@@ -1,0 +1,139 @@
+"""Physical packing of pruned FFNs — "freed crossbars reused", realised.
+
+The paper's hardware saving comes from *reusing* crossbar rows/columns
+freed by structured pruning (Fig. 2/3).  On TPU the exact analogue is
+to pack the surviving FFN columns into a dense, narrower matmul: a
+filter/channel-pruned (d, ff) `up`/`gate` pair with s% dead columns
+becomes (d, ff'), ff' = live columns rounded up to the 128-lane tile,
+with `down` rows packed identically.  This converts mask sparsity into
+real FLOP/byte/HBM savings for *every* backend — it is what the
+``pruned=<frac>`` dry-run variants lower (EXPERIMENTS.md §Perf cells A
+and C), and this module produces those packed weights from an actual
+pruned checkpoint.
+
+Scan-stacked layers share one ff' (the max live count over the stack,
+so no layer loses weights); per-layer column permutations differ.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+LANE = 128
+
+
+def _live_columns(masks_up: np.ndarray, masks_gate: Optional[np.ndarray],
+                  masks_down: np.ndarray) -> np.ndarray:
+    """A column is dead iff dead in up AND gate AND the down row. (…, ff)"""
+    dead = ~masks_up.any(axis=-2)
+    if masks_gate is not None:
+        dead &= ~masks_gate.any(axis=-2)
+    dead &= ~masks_down.any(axis=-1)
+    return ~dead
+
+
+def packed_width(live: np.ndarray) -> int:
+    """Shared ff' for a (possibly stacked) live map (…, ff)."""
+    per_layer = live.reshape(-1, live.shape[-1]).sum(axis=-1)
+    return max(LANE, int(-(-int(per_layer.max()) // LANE) * LANE))
+
+
+def _perm_for(live_row: np.ndarray, ffp: int) -> np.ndarray:
+    """Column permutation: live columns first, padded with dead ones."""
+    live_idx = np.nonzero(live_row)[0]
+    dead_idx = np.nonzero(~live_row)[0]
+    perm = np.concatenate([live_idx, dead_idx])[:ffp]
+    if len(perm) < ffp:      # ff < ffp cannot happen (ffp ≤ ff by clamp)
+        perm = np.pad(perm, (0, ffp - len(perm)))
+    return perm.astype(np.int32)
+
+
+def pack_ffn(up, gate, down, m_up, m_gate, m_down
+             ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray], jnp.ndarray,
+                        int]:
+    """Pack one FFN (2-D (d, ff) or stacked (…, d, ff)) to ff' columns.
+
+    Returns (up', gate', down', ff').  Weights are mask-applied before
+    packing so dead-but-kept padding columns are exact zeros.
+    """
+    up_n = np.asarray(up) * np.asarray(m_up)
+    gate_n = None if gate is None else np.asarray(gate) * np.asarray(m_gate)
+    down_n = np.asarray(down) * np.asarray(m_down)
+    live = _live_columns(np.asarray(m_up) != 0,
+                         None if m_gate is None else np.asarray(m_gate) != 0,
+                         np.asarray(m_down) != 0)
+    ffp = min(packed_width(live), up_n.shape[-1])
+
+    lead = up_n.shape[:-2]
+    up2 = up_n.reshape(-1, *up_n.shape[-2:])
+    down2 = down_n.reshape(-1, *down_n.shape[-2:])
+    gate2 = None if gate_n is None else gate_n.reshape(-1, *gate_n.shape[-2:])
+    live2 = live.reshape(-1, live.shape[-1])
+
+    ups, gates, downs = [], [], []
+    for i in range(up2.shape[0]):
+        perm = _perm_for(live2[i], ffp)
+        ups.append(up2[i][:, perm])
+        if gate2 is not None:
+            gates.append(gate2[i][:, perm])
+        downs.append(down2[i][perm, :])
+    up_p = jnp.asarray(np.stack(ups).reshape(*lead, up_n.shape[-2], ffp))
+    down_p = jnp.asarray(
+        np.stack(downs).reshape(*lead, ffp, down_n.shape[-1]))
+    gate_p = None if gate2 is None else jnp.asarray(
+        np.stack(gates).reshape(*lead, gate_n.shape[-2], ffp))
+    return up_p, gate_p, down_p, ffp
+
+
+def pack_lm_params(params, masks, cfg):
+    """Pack every dense MLP of a transformer params tree.
+
+    Returns (packed_params, packed_cfg).  Only uniform `mlp` blocks are
+    packed (MoE experts pack per-expert the same way via pack_ffn on
+    their stacked (E, d, ff) leaves; see dry-run `pruned=` variants).
+    """
+    import dataclasses
+    new_segments = []
+    global_ffp = 0
+    # first pass: the shared ff' across all layers (scan needs uniformity)
+    for seg_p, seg_m in zip(params["segments"], masks["segments"]):
+        for p, m in zip(seg_p, seg_m):
+            if isinstance(p, dict) and "mlp" in p and m.get("mlp"):
+                live = _live_columns(
+                    np.asarray(m["mlp"]["up"]) != 0,
+                    (np.asarray(m["mlp"]["gate"]) != 0
+                     if "gate" in m["mlp"] else None),
+                    np.asarray(m["mlp"]["down"]) != 0)
+                global_ffp = max(global_ffp, packed_width(live))
+    if global_ffp == 0 or global_ffp >= cfg.d_ff:
+        return params, cfg
+    for seg_p, seg_m in zip(params["segments"], masks["segments"]):
+        new_pos = []
+        for p, m in zip(seg_p, seg_m):
+            if isinstance(p, dict) and "mlp" in p and m.get("mlp"):
+                mlp_p = dict(p["mlp"])
+                up, gate, down, _ = pack_ffn(
+                    mlp_p["up"], mlp_p.get("gate"), mlp_p["down"],
+                    m["mlp"]["up"], m["mlp"].get("gate"),
+                    m["mlp"]["down"])
+                # clamp to the global width (pad with zero columns)
+                def fit(w, axis):
+                    cur = w.shape[axis]
+                    if cur == global_ffp:
+                        return w
+                    pad = [(0, 0)] * w.ndim
+                    pad[axis] = (0, global_ffp - cur)
+                    return jnp.pad(w, pad)
+                mlp_p["up"] = fit(up, up.ndim - 1)
+                if gate is not None:
+                    mlp_p["gate"] = fit(gate, gate.ndim - 1)
+                mlp_p["down"] = fit(down, down.ndim - 2)
+                p = {**p, "mlp": mlp_p}
+            new_pos.append(p)
+        new_segments.append(new_pos)
+    packed = {**params, "segments": new_segments}
+    return packed, dataclasses.replace(cfg, d_ff=global_ffp,
+                                       name=cfg.name + "-packed")

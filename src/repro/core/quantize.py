@@ -1,0 +1,78 @@
+"""Fixed-point weight quantization (the ReRAM-native representation).
+
+The paper's platform computes in 16-bit fixed point ([2]'s 2-bit cells
+× 8 bit-slices).  On TPU the analogous lever is symmetric per-channel
+integer storage with bf16 compute: int8 halves decode weight bandwidth
+on top of whatever ReaLPrune removed (§Perf cell A analysis: decode is
+weight-read-bound), and composes with packing — quantize *after*
+`core.packing` so scales cover only live columns.
+
+Scheme: per-output-channel symmetric, scale = max|w| / qmax; dequantize
+fuses into the matmul on TPU (convert+dot).  Masked (pruned) weights
+quantize to exact 0 at any scale.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class QTensor(NamedTuple):
+    q: jax.Array          # int8/int16 values
+    scale: jax.Array      # (..., 1, out) f32 per-output-channel scales
+
+    @property
+    def nbytes(self) -> int:
+        return self.q.size * self.q.dtype.itemsize + 4 * self.scale.size
+
+
+_QMAX = {jnp.int8: 127.0, jnp.int16: 32767.0}
+
+
+def quantize(w, bits: int = 8, axis: int = -1) -> QTensor:
+    """w: (..., in, out) → QTensor with per-out-channel scales."""
+    dtype = jnp.int8 if bits == 8 else jnp.int16
+    qmax = _QMAX[dtype]
+    wf = jnp.asarray(w, jnp.float32)
+    amax = jnp.max(jnp.abs(wf), axis=-2, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / qmax
+    q = jnp.clip(jnp.round(wf / scale), -qmax, qmax).astype(dtype)
+    return QTensor(q=q, scale=scale)
+
+
+def dequantize(qt: QTensor, dtype=jnp.bfloat16):
+    return (qt.q.astype(jnp.float32) * qt.scale).astype(dtype)
+
+
+def qmatmul(x, qt: QTensor):
+    """x @ dequant(qt) — the convert fuses into the dot on TPU."""
+    w = qt.q.astype(x.dtype)
+    return (x @ w) * qt.scale[..., 0, :].astype(x.dtype)
+
+
+def quantize_tree(params, predicate, bits: int = 8):
+    """Quantize every leaf where predicate(path, leaf); others pass."""
+    from repro.core.masks import path_str
+
+    def f(path, leaf):
+        if leaf is not None and predicate(path_str(path), leaf):
+            return quantize(leaf, bits)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(
+        f, params, is_leaf=lambda x: x is None)
+
+
+def tree_bytes(tree) -> int:
+    """Stored bytes of a (possibly quantized) parameter tree."""
+    total = 0
+    for leaf in jax.tree.leaves(tree, is_leaf=lambda x:
+                                isinstance(x, QTensor)):
+        if isinstance(leaf, QTensor):
+            total += leaf.nbytes
+        else:
+            total += leaf.size * leaf.dtype.itemsize
+    return total

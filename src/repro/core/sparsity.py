@@ -1,0 +1,39 @@
+"""Sparsity statistics over mask pytrees."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import numpy as np
+
+from repro.core.masks import path_str
+
+
+def per_leaf_sparsity(masks) -> Dict[str, float]:
+    out = {}
+
+    def visit(path, leaf):
+        if leaf is not None:
+            m = np.asarray(leaf)
+            out[path_str(path)] = 1.0 - float(m.sum()) / m.size
+        return leaf
+
+    jax.tree_util.tree_map_with_path(visit, masks,
+                                     is_leaf=lambda x: x is None)
+    return out
+
+
+def summary(masks) -> Dict[str, float]:
+    total = nz = 0
+    for m in jax.tree.leaves(masks):
+        if m is None:
+            continue
+        m = np.asarray(m)
+        total += m.size
+        nz += float(m.sum())
+    return {
+        "prunable_weights": total,
+        "nonzero_weights": nz,
+        "sparsity": 1.0 - nz / max(total, 1),
+        "remaining_fraction": nz / max(total, 1),
+    }

@@ -1,0 +1,124 @@
+"""Fault tolerance: restart supervision, elastic resharding, stragglers.
+
+Checkpoint/restart is the backbone (CheckpointManager provides atomic
+commits); this module adds the cluster-side policies:
+
+  * ``Supervisor``      — run-to-completion wrapper: on a step failure
+    it restores the newest committed checkpoint and retries, up to
+    ``max_restarts`` (the single-process stand-in for a pod-level
+    restart controller).  Failure injection hooks make this testable.
+  * ``elastic_restore`` — load a checkpoint saved on mesh A onto mesh B
+    (fewer/more hosts): leaves are read as full arrays and re-placed
+    with B's shardings — the recovery path after losing a slice.
+  * ``HeartbeatMonitor``— file-based liveness (one file per worker);
+    workers past the deadline are reported for re-slicing.  Stands in
+    for the coordination-service heartbeat on a real cluster.
+  * Straggler mitigation policy lives in ``train.loop.Trainer``
+    (per-step deadline + callback); here we provide ``SkipStraggler``
+    — the synchronous-skip policy object.
+"""
+from __future__ import annotations
+
+import logging
+import os
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+
+from repro.checkpoint import CheckpointManager
+from repro.distributed.sharding import ShardingRules
+
+log = logging.getLogger("fault_tolerance")
+
+
+@dataclass
+class Supervisor:
+    """Restart loop around a training function.
+
+    train_once(state) must raise on failure; returns final state.
+    ``inject_failure`` (tests): map step→exception to raise.
+    """
+    make_trainer: Callable[[], Any]       # () -> Trainer (resumes itself)
+    max_restarts: int = 3
+
+    def run(self, num_steps: int) -> Any:
+        restarts = 0
+        while True:
+            trainer = self.make_trainer()
+            remaining = num_steps - trainer.state.step
+            if remaining <= 0:
+                return trainer
+            try:
+                trainer.run(remaining)
+                return trainer
+            except Exception as e:  # noqa: BLE001
+                restarts += 1
+                log.warning("training failed at step %d (%s); restart %d/%d",
+                            trainer.state.step, e, restarts,
+                            self.max_restarts)
+                if restarts > self.max_restarts:
+                    raise
+
+
+def elastic_restore(ckpt_dir: str, template, new_mesh,
+                    step: Optional[int] = None):
+    """Restore a checkpoint onto a different mesh (elastic scaling)."""
+    rules = ShardingRules(new_mesh)
+    mgr = CheckpointManager(ckpt_dir)
+    shardings = {
+        "params": rules.params_shardings(template["params"]),
+        "opt_state": jax.tree.map(lambda _: None, template["opt_state"]),
+        "step": None,
+    } if isinstance(template, dict) and "params" in template else None
+    return mgr.restore(template, step=step, shardings=shardings)
+
+
+@dataclass
+class HeartbeatMonitor:
+    root: str
+    deadline_s: float = 60.0
+
+    def beat(self, worker: str):
+        os.makedirs(self.root, exist_ok=True)
+        path = os.path.join(self.root, f"{worker}.hb")
+        with open(path, "w") as f:
+            f.write(str(time.time()))
+
+    def dead_workers(self) -> List[str]:
+        now = time.time()
+        dead = []
+        if not os.path.isdir(self.root):
+            return dead
+        for name in os.listdir(self.root):
+            if not name.endswith(".hb"):
+                continue
+            with open(os.path.join(self.root, name)) as f:
+                try:
+                    last = float(f.read().strip())
+                except ValueError:
+                    last = 0.0
+            if now - last > self.deadline_s:
+                dead.append(name[:-3])
+        return dead
+
+
+@dataclass
+class SkipStraggler:
+    """Synchronous-skip policy: tolerate up to ``budget`` slow steps per
+    window, then escalate (callback — e.g. trigger re-slicing)."""
+    deadline_s: float
+    budget: int = 3
+    window: int = 100
+    escalate: Callable[[int], None] = lambda step: None
+    _events: List[int] = field(default_factory=list)
+
+    def __call__(self, step: int, dt: float):
+        self._events = [s for s in self._events if step - s < self.window]
+        self._events.append(step)
+        log.warning("straggler at step %d: %.2fs > %.2fs (%d/%d in window)",
+                    step, dt, self.deadline_s, len(self._events), self.budget)
+        if len(self._events) > self.budget:
+            self.escalate(step)
+            self._events.clear()

@@ -1,0 +1,158 @@
+"""Block-sparse matmul Pallas TPU kernel — the paper's "turned-off
+crossbar" realised on the MXU.
+
+A crossbar whose rows/cols are all zero can be power-gated (paper
+Fig. 2); the TPU analogue is a 128×128 weight tile that is never DMA'd
+HBM→VMEM and never issued to the MXU.  The kernel gets, per output tile
+column j, a *compacted* list of live K-tile indices (scalar-prefetched,
+so index maps can steer the DMA engine):
+
+    grid = (M/bm, N/bn, KMAX)            KMAX = max_j nnz_k(j)
+    x block   (bm, bk) at (i, idx[j,k])  ← skips dead K tiles entirely
+    w block   (bk, bn) at (idx[j,k], j)
+    out block (bm, bn) at (i, j), f32 VMEM accumulator
+
+Tiles beyond a column's live count are masked with ``pl.when`` (their
+DMA re-reads a valid tile; no wrong data is accumulated).  Compute and
+bandwidth both scale with the *live tile count* — the paper's hardware
+savings, as FLOP/byte savings.
+
+The mask is static at compile time (pruning is a one-time offline step,
+paper §V.C), so the compacted indices are baked in as constants.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def compact_tile_indices(tile_mask: np.ndarray) -> Tuple[np.ndarray,
+                                                         np.ndarray, int]:
+    """Per column j of the (Kt, Nt) tile mask: live k indices + counts.
+
+    Returns (idx (Nt, KMAX) int32, count (Nt,) int32, KMAX).
+    Dead slots point at tile 0 (valid DMA target, masked in-kernel).
+    """
+    tm = np.asarray(tile_mask) != 0
+    Kt, Nt = tm.shape
+    counts = tm.sum(axis=0).astype(np.int32)
+    kmax = max(int(counts.max()) if Nt else 0, 1)
+    idx = np.zeros((Nt, kmax), np.int32)
+    for j in range(Nt):
+        live = np.nonzero(tm[:, j])[0]
+        idx[j, : len(live)] = live
+    return idx, counts, kmax
+
+
+def _bsmm_kernel(count_ref, idx_ref, x_ref, w_ref, o_ref, acc_ref):
+    j = pl.program_id(1)
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(k < count_ref[j])
+    def _accum():
+        acc_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+                                preferred_element_type=jnp.float32)
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def bsmm_pallas(x, w, tile_mask: np.ndarray, *, bm: int = 128,
+                bk: int = 128, bn: int = 128,
+                interpret: bool = True):
+    """x: (M, K) @ block-sparse w: (K, N) → (M, N).
+
+    ``tile_mask``: host numpy (⌈K/bk⌉, ⌈N/bn⌉) — static sparsity.
+    ``interpret=True`` runs the kernel body on CPU (this container);
+    on real TPU pass interpret=False.
+    """
+    M, K = x.shape
+    K2, N = w.shape
+    assert K == K2, (x.shape, w.shape)
+    assert M % bm == 0 and K % bk == 0 and N % bn == 0, \
+        f"shapes must tile: {(M, K, N)} vs {(bm, bk, bn)}"
+    idx, counts, kmax = compact_tile_indices(tile_mask)
+    assert idx.shape[0] == N // bn and tile_mask.shape[0] == K // bk
+
+    grid = (M // bm, N // bn, kmax)
+    kernel = pl.pallas_call(
+        _bsmm_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bm, bk),
+                             lambda i, j, k, cnt, idx: (i, idx[j, k])),
+                pl.BlockSpec((bk, bn),
+                             lambda i, j, k, cnt, idx: (idx[j, k], j)),
+            ],
+            out_specs=pl.BlockSpec((bm, bn),
+                                   lambda i, j, k, cnt, idx: (i, j)),
+            scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )
+    return kernel(jnp.asarray(counts), jnp.asarray(idx), x, w)
+
+
+def _masked_kernel(x_ref, w_ref, m_ref, o_ref, acc_ref):
+    """Dense-grid variant: every tile DMA'd, dead tiles skip the MXU.
+
+    This models LTP's crossbar-UNAWARE sparsity on TPU: bytes still
+    move (no bandwidth saved) even when compute is skipped — the
+    kernel-level version of the paper's Fig. 2 argument.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(jnp.any(m_ref[...] != 0))
+    def _accum():
+        acc_ref[...] += jnp.dot(x_ref[...],
+                                w_ref[...] * m_ref[...].astype(w_ref.dtype),
+                                preferred_element_type=jnp.float32)
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def masked_matmul_pallas(x, w, mask, *, bm: int = 128, bk: int = 128,
+                         bn: int = 128, interpret: bool = True):
+    """Elementwise-masked matmul with per-tile MXU skip (no DMA skip)."""
+    M, K = x.shape
+    _, N = w.shape
+    assert M % bm == 0 and K % bk == 0 and N % bn == 0
+    grid = (M // bm, N // bn, K // bk)
+    kernel = pl.pallas_call(
+        _masked_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )
+    return kernel(x, w, mask)

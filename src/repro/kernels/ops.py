@@ -1,0 +1,65 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+``sparse_dense`` is the drop-in replacement for ``x @ w`` once a weight
+has been ReaLPruned: it derives the static tile bitmap from the mask
+(host-side, one-time) and dispatches the compacted block-sparse kernel.
+Falls back to the jnp oracle for shapes that do not tile (tiny smoke
+configs) and on platforms without Pallas TPU support.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.bsmm import bsmm_pallas, compact_tile_indices
+from repro.kernels.tile_stats import tile_stats_pallas
+
+
+def tile_bitmap(mask: np.ndarray, bk: int = 128, bn: int = 128) -> np.ndarray:
+    """Elementwise {0,1} mask (K, N) → tile liveness (⌈K/bk⌉, ⌈N/bn⌉)."""
+    m = np.asarray(mask) != 0
+    K, N = m.shape
+    pk, pn = (-K) % bk, (-N) % bn
+    if pk or pn:
+        m = np.pad(m, ((0, pk), (0, pn)))
+    return m.reshape(m.shape[0] // bk, bk, m.shape[1] // bn, bn) \
+            .any(axis=(1, 3)).astype(np.int32)
+
+
+def tile_density(mask: np.ndarray, bk: int = 128, bn: int = 128) -> float:
+    """Fraction of live tiles — the kernel's compute/bandwidth cost."""
+    bm = tile_bitmap(mask, bk, bn)
+    return float(bm.mean())
+
+
+def sparse_dense(x, w, mask: np.ndarray, *, bm: int = 128, bk: int = 128,
+                 bn: int = 128, interpret: bool = True):
+    """x (..., K) @ pruned w (K, N) skipping dead 128×128 tiles.
+
+    mask: host numpy elementwise {0,1} (static — pruning is offline).
+    """
+    K, N = w.shape
+    lead = x.shape[:-1]
+    M = int(np.prod(lead)) if lead else 1
+    x2 = x.reshape(M, K)
+    if M % bm or K % bk or N % bn:
+        out = ref.masked_matmul_ref(x2, w, jnp.asarray(mask, w.dtype))
+        return out.reshape(*lead, N)
+    bmx = tile_bitmap(mask, bk, bn)
+    out = bsmm_pallas(x2, w * jnp.asarray(mask, w.dtype), bmx,
+                      bm=bm, bk=bk, bn=bn, interpret=interpret)
+    return out.reshape(*lead, N)
+
+
+def tile_stats(w, *, bk: int = 128, bn: int = 128, interpret: bool = True):
+    """Device-side per-tile (liveness, Σ|w|); pads ragged edges."""
+    K, N = w.shape
+    pk, pn = (-K) % bk, (-N) % bn
+    if pk or pn:
+        w = jnp.pad(w, ((0, pk), (0, pn)))
+    return tile_stats_pallas(w, bk=bk, bn=bn, interpret=interpret)

@@ -1,0 +1,42 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def expand_tile_mask(tile_mask, bk: int, bn: int, K: int, N: int):
+    """(K/bk, N/bn) {0,1} → (K, N) elementwise mask."""
+    m = jnp.repeat(jnp.repeat(tile_mask, bk, axis=0), bn, axis=1)
+    return m[:K, :N]
+
+
+def bsmm_ref(x, w, tile_mask, bk: int = 128, bn: int = 128):
+    """Block-sparse matmul oracle: x @ (w ⊙ expand(tile_mask)).
+
+    x: (M, K); w: (K, N); tile_mask: (ceil(K/bk), ceil(N/bn)).
+    """
+    K, N = w.shape
+    m = expand_tile_mask(jnp.asarray(tile_mask, w.dtype), bk, bn, K, N)
+    return jnp.dot(x, w * m, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def tile_stats_ref(w, bk: int = 128, bn: int = 128):
+    """Per 128×128 tile: (any-nonzero, sum|w|) — oracle for tile_stats.
+
+    w: (K, N) → (nt_k, nt_n) bool liveness + (nt_k, nt_n) f32 |w| sums.
+    """
+    K, N = w.shape
+    pk, pn = (-K) % bk, (-N) % bn
+    wp = jnp.pad(w, ((0, pk), (0, pn)))
+    nt_k, nt_n = wp.shape[0] // bk, wp.shape[1] // bn
+    tiles = wp.reshape(nt_k, bk, nt_n, bn)
+    sums = jnp.sum(jnp.abs(tiles.astype(jnp.float32)), axis=(1, 3))
+    live = jnp.any(tiles != 0, axis=(1, 3))
+    return live, sums
+
+
+def masked_matmul_ref(x, w, mask):
+    """Elementwise-masked matmul oracle (for the dense-grid variant)."""
+    return jnp.dot(x, w * mask.astype(w.dtype),
+                   preferred_element_type=jnp.float32).astype(x.dtype)

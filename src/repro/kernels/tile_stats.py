@@ -1,0 +1,40 @@
+"""Per-tile statistics Pallas kernel.
+
+Computes, for every 128×128 weight tile, (liveness, Σ|w|) in one pass —
+the device-side version of ``core.crossbar.xbar_stats`` used when masks
+must be derived on-accelerator (e.g. re-deriving the bsmm tile bitmap
+after a checkpoint restore without a host round-trip).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _tile_stats_kernel(w_ref, live_ref, sum_ref):
+    blk = w_ref[...].astype(jnp.float32)
+    s = jnp.sum(jnp.abs(blk))
+    sum_ref[0, 0] = s
+    live_ref[0, 0] = (jnp.any(blk != 0)).astype(jnp.int32)
+
+
+def tile_stats_pallas(w, *, bk: int = 128, bn: int = 128,
+                      interpret: bool = True):
+    """w: (K, N) → (live (Kt, Nt) int32, sums (Kt, Nt) f32)."""
+    K, N = w.shape
+    assert K % bk == 0 and N % bn == 0, (w.shape, bk, bn)
+    grid = (K // bk, N // bn)
+    kernel = pl.pallas_call(
+        _tile_stats_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bk, bn), lambda i, j: (i, j))],
+        out_specs=[pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+                   pl.BlockSpec((1, 1), lambda i, j: (i, j))],
+        out_shape=[jax.ShapeDtypeStruct((K // bk, N // bn), jnp.int32),
+                   jax.ShapeDtypeStruct((K // bk, N // bn), jnp.float32)],
+        interpret=interpret,
+    )
+    return kernel(w)

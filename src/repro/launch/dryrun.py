@@ -1,0 +1,264 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+# ^ MUST precede any jax import/initialisation (device count locks at init)
+
+_DOC = """Multi-pod dry-run driver.
+
+For every (architecture × input shape) cell:
+  1. build the step (train / prefill / decode) with ShapeDtypeStruct
+     inputs — no allocation;
+  2. jit with in/out shardings from ShardingRules on the production
+     mesh (16×16 single-pod; 2×16×16 multi-pod);
+  3. ``.lower().compile()`` — sharding/collective/memory bugs surface
+     here;
+  4. record memory_analysis / cost_analysis / collective bytes into a
+     JSON cache consumed by benchmarks/roofline.py and EXPERIMENTS.md.
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out results.json]
+"""
+# (module docstring kept in _DOC: the XLA_FLAGS lines must come first)
+
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ALL_SHAPES, get_arch, get_shape, list_archs
+from repro.distributed.sharding import ShardingRules, install
+from repro.launch import steps as steps_lib
+from repro.launch.hlo_analysis import (RooflineTerms, collective_bytes,
+                                       roofline_from_compiled)
+from repro.launch.mesh import make_production_mesh
+
+
+def model_flops_estimate(cfg, shape) -> float:
+    """MODEL_FLOPS = 6·N·D (train) / 2·N·D (fwd-only), N = active params
+    excluding vocab embeddings, D = tokens processed by the step."""
+    n_active = cfg.active_param_count()
+    n_embed = cfg.padded_vocab * cfg.d_model * (1 if cfg.tie_embeddings
+                                                else 2)
+    n = max(n_active - n_embed, 1)
+    if shape.kind == "train":
+        d = shape.global_batch * shape.seq_len
+        return 6.0 * n * d
+    if shape.kind == "prefill":
+        d = shape.global_batch * shape.seq_len
+        return 2.0 * n * d
+    d = shape.global_batch * 1
+    return 2.0 * n * d
+
+
+def apply_variant(cfg, opts: Dict[str, Any]):
+    """Config transforms for perf-iteration variants.
+
+    ``pruned=<frac>`` — structural ReaLPrune overlay: crossbar-aware
+    column pruning of FFN/expert matrices packs to a narrower matmul
+    (the 'freed crossbar columns reused' semantics), so the variant
+    lowers with d_ff scaled by (1-frac), padded to 256 lanes.
+    """
+    import dataclasses as dc
+    if opts.get("remat"):
+        from repro.models import transformer as _tfm
+        _tfm.set_remat(True, policy=str(opts["remat"]))
+    if opts.get("capacity") and cfg.moe is not None:
+        cfg = dc.replace(cfg, moe=dc.replace(
+            cfg.moe, capacity_factor=float(opts["capacity"])))
+    if opts.get("pruned"):
+        frac = float(opts["pruned"])
+        keep = 1.0 - frac
+
+        def pad256(x):
+            return max(256, int(x * keep + 255) // 256 * 256)
+        changes = {}
+        if cfg.d_ff > 0:
+            changes["d_ff"] = pad256(cfg.d_ff)
+        if cfg.moe is not None:
+            changes["moe"] = dc.replace(cfg.moe,
+                                        d_ff_expert=pad256(cfg.moe.d_ff_expert),
+                                        d_ff_shared=pad256(cfg.moe.d_ff_shared)
+                                        if cfg.moe.d_ff_shared else 0)
+        if cfg.rnn_width:
+            changes["rnn_width"] = pad256(cfg.rnn_width)
+        cfg = dc.replace(cfg, **changes)
+    return cfg
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
+             opt_flags: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    opts = opt_flags or {}
+    cfg = apply_variant(get_arch(arch), opts)
+    shape = get_shape(shape_name)
+    skip = steps_lib.cell_skip_reason(cfg, shape)
+    variant = ",".join(f"{k}={v}" for k, v in sorted(opts.items()))
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": shape.kind,
+    }
+    if variant:
+        rec["variant"] = variant
+    if skip:
+        rec["status"] = "SKIP"
+        rec["reason"] = skip
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = len(mesh.devices.reshape(-1))
+    rules = ShardingRules(mesh)
+    install(rules)
+    try:
+        bundle = steps_lib.build_step(cfg, shape)
+        in_shardings = _arg_shardings(rules, bundle,
+                                      zero1=bool(opts.get("zero1")))
+        t0 = time.time()
+        with mesh:
+            jitted = jax.jit(bundle.fn, in_shardings=in_shardings)
+            lowered = jitted.lower(*bundle.args)
+            compiled = lowered.compile()
+        t1 = time.time()
+        mem = compiled.memory_analysis()
+        hlo = compiled.as_text()
+        terms = roofline_from_compiled(
+            compiled, n_chips,
+            model_flops=model_flops_estimate(cfg, shape), hlo_text=hlo)
+        coll = collective_bytes(hlo)
+        rec.update({
+            "status": "OK",
+            "compile_s": round(t1 - t0, 1),
+            "n_chips": n_chips,
+            "memory": _mem_dict(mem),
+            "roofline": terms.as_dict(),
+            "collectives": {
+                "bytes_by_kind": coll.bytes_by_kind,
+                "count_by_kind": coll.count_by_kind,
+            },
+        })
+    except Exception as e:  # noqa: BLE001 — recorded, not swallowed silently
+        rec["status"] = "FAIL"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    finally:
+        install(None)
+        from repro.models import transformer as _tfm
+        _tfm.set_remat(True, policy="full")
+    return rec
+
+
+def _arg_shardings(rules: ShardingRules, bundle, zero1: bool = False):
+    out = []
+    for i, arg in enumerate(bundle.args):
+        if bundle.kind == "train":
+            if i == 0:
+                out.append(rules.params_shardings(arg))
+            elif i == 1:
+                out.append(rules.opt_state_shardings(arg) if zero1
+                           else rules.params_shardings(arg))
+            else:
+                out.append(rules.batch_shardings(arg))
+        elif bundle.kind == "prefill":
+            out.append(rules.params_shardings(arg) if i == 0
+                       else rules.batch_shardings(arg))
+        else:  # decode: (params, caches, token)
+            if i == 0:
+                out.append(rules.params_shardings(arg))
+            elif i == 1:
+                out.append(rules.cache_shardings(arg))
+            else:
+                out.append(rules.batch_shardings(arg))
+    return tuple(out)
+
+
+def _mem_dict(mem) -> Dict[str, float]:
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "generated_code_size_in_bytes")
+    out = {}
+    for k in keys:
+        v = getattr(mem, k, None)
+        if v is not None:
+            out[k] = int(v)
+    out["total_bytes_per_device"] = (
+        out.get("argument_size_in_bytes", 0)
+        + out.get("temp_size_in_bytes", 0))
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="dryrun_results.json")
+    ap.add_argument("--append", action="store_true",
+                    help="merge into an existing results file")
+    ap.add_argument("--opt", default="",
+                    help="perf-variant flags, e.g. 'zero1' or 'pruned=0.5'"
+                         " or 'zero1,pruned=0.9'")
+    args = ap.parse_args()
+    opt_flags = {}
+    for tok in args.opt.split(","):
+        if not tok:
+            continue
+        if "=" in tok:
+            k, v = tok.split("=", 1)
+            opt_flags[k] = v
+        else:
+            opt_flags[tok] = True
+
+    cells = []
+    archs = list_archs() if (args.all or not args.arch) else [args.arch]
+    shapes = ([s.name for s in ALL_SHAPES] if (args.all or not args.shape)
+              else [args.shape])
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    results = []
+    if args.append and os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+    done = {(r["arch"], r["shape"], r["mesh"]) for r in results
+            if r.get("status") == "OK"}
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                key = (arch, shape, "2x16x16" if mp else "16x16")
+                if key in done and not opt_flags:
+                    continue
+                rec = run_cell(arch, shape, multi_pod=mp,
+                               opt_flags=opt_flags)
+                status = rec["status"]
+                extra = ""
+                if status == "OK":
+                    r = rec["roofline"]
+                    extra = (f"compute={r['compute_s']:.2e}s "
+                             f"memory={r['memory_s']:.2e}s "
+                             f"coll={r['collective_s']:.2e}s "
+                             f"bound={r['bottleneck']} "
+                             f"mem/dev={rec['memory']['total_bytes_per_device']/2**30:.2f}GiB "
+                             f"compile={rec['compile_s']}s")
+                elif status == "FAIL":
+                    extra = rec["error"][:200]
+                else:
+                    extra = rec["reason"][:80]
+                print(f"[{status}] {arch} × {shape} × {key[2]}  {extra}",
+                      flush=True)
+                results = [r for r in results
+                           if (r["arch"], r["shape"], r["mesh"]) != key]
+                results.append(rec)
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+    n_ok = sum(1 for r in results if r["status"] == "OK")
+    n_skip = sum(1 for r in results if r["status"] == "SKIP")
+    n_fail = sum(1 for r in results if r["status"] == "FAIL")
+    print(f"\n{n_ok} OK, {n_skip} SKIP, {n_fail} FAIL → {args.out}")
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,22 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so
+importing this module never touches jax device state — the dry-run must
+set XLA_FLAGS before any jax initialisation.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips (TPU v5e pod).
+    Multi-pod: (pod=2, data=16, model=16) = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_cpu_mesh():
+    """Trivial 1-device mesh for smoke tests (keeps the same code path)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,146 @@
+"""Step builders + input specs for every (architecture × shape) cell.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input (weak-type-correct, shardable, no device allocation) — the
+dry-run pattern.  ``build_step`` returns the pure step function plus the
+ShapeDtypeStruct argument trees:
+
+  * train   — (params, opt_state, batch)   → (params, opt_state, metrics)
+  * prefill — (params, batch)              → (last-logits, caches)
+  * decode  — (params, caches, token)      → (logits, caches)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models import encdec
+from repro.models import transformer as tfm
+from repro.models.layers import _dtype
+from repro.optim import Optimizer, adamw, constant
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def cache_capacity(cfg: ArchConfig, shape: ShapeSpec) -> int:
+    return int(shape.seq_len)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for the model inputs of one cell."""
+    B, S = shape.global_batch, shape.seq_len
+    dt = _dtype(cfg.dtype)
+    if shape.kind == "train":
+        if cfg.is_encoder_decoder:
+            return {
+                "frames": _sds((B, cfg.encoder_seq_len, cfg.d_model), dt),
+                "tokens": _sds((B, S), jnp.int32),
+                "labels": _sds((B, S), jnp.int32),
+            }
+        if cfg.num_patch_tokens:
+            p = cfg.num_patch_tokens
+            return {
+                "tokens": _sds((B, S - p), jnp.int32),
+                "patches": _sds((B, p, cfg.d_model), dt),
+                "labels": _sds((B, S - p), jnp.int32),
+            }
+        return {"tokens": _sds((B, S), jnp.int32),
+                "labels": _sds((B, S), jnp.int32)}
+    if shape.kind == "prefill":
+        if cfg.is_encoder_decoder:
+            return {
+                "frames": _sds((B, cfg.encoder_seq_len, cfg.d_model), dt),
+                "tokens": _sds((B, S), jnp.int32),
+            }
+        if cfg.num_patch_tokens:
+            p = cfg.num_patch_tokens
+            return {"tokens": _sds((B, S - p), jnp.int32),
+                    "patches": _sds((B, p, cfg.d_model), dt)}
+        return {"tokens": _sds((B, S), jnp.int32)}
+    # decode: one new token; caches provided separately
+    return {"tokens": _sds((B, 1), jnp.int32)}
+
+
+def params_spec(cfg: ArchConfig):
+    """Parameter ShapeDtypeStructs via eval_shape (no allocation)."""
+    init = encdec.init_params if cfg.is_encoder_decoder else tfm.init_params
+    return jax.eval_shape(lambda k: init(k, cfg), jax.ShapeDtypeStruct(
+        (2,), jnp.uint32))
+
+
+def cache_specs(cfg: ArchConfig, shape: ShapeSpec):
+    cap = cache_capacity(cfg, shape)
+    if cfg.is_encoder_decoder:
+        return encdec.cache_spec(cfg, shape.global_batch, cap)
+    return tfm.cache_spec(cfg, shape.global_batch, cap)
+
+
+@dataclass
+class StepBundle:
+    fn: Any                 # the pure step function
+    args: Tuple             # ShapeDtypeStruct trees, positional
+    kind: str
+
+
+def make_optimizer(cfg: ArchConfig) -> Optimizer:
+    return adamw(constant(1e-4))
+
+
+def opt_state_spec(cfg: ArchConfig, pspec):
+    opt = make_optimizer(cfg)
+    return jax.eval_shape(opt.init, pspec)
+
+
+def build_step(cfg: ArchConfig, shape: ShapeSpec) -> StepBundle:
+    mod = encdec if cfg.is_encoder_decoder else tfm
+    if shape.kind == "train":
+        opt = make_optimizer(cfg)
+
+        def train_step(params, opt_state, batch):
+            def lf(p, b):
+                loss, metrics = mod.loss_fn(p, cfg, b)
+                return loss, metrics
+            (loss, metrics), grads = jax.value_and_grad(
+                lf, has_aux=True)(params, batch)
+            new_params, new_opt = opt.update(grads, opt_state, params)
+            return new_params, new_opt, {"loss": loss, **metrics}
+
+        pspec = params_spec(cfg)
+        return StepBundle(train_step,
+                          (pspec, opt_state_spec(cfg, pspec),
+                           input_specs(cfg, shape)), "train")
+    if shape.kind == "prefill":
+        cap = cache_capacity(cfg, shape)
+
+        def prefill_step(params, batch):
+            return mod.prefill(params, cfg, batch, cap)
+
+        return StepBundle(prefill_step,
+                          (params_spec(cfg), input_specs(cfg, shape)),
+                          "prefill")
+
+    def decode_step(params, caches, token):
+        return mod.decode_step(params, cfg, caches, token)
+
+    return StepBundle(decode_step,
+                      (params_spec(cfg), cache_specs(cfg, shape),
+                       input_specs(cfg, shape)["tokens"]), "decode")
+
+
+# ---------------------------------------------------------------------
+# Cell skip logic (assignment rules; reasons recorded in the dry-run)
+# ---------------------------------------------------------------------
+def cell_skip_reason(cfg: ArchConfig, shape: ShapeSpec) -> Optional[str]:
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return ("full-attention arch: 500k dense-KV decode is "
+                "sub-quadratic-only per assignment (see DESIGN.md)")
+    return None

@@ -1,0 +1,2 @@
+# Submodules are imported directly (repro.models.attention etc.);
+# keep this namespace lazy so partial builds and config-only imports work.

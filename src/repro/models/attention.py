@@ -1,0 +1,359 @@
+"""Attention: GQA (full + sliding-window) and DeepSeek-style MLA.
+
+Memory-efficient by construction: training/prefill attention scans over
+query blocks (only one block's score matrix is live at a time — flash
+semantics, exact math), sliding-window attention uses the two-chunk
+trick (exact for window == chunk).  Decode operates on a KV cache; for
+MLA the compressed-latent "absorption" form is used so the cache stores
+(kv_lora + rope) floats per token instead of H*(dn+dv).
+
+Softmax/scores in float32; inputs/outputs in the compute dtype.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, rmsnorm, rmsnorm_init, xavier
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+def gqa_init(rng, d_model: int, n_heads: int, n_kv_heads: int, head_dim: int,
+             qkv_bias: bool = False, dtype=jnp.float32):
+    ks = jax.random.split(rng, 4)
+    p = {
+        "wq": xavier(ks[0], (d_model, n_heads * head_dim), dtype),
+        "wk": xavier(ks[1], (d_model, n_kv_heads * head_dim), dtype),
+        "wv": xavier(ks[2], (d_model, n_kv_heads * head_dim), dtype),
+        "wo": xavier(ks[3], (n_heads * head_dim, d_model), dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((n_kv_heads * head_dim,), dtype)
+        p["bv"] = jnp.zeros((n_kv_heads * head_dim,), dtype)
+    return p
+
+
+def mla_init(rng, d_model: int, n_heads: int, mla, dtype=jnp.float32):
+    ks = jax.random.split(rng, 7)
+    dn, dr, dv = mla.qk_nope_head_dim, mla.qk_rope_head_dim, mla.v_head_dim
+    return {
+        "w_dq": xavier(ks[0], (d_model, mla.q_lora_rank), dtype),
+        "q_norm": rmsnorm_init(mla.q_lora_rank, dtype),
+        "w_uq": xavier(ks[1], (mla.q_lora_rank, n_heads * (dn + dr)), dtype),
+        "w_dkv": xavier(ks[2], (d_model, mla.kv_lora_rank + dr), dtype),
+        "kv_norm": rmsnorm_init(mla.kv_lora_rank, dtype),
+        "w_uk": xavier(ks[3], (mla.kv_lora_rank, n_heads * dn), dtype),
+        "w_uv": xavier(ks[4], (mla.kv_lora_rank, n_heads * dv), dtype),
+        "wo": xavier(ks[5], (n_heads * dv, d_model), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Core block-scanned attention (exact, flash memory profile)
+# ---------------------------------------------------------------------------
+def _grouped_scores(q, k):
+    """q: (B,Sq,Hkv,G,hd)  k: (B,Sk,Hkv,hd) -> (B,Hkv,G,Sq,Sk) float32."""
+    return jnp.einsum("bqkgd,bskd->bkgqs", q, k,
+                      preferred_element_type=jnp.float32)
+
+
+def _grouped_out(w, v):
+    """w: (B,Hkv,G,Sq,Sk)  v: (B,Sk,Hkv,hd) -> (B,Sq,Hkv,G,hd)."""
+    return jnp.einsum("bkgqs,bskd->bqkgd", w, v.astype(jnp.float32))
+
+
+def attend(q, k, v, *, causal: bool, q_offset, scale: Optional[float] = None,
+           kv_valid_len=None):
+    """Exact attention for one query block against full keys.
+
+    q: (B,Sq,Hq,hd)  k,v: (B,Sk,Hkv,hd).  q_offset: global position of
+    q[0] (int or traced scalar).  kv_valid_len: mask keys >= this length.
+    """
+    B, Sq, Hq, hd = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, Sq, Hkv, G, hd)
+    scores = _grouped_scores(qg, k) * scale            # (B,Hkv,G,Sq,Sk) f32
+    kpos = jnp.arange(Sk)
+    qpos = q_offset + jnp.arange(Sq)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if kv_valid_len is not None:
+        mask &= (kpos < kv_valid_len)[None, :]
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = _grouped_out(w, v)                           # (B,Sq,Hkv,G,dv)
+    return out.reshape(B, Sq, Hq, v.shape[-1]).astype(q.dtype)
+
+
+def causal_attention(q, k, v, *, block_q: int = 512, q_offset: int = 0):
+    """Causal self-attention, scanning query blocks (exact, low-memory)."""
+    B, S, Hq, hd = q.shape
+    if S <= block_q:
+        return attend(q, k, v, causal=True, q_offset=q_offset)
+    nb = S // block_q
+    assert S % block_q == 0, (S, block_q)
+    qb = q.reshape(B, nb, block_q, Hq, hd).transpose(1, 0, 2, 3, 4)
+
+    def body(carry, args):
+        i, qblk = args
+        out = attend(qblk, k, v, causal=True, q_offset=q_offset + i * block_q)
+        return carry, out
+
+    _, outs = jax.lax.scan(body, None, (jnp.arange(nb), qb))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, S, Hq, v.shape[-1])
+
+
+def sliding_window_attention(q, k, v, *, window: int, q_offset: int = 0):
+    """Exact sliding-window causal attention via the two-chunk trick.
+
+    Each query chunk (size == window) attends to its own and the
+    previous key chunk with a relative-position mask; token i sees keys
+    in (i-window, i].  Requires S % window == 0 (or S <= window).
+    """
+    B, S, Hq, hd = q.shape
+    Hkv = k.shape[2]
+    if S <= window:
+        return causal_attention(q, k, v, q_offset=q_offset)
+    assert S % window == 0, (S, window)
+    nb = S // window
+    W = window
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(hd)
+    qb = q.reshape(B, nb, W, Hq, hd)
+    kb = k.reshape(B, nb, W, Hkv, hd)
+    vb = v.reshape(B, nb, W, Hkv, hd)
+    # previous chunk (chunk -1 is zeros and fully masked)
+    k_prev = jnp.pad(kb, ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))[:, :-1]
+    v_prev = jnp.pad(vb, ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))[:, :-1]
+    qpos = jnp.arange(W)
+    kpos_prev = jnp.arange(-W, 0)
+    kpos_self = jnp.arange(W)
+    # (q, k) allowed iff 0 <= q - k < W  (within-window causal)
+    def mk_mask(kpos):
+        d = qpos[:, None] - kpos[None, :]
+        return (d >= 0) & (d < W)
+    mask = jnp.concatenate([mk_mask(kpos_prev), mk_mask(kpos_self)], axis=1)
+    first_mask = jnp.concatenate(
+        [jnp.zeros((W, W), bool), mk_mask(kpos_self)], axis=1)
+
+    def chunk(args):
+        qc, kp, kc, vp, vc, m = args
+        kcat = jnp.concatenate([kp, kc], axis=1)       # (B,2W,Hkv,hd)
+        vcat = jnp.concatenate([vp, vc], axis=1)
+        qg = qc.reshape(B, W, Hkv, G, hd)
+        s = _grouped_scores(qg, kcat) * scale
+        s = jnp.where(m[None, None, None], s, -1e30)
+        w = jax.nn.softmax(s, axis=-1)
+        o = _grouped_out(w, vcat)
+        return o.reshape(B, W, Hq, hd).astype(q.dtype)
+
+    def body(carry, args):
+        i, qc, kp, kc, vp, vc = args
+        m = jnp.where(i == 0, first_mask, mask)
+        return carry, chunk((qc, kp, kc, vp, vc, m))
+
+    xs = (jnp.arange(nb), qb.transpose(1, 0, 2, 3, 4),
+          k_prev.transpose(1, 0, 2, 3, 4), kb.transpose(1, 0, 2, 3, 4),
+          v_prev.transpose(1, 0, 2, 3, 4), vb.transpose(1, 0, 2, 3, 4))
+    _, outs = jax.lax.scan(body, None, xs)
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, S, Hq, hd)
+
+
+# ---------------------------------------------------------------------------
+# GQA block: forward (train/prefill) and decode
+# ---------------------------------------------------------------------------
+class KVCache(NamedTuple):
+    k: jax.Array          # (B, C, Hkv, hd)
+    v: jax.Array          # (B, C, Hkv, hd)
+    index: jax.Array      # () int32 — number of tokens already written
+
+
+def gqa_cache_spec(batch: int, capacity: int, n_kv_heads: int, head_dim: int,
+                   dtype):
+    zeros = jax.ShapeDtypeStruct((batch, capacity, n_kv_heads, head_dim), dtype)
+    return KVCache(k=zeros, v=zeros, index=jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def gqa_qkv(params, x, *, n_heads, n_kv_heads, head_dim, positions, rope_theta):
+    B, S, _ = x.shape
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if "bq" in params:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(B, S, n_heads, head_dim)
+    k = k.reshape(B, S, n_kv_heads, head_dim)
+    v = v.reshape(B, S, n_kv_heads, head_dim)
+    q = apply_rope(q, positions, rope_theta)
+    k = apply_rope(k, positions, rope_theta)
+    return q, k, v
+
+
+def gqa_forward(params, x, *, n_heads, n_kv_heads, head_dim, rope_theta,
+                window: Optional[int] = None, block_q: int = 512):
+    """Training / prefill self-attention over a full sequence."""
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    q, k, v = gqa_qkv(params, x, n_heads=n_heads, n_kv_heads=n_kv_heads,
+                      head_dim=head_dim, positions=positions,
+                      rope_theta=rope_theta)
+    if window is not None:
+        out = sliding_window_attention(q, k, v, window=window)
+    else:
+        out = causal_attention(q, k, v, block_q=block_q)
+    return out.reshape(B, S, n_heads * head_dim) @ params["wo"]
+
+
+def gqa_make_cache(params, x, *, n_heads, n_kv_heads, head_dim, rope_theta,
+                   capacity: int, window: Optional[int] = None,
+                   block_q: int = 512):
+    """Prefill: returns (attn_out_projected, KVCache)."""
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    q, k, v = gqa_qkv(params, x, n_heads=n_heads, n_kv_heads=n_kv_heads,
+                      head_dim=head_dim, positions=positions,
+                      rope_theta=rope_theta)
+    if window is not None:
+        out = sliding_window_attention(q, k, v, window=window)
+        keep = min(window, capacity, S)
+    else:
+        out = causal_attention(q, k, v, block_q=block_q)
+        keep = min(S, capacity)
+    kc = jnp.zeros((B, capacity, *k.shape[2:]), k.dtype)
+    vc = jnp.zeros_like(kc)
+    kc = jax.lax.dynamic_update_slice(kc, k[:, S - keep:], (0, 0, 0, 0))
+    vc = jax.lax.dynamic_update_slice(vc, v[:, S - keep:], (0, 0, 0, 0))
+    cache = KVCache(kc, vc, jnp.asarray(S, jnp.int32))
+    proj = out.reshape(B, S, n_heads * head_dim) @ params["wo"]
+    return proj, cache
+
+
+def gqa_decode(params, cache: KVCache, x, *, n_heads, n_kv_heads, head_dim,
+               rope_theta, window: Optional[int] = None):
+    """One decode step. x: (B, 1, d).  Ring-buffer writes for windows."""
+    B, S, _ = x.shape
+    assert S == 1
+    capacity = cache.k.shape[1]
+    pos = cache.index  # scalar: absolute position of the new token
+    positions = jnp.broadcast_to(pos[None], (B, 1))
+    q, k, v = gqa_qkv(params, x, n_heads=n_heads, n_kv_heads=n_kv_heads,
+                      head_dim=head_dim, positions=positions,
+                      rope_theta=rope_theta)
+    if window is None:
+        slot = jnp.minimum(pos, capacity - 1)
+    else:
+        slot = pos % capacity
+    kc = jax.lax.dynamic_update_slice(cache.k, k, (0, slot, 0, 0))
+    vc = jax.lax.dynamic_update_slice(cache.v, v, (0, slot, 0, 0))
+    # valid cache entries: all slots < min(pos+1, capacity)
+    valid = jnp.minimum(pos + 1, capacity)
+    out = attend(q, kc, vc, causal=False, q_offset=pos, kv_valid_len=valid)
+    proj = out.reshape(B, 1, n_heads * head_dim) @ params["wo"]
+    return proj, KVCache(kc, vc, pos + 1)
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek multi-head latent attention)
+# ---------------------------------------------------------------------------
+class MLACache(NamedTuple):
+    c_kv: jax.Array       # (B, C, kv_lora_rank)
+    k_rope: jax.Array     # (B, C, qk_rope_head_dim)
+    index: jax.Array
+
+
+def mla_cache_spec(batch: int, capacity: int, mla, dtype):
+    return MLACache(
+        c_kv=jax.ShapeDtypeStruct((batch, capacity, mla.kv_lora_rank), dtype),
+        k_rope=jax.ShapeDtypeStruct((batch, capacity, mla.qk_rope_head_dim), dtype),
+        index=jax.ShapeDtypeStruct((), jnp.int32),
+    )
+
+
+def _mla_qkv_latent(params, x, mla, n_heads, rope_theta, positions):
+    """Shared front end: per-head q (nope+rope), latent c_kv, shared k_rope."""
+    B, S, _ = x.shape
+    dn, dr = mla.qk_nope_head_dim, mla.qk_rope_head_dim
+    cq = rmsnorm(params["q_norm"], x @ params["w_dq"])
+    q = (cq @ params["w_uq"]).reshape(B, S, n_heads, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, rope_theta)
+    dkv = x @ params["w_dkv"]                       # (B,S,r_kv+dr)
+    c_kv = rmsnorm(params["kv_norm"], dkv[..., :mla.kv_lora_rank])
+    k_rope = apply_rope(dkv[..., mla.kv_lora_rank:][:, :, None, :],
+                        positions, rope_theta)[:, :, 0, :]
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_forward(params, x, *, n_heads, mla, rope_theta, block_q: int = 512):
+    """Training/prefill MLA: expand latents to per-head K/V, attend."""
+    B, S, _ = x.shape
+    dn, dr, dv = mla.qk_nope_head_dim, mla.qk_rope_head_dim, mla.v_head_dim
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv_latent(
+        params, x, mla, n_heads, rope_theta, positions)
+    k_nope = (c_kv @ params["w_uk"]).reshape(B, S, n_heads, dn)
+    v = (c_kv @ params["w_uv"]).reshape(B, S, n_heads, dv)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, n_heads, dr))],
+        axis=-1)
+    # causal_attention scales by 1/sqrt(dn+dr) internally — the MLA scale.
+    out = causal_attention(q, k, v, block_q=block_q)
+    return out.reshape(B, S, n_heads * dv) @ params["wo"]
+
+
+def mla_make_cache(params, x, *, n_heads, mla, rope_theta, capacity: int,
+                   block_q: int = 512):
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    _, _, c_kv, k_rope = _mla_qkv_latent(params, x, mla, n_heads, rope_theta,
+                                         positions)
+    out = mla_forward(params, x, n_heads=n_heads, mla=mla,
+                      rope_theta=rope_theta, block_q=block_q)
+    keep = min(S, capacity)
+    cc = jnp.zeros((B, capacity, mla.kv_lora_rank), x.dtype)
+    kr = jnp.zeros((B, capacity, mla.qk_rope_head_dim), x.dtype)
+    cc = jax.lax.dynamic_update_slice(cc, c_kv[:, S - keep:], (0, 0, 0))
+    kr = jax.lax.dynamic_update_slice(kr, k_rope[:, S - keep:], (0, 0, 0))
+    return out, MLACache(cc, kr, jnp.asarray(S, jnp.int32))
+
+
+def mla_decode(params, cache: MLACache, x, *, n_heads, mla, rope_theta):
+    """Absorbed-form MLA decode: scores/values in the latent space."""
+    B, S, _ = x.shape
+    assert S == 1
+    dn, dr, dv = mla.qk_nope_head_dim, mla.qk_rope_head_dim, mla.v_head_dim
+    r = mla.kv_lora_rank
+    capacity = cache.c_kv.shape[1]
+    pos = cache.index
+    positions = jnp.broadcast_to(pos[None], (B, 1))
+    q_nope, q_rope, c_new, kr_new = _mla_qkv_latent(
+        params, x, mla, n_heads, rope_theta, positions)
+    slot = jnp.minimum(pos, capacity - 1)
+    cc = jax.lax.dynamic_update_slice(cache.c_kv, c_new, (0, slot, 0))
+    kr = jax.lax.dynamic_update_slice(cache.k_rope, kr_new, (0, slot, 0))
+    # absorb W_uk into q:  q_lat[b,h,r] = sum_dn q_nope · W_uk[r, h*dn+dn']
+    w_uk = params["w_uk"].reshape(r, n_heads, dn)
+    q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0], w_uk,
+                       preferred_element_type=jnp.float32)
+    s_lat = jnp.einsum("bhr,bsr->bhs", q_lat, cc.astype(jnp.float32))
+    s_rope = jnp.einsum("bhd,bsd->bhs", q_rope[:, 0].astype(jnp.float32),
+                        kr.astype(jnp.float32))
+    scores = (s_lat + s_rope) / math.sqrt(dn + dr)
+    valid = jnp.arange(capacity)[None, None, :] < jnp.minimum(pos + 1, capacity)
+    scores = jnp.where(valid, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    ctx_lat = jnp.einsum("bhs,bsr->bhr", w, cc.astype(jnp.float32))
+    w_uv = params["w_uv"].reshape(r, n_heads, dv)
+    out = jnp.einsum("bhr,rhd->bhd", ctx_lat, w_uv.astype(jnp.float32))
+    out = out.reshape(B, 1, n_heads * dv).astype(x.dtype)
+    return out @ params["wo"], MLACache(cc, kr, pos + 1)

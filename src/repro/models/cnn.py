@@ -1,0 +1,154 @@
+"""CNNs for the paper's own experiments: VGG-11/16/19 and ResNet-18.
+
+Conv layers use ``lax.conv_general_dilated`` (NHWC/HWIO); normalisation
+is functional BatchNorm (running stats carried in a separate ``state``
+pytree, exactly as a production framework must for checkpointing).
+These are the models the ReaLPrune paper prunes; ``core.crossbar`` maps
+their conv weights onto 128×128 ReRAM crossbars with the paper's im2col
+unroll.
+
+Weight layout: conv kernels are (K, K, IC, OC) — the im2col unroll to
+the (IC·K·K, OC) crossbar matrix is a pure reshape/transpose.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import CNNConfig, ConvSpec
+from repro.models.layers import softmax_cross_entropy, xavier
+
+
+def conv_init(rng, spec: ConvSpec, in_channels: int, dtype=jnp.float32):
+    k = spec.kernel
+    w = xavier(rng, (k, k, in_channels, spec.out_channels), dtype,
+               in_axis=2, out_axis=3)
+    return {"w": w}
+
+
+def bn_init(channels: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((channels,), dtype),
+            "bias": jnp.zeros((channels,), dtype)}
+
+
+def bn_state_init(channels: int):
+    return {"mean": jnp.zeros((channels,), jnp.float32),
+            "var": jnp.ones((channels,), jnp.float32)}
+
+
+def batchnorm(params, state, x, train: bool, momentum: float = 0.9,
+              eps: float = 1e-5):
+    if train:
+        mean = jnp.mean(x, axis=(0, 1, 2))
+        var = jnp.var(x, axis=(0, 1, 2))
+        new_state = {
+            "mean": momentum * state["mean"] + (1 - momentum) * mean,
+            "var": momentum * state["var"] + (1 - momentum) * var,
+        }
+    else:
+        mean, var = state["mean"], state["var"]
+        new_state = state
+    y = (x - mean) * jax.lax.rsqrt(var + eps)
+    return y * params["scale"] + params["bias"], new_state
+
+
+def conv2d(w, x, stride: int = 1):
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def maxpool2(x):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
+                                 (1, 2, 2, 1), "VALID")
+
+
+def init_params(rng, cfg: CNNConfig, dtype=jnp.float32):
+    ks = jax.random.split(rng, len(cfg.convs) + len(cfg.fc) + 8)
+    params = {"convs": [], "bns": [], "shortcuts": {}}
+    state = {"bns": [], "shortcut_bns": {}}
+    ic = cfg.in_channels
+    for i, spec in enumerate(cfg.convs):
+        params["convs"].append(conv_init(ks[i], spec, ic, dtype))
+        params["bns"].append(bn_init(spec.out_channels, dtype))
+        state["bns"].append(bn_state_init(spec.out_channels))
+        if spec.residual and (spec.stride != 1 or spec.out_channels != ic):
+            # 1x1 projection shortcut
+            params["shortcuts"][str(i)] = {
+                "w": xavier(jax.random.fold_in(ks[i], 7),
+                            (1, 1, ic, spec.out_channels), dtype,
+                            in_axis=2, out_axis=3)}
+            params["bns_sc_" + str(i)] = bn_init(spec.out_channels, dtype)
+            state["shortcut_bns"][str(i)] = bn_state_init(spec.out_channels)
+        ic = spec.out_channels
+    feat = ic
+    params["fc"] = []
+    for j, f in enumerate(cfg.fc):
+        params["fc"].append(
+            {"w": xavier(ks[len(cfg.convs) + j], (feat, f), dtype),
+             "b": jnp.zeros((f,), dtype)})
+        feat = f
+    params["head"] = {
+        "w": xavier(ks[-1], (feat, cfg.num_classes), dtype),
+        "b": jnp.zeros((cfg.num_classes,), dtype)}
+    return params, state
+
+
+def forward(params, state, cfg: CNNConfig, images, train: bool = False):
+    """images: (B, H, W, C) → logits (B, num_classes), new_state.
+
+    ``ConvSpec.residual`` marks the FIRST conv of a 2-conv basic block
+    (ResNet-18); plain convs (VGG) apply conv→BN→ReLU→(pool).
+    """
+    x = images.astype(params["head"]["w"].dtype)
+    new_state = {"bns": [dict(s) for s in state["bns"]],
+                 "shortcut_bns": dict(state["shortcut_bns"])}
+    i = 0
+    while i < len(cfg.convs):
+        spec = cfg.convs[i]
+        if spec.residual:
+            res = x
+            y = conv2d(params["convs"][i]["w"], x, spec.stride)
+            y, new_state["bns"][i] = batchnorm(
+                params["bns"][i], state["bns"][i], y, train)
+            y = jax.nn.relu(y)
+            y = conv2d(params["convs"][i + 1]["w"], y, cfg.convs[i + 1].stride)
+            y, new_state["bns"][i + 1] = batchnorm(
+                params["bns"][i + 1], state["bns"][i + 1], y, train)
+            if str(i) in params["shortcuts"]:
+                res = conv2d(params["shortcuts"][str(i)]["w"], res,
+                             spec.stride)
+                res, new_state["shortcut_bns"][str(i)] = batchnorm(
+                    params["bns_sc_" + str(i)], state["shortcut_bns"][str(i)],
+                    res, train)
+            x = jax.nn.relu(y + res)
+            if cfg.convs[i + 1].pool:
+                x = maxpool2(x)
+            i += 2
+        else:
+            y = conv2d(params["convs"][i]["w"], x, spec.stride)
+            y, new_state["bns"][i] = batchnorm(
+                params["bns"][i], state["bns"][i], y, train)
+            x = jax.nn.relu(y)
+            if spec.pool:
+                x = maxpool2(x)
+            i += 1
+    # global average pool (CIFAR ResNet/VGG-small convention)
+    x = jnp.mean(x, axis=(1, 2))
+    for fc in params["fc"]:
+        x = jax.nn.relu(x @ fc["w"] + fc["b"])
+    logits = x @ params["head"]["w"] + params["head"]["b"]
+    return logits, new_state
+
+
+def loss_fn(params, state, cfg: CNNConfig, batch, train: bool = True):
+    logits, new_state = forward(params, state, cfg, batch["images"], train)
+    ce = softmax_cross_entropy(logits, batch["labels"])
+    return ce, (new_state, logits)
+
+
+def accuracy(params, state, cfg: CNNConfig, images, labels) -> jax.Array:
+    logits, _ = forward(params, state, cfg, images, train=False)
+    return jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))

@@ -1,0 +1,197 @@
+"""Whisper-style encoder-decoder backbone.
+
+The audio frontend (two conv1d + GELU in real Whisper) is a STUB per the
+assignment: inputs are precomputed mel-frame embeddings of shape
+(batch, frames, d_model); a learned linear adapter stands in for the
+conv stack.  Encoder: non-causal self-attention with sinusoidal
+positions.  Decoder: causal self-attention + cross-attention with
+learned positions.
+
+Serving: ``prefill`` encodes audio and prefILLS the decoder prompt;
+``decode_step`` consumes (self-KV cache, precomputed cross-K/V).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn_lib
+from repro.models.layers import (_dtype, apply_norm, embed, embed_init, mlp,
+                                 mlp_init, norm_init, sinusoidal_positions,
+                                 softmax_cross_entropy, unembed, xavier)
+
+
+class CrossKV(NamedTuple):
+    k: jax.Array  # (B, T_enc, H, hd)
+    v: jax.Array
+
+
+def _enc_layer_init(rng, cfg, dtype):
+    ks = jax.random.split(rng, 3)
+    return {
+        "norm1": norm_init(cfg.norm, cfg.d_model, dtype),
+        "attn": attn_lib.gqa_init(ks[0], cfg.d_model, cfg.n_heads,
+                                  cfg.n_kv_heads, cfg.head_dim_,
+                                  cfg.qkv_bias, dtype),
+        "norm2": norm_init(cfg.norm, cfg.d_model, dtype),
+        "mlp": mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.gated_mlp,
+                        cfg.mlp_bias, dtype),
+    }
+
+
+def _dec_layer_init(rng, cfg, dtype):
+    ks = jax.random.split(rng, 4)
+    p = _enc_layer_init(ks[0], cfg, dtype)
+    p["norm_x"] = norm_init(cfg.norm, cfg.d_model, dtype)
+    p["xattn"] = attn_lib.gqa_init(ks[1], cfg.d_model, cfg.n_heads,
+                                   cfg.n_kv_heads, cfg.head_dim_,
+                                   cfg.qkv_bias, dtype)
+    return p
+
+
+def init_params(rng, cfg: ArchConfig):
+    dtype = _dtype(cfg.dtype)
+    n_enc, n_dec = cfg.n_encoder_layers, cfg.n_layers
+    ks = jax.random.split(rng, n_enc + n_dec + 4)
+    enc_layers = [_enc_layer_init(ks[i], cfg, dtype) for i in range(n_enc)]
+    dec_layers = [_dec_layer_init(ks[n_enc + i], cfg, dtype)
+                  for i in range(n_dec)]
+    stack = lambda ls: jax.tree.map(lambda *xs: jnp.stack(xs), *ls)  # noqa
+    return {
+        "frame_adapter": xavier(ks[-1], (cfg.d_model, cfg.d_model), dtype),
+        "embed": embed_init(ks[-2], cfg.padded_vocab, cfg.d_model, dtype),
+        "enc": stack(enc_layers),
+        "dec": stack(dec_layers),
+        "enc_norm": norm_init(cfg.norm, cfg.d_model, dtype),
+        "final_norm": norm_init(cfg.norm, cfg.d_model, dtype),
+    }
+
+
+def _mha_full(p, x, cfg, causal):
+    """Bidirectional (encoder) or causal self-attention."""
+    if causal:
+        return attn_lib.gqa_forward(p, x, n_heads=cfg.n_heads,
+                                    n_kv_heads=cfg.n_kv_heads,
+                                    head_dim=cfg.head_dim_,
+                                    rope_theta=cfg.rope_theta)
+    B, S, _ = x.shape
+    q = (x @ p["wq"] + p.get("bq", 0)).reshape(B, S, cfg.n_heads, cfg.head_dim_)
+    k = (x @ p["wk"] + p.get("bk", 0)).reshape(B, S, cfg.n_kv_heads, cfg.head_dim_)
+    v = (x @ p["wv"] + p.get("bv", 0)).reshape(B, S, cfg.n_kv_heads, cfg.head_dim_)
+    out = attn_lib.attend(q, k, v, causal=False, q_offset=0)
+    return out.reshape(B, S, -1) @ p["wo"]
+
+
+def _cross_kv(p, enc_out, cfg) -> CrossKV:
+    B, T, _ = enc_out.shape
+    k = (enc_out @ p["wk"] + p.get("bk", 0)).reshape(B, T, cfg.n_kv_heads,
+                                                     cfg.head_dim_)
+    v = (enc_out @ p["wv"] + p.get("bv", 0)).reshape(B, T, cfg.n_kv_heads,
+                                                     cfg.head_dim_)
+    return CrossKV(k, v)
+
+
+def _cross_attend(p, x, ckv: CrossKV, cfg):
+    B, S, _ = x.shape
+    q = (x @ p["wq"] + p.get("bq", 0)).reshape(B, S, cfg.n_heads, cfg.head_dim_)
+    out = attn_lib.attend(q, ckv.k, ckv.v, causal=False, q_offset=0)
+    return out.reshape(B, S, -1) @ p["wo"]
+
+
+def encode(params, cfg: ArchConfig, frames):
+    """frames: (B, T, d_model) stub embeddings → encoder output."""
+    x = frames.astype(params["frame_adapter"].dtype) @ params["frame_adapter"]
+    x = x + sinusoidal_positions(x.shape[1], cfg.d_model, x.dtype)[None]
+
+    def body(x, p):
+        h = apply_norm(cfg.norm, p["norm1"], x)
+        x = x + _mha_full(p["attn"], h, cfg, causal=False)
+        h = apply_norm(cfg.norm, p["norm2"], x)
+        x = x + mlp(p["mlp"], h, cfg.act)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["enc"])
+    return apply_norm(cfg.norm, params["enc_norm"], x)
+
+
+def _decoder(params, cfg, tokens, enc_out, mode, caches=None, capacity=None):
+    # decoder positions come from rope inside the self-attention (the
+    # KV-cache index supplies absolute positions during decode)
+    x = embed(params["embed"], tokens)
+    new_caches = []
+    kw = dict(n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+              head_dim=cfg.head_dim_, rope_theta=cfg.rope_theta)
+    n_dec = cfg.n_layers
+    for i in range(n_dec):
+        p = jax.tree.map(lambda t: t[i], params["dec"])
+        h = apply_norm(cfg.norm, p["norm1"], x)
+        if mode == "forward":
+            x = x + _mha_full(p["attn"], h, cfg, causal=True)
+        elif mode == "prefill":
+            out, kv = attn_lib.gqa_make_cache(p["attn"], h,
+                                              capacity=capacity, **kw)
+            x = x + out
+        else:
+            out, kv = attn_lib.gqa_decode(p["attn"], caches[i]["self"], h, **kw)
+            x = x + out
+        h = apply_norm(cfg.norm, p["norm_x"], x)
+        if mode == "decode":
+            ckv = caches[i]["cross"]
+        else:
+            ckv = _cross_kv(p["xattn"], enc_out, cfg)
+        x = x + _cross_attend(p["xattn"], h, ckv, cfg)
+        h = apply_norm(cfg.norm, p["norm2"], x)
+        x = x + mlp(p["mlp"], h, cfg.act)
+        if mode in ("prefill", "decode"):
+            new_caches.append({"self": kv, "cross": ckv})
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    logits = unembed(params["embed"], x)
+    return logits, (new_caches if new_caches else None)
+
+
+def forward(params, cfg: ArchConfig, batch):
+    """batch: frames (B,T,d), tokens (B,S) → decoder logits (B,S,V)."""
+    enc_out = encode(params, cfg, batch["frames"])
+    logits, _ = _decoder(params, cfg, batch["tokens"], enc_out, "forward")
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def loss_fn(params, cfg: ArchConfig, batch, aux_weight: float = 0.0):
+    logits, _ = forward(params, cfg, batch)
+    ce = softmax_cross_entropy(logits, batch["labels"],
+                               batch.get("loss_mask"))
+    return ce, {"ce": ce, "aux": jnp.zeros((), jnp.float32)}
+
+
+def prefill(params, cfg: ArchConfig, batch, capacity: int):
+    enc_out = encode(params, cfg, batch["frames"])
+    logits, caches = _decoder(params, cfg, batch["tokens"], enc_out,
+                              "prefill", capacity=capacity)
+    return logits[:, -1:], caches
+
+
+def decode_step(params, cfg: ArchConfig, caches, token):
+    logits, caches = _decoder(params, cfg, token, None, "decode",
+                              caches=caches)
+    return logits, caches
+
+
+def cache_spec(cfg: ArchConfig, batch: int, capacity: int):
+    dtype = _dtype(cfg.dtype)
+    out = []
+    for _ in range(cfg.n_layers):
+        out.append({
+            "self": attn_lib.gqa_cache_spec(batch, capacity, cfg.n_kv_heads,
+                                            cfg.head_dim_, dtype),
+            "cross": CrossKV(
+                k=jax.ShapeDtypeStruct(
+                    (batch, cfg.encoder_seq_len, cfg.n_kv_heads,
+                     cfg.head_dim_), dtype),
+                v=jax.ShapeDtypeStruct(
+                    (batch, cfg.encoder_seq_len, cfg.n_kv_heads,
+                     cfg.head_dim_), dtype)),
+        })
+    return out

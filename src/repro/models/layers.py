@@ -1,0 +1,164 @@
+"""Shared transformer layers: norms, MLPs, embeddings, rotary embeddings.
+
+All modules are (init_fn, apply_fn) pairs over plain dict pytrees — no
+framework dependency.  Norm/softmax math runs in float32 regardless of
+the parameter dtype; matmul outputs stay in the compute dtype.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _dtype(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------------------
+# Initialisers (paper: Xavier/Glorot; LMs conventionally use scaled normal)
+# ---------------------------------------------------------------------------
+def xavier(rng, shape, dtype=jnp.float32, in_axis=0, out_axis=-1):
+    fan_in = shape[in_axis]
+    fan_out = shape[out_axis]
+    limit = math.sqrt(6.0 / (fan_in + fan_out))
+    return jax.random.uniform(rng, shape, dtype, -limit, limit)
+
+
+def normal_init(rng, shape, dtype=jnp.float32, stddev=0.02):
+    return (jax.random.normal(rng, shape) * stddev).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def norm_init(kind: str, d: int, dtype=jnp.float32):
+    return rmsnorm_init(d, dtype) if kind == "rmsnorm" else layernorm_init(d, dtype)
+
+
+def apply_norm(kind: str, params, x):
+    return rmsnorm(params, x) if kind == "rmsnorm" else layernorm(params, x)
+
+
+# ---------------------------------------------------------------------------
+# MLP (gated SwiGLU / plain GELU)
+# ---------------------------------------------------------------------------
+def mlp_init(rng, d_model: int, d_ff: int, gated: bool, bias: bool = False,
+             dtype=jnp.float32):
+    ks = jax.random.split(rng, 3)
+    p = {"up": xavier(ks[0], (d_model, d_ff), dtype),
+         "down": xavier(ks[1], (d_ff, d_model), dtype)}
+    if gated:
+        p["gate"] = xavier(ks[2], (d_model, d_ff), dtype)
+    if bias:
+        p["up_b"] = jnp.zeros((d_ff,), dtype)
+        p["down_b"] = jnp.zeros((d_model,), dtype)
+    return p
+
+
+def _act(name: str, x):
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    raise ValueError(name)
+
+
+def mlp(params, x, act: str = "silu"):
+    up = x @ params["up"]
+    if "up_b" in params:
+        up = up + params["up_b"]
+    if "gate" in params:
+        h = _act(act, x @ params["gate"]) * up
+    else:
+        h = _act(act, up)
+    out = h @ params["down"]
+    if "down_b" in params:
+        out = out + params["down_b"]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Embeddings
+# ---------------------------------------------------------------------------
+def embed_init(rng, vocab: int, d: int, dtype=jnp.float32):
+    return {"table": normal_init(rng, (vocab, d), dtype)}
+
+
+def embed(params, tokens):
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def unembed(params, x):
+    """Project hidden states to logits (optionally with a tied table)."""
+    return x @ params["table"].T
+
+
+def sinusoidal_positions(seq_len: int, d: int, dtype=jnp.float32):
+    pos = jnp.arange(seq_len)[:, None].astype(jnp.float32)
+    dim = jnp.arange(d // 2)[None, :].astype(jnp.float32)
+    inv = jnp.exp(-math.log(10000.0) * 2.0 * dim / d)
+    ang = pos * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+def rope_frequencies(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2).astype(jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10_000.0):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                      # (hd/2,)
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,S,1,hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+def softmax_cross_entropy(logits, labels, mask=None, z_loss: float = 0.0):
+    """Mean CE over valid positions; logits (..., V) in any dtype."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = lse - ll
+    if z_loss:
+        loss = loss + z_loss * jnp.square(lse)
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(loss * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(loss)

@@ -1,0 +1,146 @@
+"""Mixture-of-Experts FFN: top-k routing, grouped capacity dispatch,
+batched expert compute, optional shared experts.
+
+Dispatch is the sort-based capacity scheme computed per *group*
+(GShard/Switch "local groups"): tokens are split into G groups aligned
+with the data-parallel shards; each group sorts its (token, expert)
+pairs, keeps the first C_g per expert, and scatters into its slice of
+the (G, E, C_g, d) buffer.  With the buffer sharded (data, expert) and
+expert weights sharded on E, the expert einsum runs with ZERO
+collectives; the only cross-device traffic is the (T_local, d) combine
+reduction over the expert axis — the measured fix for the deepseek-v3
+prefill cell (EXPERIMENTS.md §Perf):  per-layer all-gather(T·d) +
+all-reduce(T·d) → all-reduce(T_local·d).
+
+Pure XLA (no data-dependent shapes) so it shards under pjit on any
+mesh; G defaults to the launch-installed data-shard count and divides
+down automatically for small token counts (decode).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import hooks
+from repro.models.hooks import constrain
+from repro.models.layers import _act, mlp, mlp_init, xavier
+
+
+class MoEOutput(NamedTuple):
+    y: jax.Array
+    aux_loss: jax.Array
+    # fraction of routed pairs dropped by the capacity limit (diagnostic)
+    drop_fraction: jax.Array
+
+
+def moe_init(rng, d_model: int, moe, gated: bool, dtype=jnp.float32):
+    ks = jax.random.split(rng, 6)
+    E, ff = moe.num_experts, moe.d_ff_expert
+    p = {
+        "router": xavier(ks[0], (d_model, E), dtype),
+        "up": xavier(ks[1], (E, d_model, ff), dtype, in_axis=1, out_axis=2),
+        "down": xavier(ks[2], (E, ff, d_model), dtype, in_axis=1, out_axis=2),
+    }
+    if gated:
+        p["gate"] = xavier(ks[3], (E, d_model, ff), dtype, in_axis=1,
+                           out_axis=2)
+    if moe.num_shared_experts > 0:
+        ff_s = (moe.d_ff_shared or ff) * moe.num_shared_experts
+        p["shared"] = mlp_init(ks[4], d_model, ff_s, gated, dtype=dtype)
+    return p
+
+
+def expert_capacity(tokens_per_group: int, moe) -> int:
+    c = int(math.ceil(tokens_per_group * moe.top_k * moe.capacity_factor
+                      / moe.num_experts))
+    return max(8, -(-c // 8) * 8)  # round up to 8 for tiling
+
+
+def _num_groups(T: int, requested: Optional[int]) -> int:
+    g = requested if requested is not None else hooks.moe_groups()
+    g = max(1, min(g, T))
+    while T % g:
+        g -= 1
+    return g
+
+
+def moe_forward(params, x, moe, act: str, gated: bool,
+                capacity: Optional[int] = None,
+                num_groups: Optional[int] = None) -> MoEOutput:
+    """x: (B, S, d) -> MoEOutput with y: (B, S, d)."""
+    B, S, d = x.shape
+    T = B * S
+    k, E = moe.top_k, moe.num_experts
+    G = _num_groups(T, num_groups)
+    Tg = T // G
+    C = capacity if capacity is not None else expert_capacity(Tg, moe)
+
+    xt = constrain(x.reshape(G, Tg, d), ("dp", None, None))
+    logits = (xt @ params["router"]).astype(jnp.float32)     # (G, Tg, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, k)                   # (G, Tg, k)
+    top_w = top_w / jnp.maximum(jnp.sum(top_w, -1, keepdims=True), 1e-9)
+
+    # ---- aux load-balance loss (Switch/GShard form, global) ----
+    density = jnp.zeros((E,), jnp.float32).at[top_e.reshape(-1)].add(1.0) / T
+    density_proxy = jnp.mean(probs, axis=(0, 1))
+    aux = jnp.sum(density * density_proxy) * E / k
+
+    # ---- per-group sort-based capacity dispatch ----
+    e_flat = top_e.reshape(G, Tg * k)
+    w_flat = top_w.reshape(G, Tg * k)
+    tok_flat = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(Tg, dtype=jnp.int32), k)[None], (G, Tg * k))
+    order = jnp.argsort(e_flat, axis=-1)                      # (G, Tg·k)
+    e_s = jnp.take_along_axis(e_flat, order, -1)
+    tok_s = jnp.take_along_axis(tok_flat, order, -1)
+    w_s = jnp.take_along_axis(w_flat, order, -1)
+    # per-group expert counts from the sorted ids (no T×E one-hot)
+    bounds = jnp.arange(E + 1, dtype=e_s.dtype)
+    cum = jax.vmap(lambda es: jnp.searchsorted(es, bounds))(e_s)  # (G, E+1)
+    counts = (cum[:, 1:] - cum[:, :-1]).astype(jnp.int32)
+    starts = cum[:, :-1].astype(jnp.int32)
+    pos_in_e = (jnp.arange(Tg * k, dtype=jnp.int32)[None]
+                - jnp.take_along_axis(starts, e_s, -1))
+    keep = pos_in_e < C
+    dest = jnp.where(keep, e_s * C + pos_in_e, 0)
+    drop_fraction = 1.0 - jnp.mean(keep.astype(jnp.float32))
+
+    rows = jnp.take_along_axis(xt, tok_s[..., None], axis=1)   # (G,Tg·k,d)
+    rows = rows * keep[..., None].astype(x.dtype)
+    rows = constrain(rows, ("dp", None, None))
+    buf = jax.vmap(lambda b, idx, r: b.at[idx].add(r))(
+        jnp.zeros((G, E * C, d), x.dtype), dest, rows)
+    buf = constrain(buf.reshape(G, E, C, d), ("dp", "model", None, None))
+
+    # ---- batched expert compute (E sharded = expert parallelism) ----
+    up = jnp.einsum("gecd,edf->gecf", buf, params["up"])
+    if gated:
+        h = _act(act, jnp.einsum("gecd,edf->gecf", buf, params["gate"])) * up
+    else:
+        h = _act(act, up)
+    y_buf = jnp.einsum("gecf,efd->gecd", h, params["down"])
+    y_buf = constrain(y_buf, ("dp", "model", None, None))
+
+    # ---- combine: scatter FROM the expert buffer INTO tokens ----
+    # slot s = e·C + pos holds sorted pair index starts[e] + pos
+    e_of_slot = jnp.arange(E * C, dtype=jnp.int32) // C
+    pos_of_slot = jnp.arange(E * C, dtype=jnp.int32) % C
+    src = jnp.minimum(starts[:, e_of_slot] + pos_of_slot[None],
+                      Tg * k - 1)                              # (G, E·C)
+    valid = pos_of_slot[None] < counts[:, e_of_slot]          # (G, E·C)
+    slot_tok = jnp.where(valid, jnp.take_along_axis(tok_s, src, -1), Tg)
+    slot_w = jnp.where(valid, jnp.take_along_axis(w_s, src, -1), 0.0)
+    contrib = (y_buf.reshape(G, E * C, d)
+               * slot_w[..., None].astype(y_buf.dtype))
+    out = jax.vmap(lambda o, idx, c: o.at[idx].add(c))(
+        jnp.zeros((G, Tg + 1, d), x.dtype), slot_tok,
+        contrib.astype(x.dtype))[:, :Tg]
+    out = constrain(out, ("dp", None, None))
+
+    if "shared" in params:
+        out = out + mlp(params["shared"], xt, act)
+    return MoEOutput(out.reshape(B, S, d), aux, drop_fraction)

@@ -1,0 +1,394 @@
+"""Recurrent blocks: RG-LRU (RecurrentGemma/Griffin), mLSTM + sLSTM (xLSTM).
+
+Forms provided per cell:
+  * RG-LRU  — parallel prefix (``associative_scan``) for train/prefill,
+              O(1)-state step for decode.
+  * mLSTM   — chunkwise-parallel stabilized form for train/prefill
+              (matrix memory; carries (C, n, m) across chunks), plus a
+              sequential oracle (``mlstm_sequential``) used by tests,
+              and an O(1) decode step.
+  * sLSTM   — inherently sequential: ``lax.scan`` over time with
+              exponential-gate stabilization, O(1) decode step.
+
+All recurrences run in float32 regardless of parameter dtype.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import xavier
+
+
+# ---------------------------------------------------------------------------
+# Block-diagonal (per-head) linear — used by RG-LRU gates and sLSTM recurrence
+# ---------------------------------------------------------------------------
+def blockdiag_init(rng, width: int, n_blocks: int, dtype=jnp.float32):
+    bs = width // n_blocks
+    lim = math.sqrt(6.0 / (2 * bs))
+    w = jax.random.uniform(rng, (n_blocks, bs, bs), dtype, -lim, lim)
+    return {"w": w}
+
+
+def blockdiag_apply(params, x):
+    """x: (..., width) -> (..., width) via per-block matmul."""
+    nb, bs, _ = params["w"].shape
+    xs = x.reshape(*x.shape[:-1], nb, bs)
+    ys = jnp.einsum("...nb,nbc->...nc", xs, params["w"])
+    return ys.reshape(*x.shape[:-1], nb * bs)
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv1d (width cw), with ring state for decode
+# ---------------------------------------------------------------------------
+def conv1d_init(rng, width: int, cw: int, dtype=jnp.float32):
+    lim = math.sqrt(1.0 / cw)
+    return {"w": jax.random.uniform(rng, (cw, width), dtype, -lim, lim)}
+
+
+def conv1d_apply(params, u):
+    """u: (B, S, w) causal depthwise conv."""
+    cw = params["w"].shape[0]
+    out = u * params["w"][cw - 1]
+    for j in range(1, cw):
+        shifted = jnp.pad(u, ((0, 0), (j, 0), (0, 0)))[:, : u.shape[1]]
+        out = out + shifted * params["w"][cw - 1 - j]
+    return out
+
+
+def conv1d_step(params, conv_state, u_t):
+    """conv_state: (B, cw-1, w) last inputs; u_t: (B, w). Returns (y, state)."""
+    cw = params["w"].shape[0]
+    hist = jnp.concatenate([conv_state, u_t[:, None, :]], axis=1)  # (B,cw,w)
+    y = jnp.einsum("bcw,cw->bw", hist, params["w"])
+    return y, hist[:, 1:]
+
+
+# ===========================================================================
+# RG-LRU (Griffin real-gated linear recurrent unit)
+# ===========================================================================
+class RGLRUState(NamedTuple):
+    h: jax.Array           # (B, w) f32
+    conv: jax.Array        # (B, cw-1, w)
+
+
+_RGLRU_C = 8.0
+
+
+def rglru_init(rng, d_model: int, width: int, n_heads: int, cw: int,
+               dtype=jnp.float32):
+    ks = jax.random.split(rng, 7)
+    # Λ init so that a = exp(-c·softplus(Λ)) lies in (0.9, 0.999) at r=1:
+    # softplus(Λ) = -log(a)/c  =>  Λ = log(expm1(-log(a)/c))
+    lam_min, lam_max = 0.9, 0.999
+    u = jax.random.uniform(ks[0], (width,))
+    a = lam_min + u * (lam_max - lam_min)
+    lam = jnp.log(jnp.expm1(-jnp.log(a) / _RGLRU_C))
+    return {
+        "w_in": xavier(ks[1], (d_model, width), dtype),
+        "w_gate": xavier(ks[2], (d_model, width), dtype),
+        "w_out": xavier(ks[3], (width, d_model), dtype),
+        "conv": conv1d_init(ks[4], width, cw, dtype),
+        "rg": blockdiag_init(ks[5], width, n_heads, dtype),   # recurrence gate
+        "ig": blockdiag_init(ks[6], width, n_heads, dtype),   # input gate
+        "lam": lam.astype(jnp.float32),
+    }
+
+
+def _rglru_gates(params, u):
+    """u: (..., w) f32 -> (log_a, gated_input) both f32."""
+    r = jax.nn.sigmoid(blockdiag_apply(params["rg"], u))
+    i = jax.nn.sigmoid(blockdiag_apply(params["ig"], u))
+    log_a = -_RGLRU_C * jax.nn.softplus(params["lam"]) * r
+    a2 = jnp.exp(2.0 * log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a2, 1e-9)) * (i * u)
+    return log_a, b
+
+
+def rglru_forward(params, x, act: str = "gelu"):
+    """x: (B,S,d) -> (B,S,d) via conv + RG-LRU + gated output."""
+    gate = jax.nn.gelu(x @ params["w_gate"])
+    u = x @ params["w_in"]
+    u = conv1d_apply(params["conv"], u).astype(jnp.float32)
+    log_a, b = _rglru_gates(params, u)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 + a2, jnp.exp(a2) * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (log_a, b), axis=1)
+    y = (h.astype(x.dtype) * gate) @ params["w_out"]
+    return y
+
+
+def rglru_init_state(params, batch: int, dtype=jnp.float32) -> RGLRUState:
+    w = params["w_in"].shape[1]
+    cw = params["conv"]["w"].shape[0]
+    return RGLRUState(h=jnp.zeros((batch, w), jnp.float32),
+                      conv=jnp.zeros((batch, cw - 1, w), dtype))
+
+
+def rglru_state_spec(batch: int, width: int, cw: int, dtype):
+    return RGLRUState(
+        h=jax.ShapeDtypeStruct((batch, width), jnp.float32),
+        conv=jax.ShapeDtypeStruct((batch, cw - 1, width), dtype))
+
+
+def rglru_step(params, state: RGLRUState, x_t):
+    """x_t: (B, 1, d) one token. Returns (y_t, new_state)."""
+    xt = x_t[:, 0]
+    gate = jax.nn.gelu(xt @ params["w_gate"])
+    u = xt @ params["w_in"]
+    u, conv_state = conv1d_step(params["conv"], state.conv, u)
+    u = u.astype(jnp.float32)
+    log_a, b = _rglru_gates(params, u)
+    h = jnp.exp(log_a) * state.h + b
+    y = (h.astype(xt.dtype) * gate) @ params["w_out"]
+    return y[:, None, :], RGLRUState(h=h, conv=conv_state)
+
+
+def rglru_make_cache(params, x):
+    """Prefill: forward over x and return final recurrent state."""
+    gate = jax.nn.gelu(x @ params["w_gate"])
+    u_raw = x @ params["w_in"]
+    u = conv1d_apply(params["conv"], u_raw).astype(jnp.float32)
+    log_a, b = _rglru_gates(params, u)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 + a2, jnp.exp(a2) * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (log_a, b), axis=1)
+    y = (h.astype(x.dtype) * gate) @ params["w_out"]
+    cw = params["conv"]["w"].shape[0]
+    conv_state = u_raw[:, -(cw - 1):, :]
+    # left-pad if S < cw-1 (smoke shapes)
+    pad = (cw - 1) - conv_state.shape[1]
+    if pad > 0:
+        conv_state = jnp.pad(conv_state, ((0, 0), (pad, 0), (0, 0)))
+    return y, RGLRUState(h=h[:, -1].astype(jnp.float32), conv=conv_state)
+
+
+# ===========================================================================
+# mLSTM (xLSTM matrix-memory cell) — chunkwise-parallel stabilized
+# ===========================================================================
+class MLSTMState(NamedTuple):
+    C: jax.Array          # (B, H, dk, dv) f32
+    n: jax.Array          # (B, H, dk) f32
+    m: jax.Array          # (B, H) f32 stabilizer
+
+
+def mlstm_cell_init(rng, width: int, n_heads: int, dtype=jnp.float32):
+    ks = jax.random.split(rng, 5)
+    return {
+        "wq": blockdiag_init(ks[0], width, n_heads, dtype),
+        "wk": blockdiag_init(ks[1], width, n_heads, dtype),
+        "wv": blockdiag_init(ks[2], width, n_heads, dtype),
+        "wi": xavier(ks[3], (width, n_heads), dtype),
+        "wf": xavier(ks[4], (width, n_heads), dtype),
+        "bi": jnp.zeros((n_heads,), jnp.float32),
+        "bf": jnp.full((n_heads,), 3.0, jnp.float32),  # open forget gates
+    }
+
+
+def _mlstm_qkvif(params, u, n_heads):
+    B, S, w = u.shape
+    hd = w // n_heads
+    q = blockdiag_apply(params["wq"], u).reshape(B, S, n_heads, hd)
+    k = blockdiag_apply(params["wk"], u).reshape(B, S, n_heads, hd)
+    v = blockdiag_apply(params["wv"], u).reshape(B, S, n_heads, hd)
+    li = (u @ params["wi"]).astype(jnp.float32) + params["bi"]   # (B,S,H)
+    lf = jax.nn.log_sigmoid(
+        (u @ params["wf"]).astype(jnp.float32) + params["bf"])
+    k = k / math.sqrt(hd)
+    return (q.astype(jnp.float32), k.astype(jnp.float32),
+            v.astype(jnp.float32), li, lf)
+
+
+def mlstm_sequential(params, u, n_heads, state: MLSTMState = None):
+    """Oracle: step-by-step mLSTM. u: (B,S,w) -> h: (B,S,w)."""
+    B, S, w = u.shape
+    hd = w // n_heads
+    q, k, v, li, lf = _mlstm_qkvif(params, u, n_heads)
+    if state is None:
+        state = mlstm_init_state(B, n_heads, hd)
+
+    def step(carry, xs):
+        C, n, m = carry
+        qt, kt, vt, lit, lft = xs      # (B,H,hd) ×3, (B,H) ×2
+        m_new = jnp.maximum(lft + m, lit)
+        fp = jnp.exp(lft + m - m_new)[..., None]
+        ip = jnp.exp(lit - m_new)[..., None]
+        C = fp[..., None] * C + ip[..., None] * (kt[..., :, None] * vt[..., None, :])
+        n = fp * n + ip * kt
+        num = jnp.einsum("bhk,bhkv->bhv", qt, C)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", qt, n)),
+                          jnp.exp(-m_new))[..., None]
+        h = num / den
+        return (C, n, m_new), h
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (q, k, v, li, lf))
+    (C, n, m), hs = jax.lax.scan(step, (state.C, state.n, state.m), xs)
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, w)
+    return h, MLSTMState(C, n, m)
+
+
+def mlstm_chunkwise(params, u, n_heads, chunk: int = 128,
+                    state: MLSTMState = None):
+    """Chunkwise-parallel stabilized mLSTM (exact; tested vs sequential)."""
+    B, S, w = u.shape
+    hd = w // n_heads
+    if S % chunk != 0:
+        return mlstm_sequential(params, u, n_heads, state)
+    L, nc = chunk, S // chunk
+    q, k, v, li, lf = _mlstm_qkvif(params, u, n_heads)
+    if state is None:
+        state = mlstm_init_state(B, n_heads, hd)
+
+    def rs(t):  # (B,S,...) -> (nc,B,L,...)
+        return jnp.moveaxis(t.reshape(B, nc, L, *t.shape[2:]), 1, 0)
+
+    qc, kc, vc, lic, lfc = rs(q), rs(k), rs(v), rs(li), rs(lf)
+    # per-chunk: move head axis forward: (B,L,H,..) -> (B,H,L,..)
+    def hfirst(t):
+        return jnp.moveaxis(t, 2, 1) if t.ndim >= 4 else jnp.moveaxis(t, -1, 1)
+
+    def chunk_step(carry, xs):
+        C0, n0, m0 = carry                      # (B,H,dk,dv),(B,H,dk),(B,H)
+        qt, kt, vt, lit, lft = xs               # (B,L,H,hd)... gates (B,L,H)
+        qt, kt, vt = hfirst(qt), hfirst(kt), hfirst(vt)   # (B,H,L,hd)
+        lit, lft = hfirst(lit), hfirst(lft)                # (B,H,L)
+        b = jnp.cumsum(lft, axis=-1)            # inclusive decay sums
+        G = b[..., -1:]                          # (B,H,1)
+        # stabilizers
+        m_intra = jax.lax.cummax(lit - b, axis=2) + b      # max_{s<=t}(li_s - b_s)+b_t
+        m_inter = b + m0[..., None]
+        m_t = jnp.maximum(m_inter, m_intra)                # (B,H,L)
+        # inter-chunk contribution
+        q_scaled = qt * jnp.exp(m_inter - m_t)[..., None]
+        num_inter = jnp.einsum("bhlk,bhkv->bhlv", q_scaled, C0)
+        den_inter = jnp.einsum("bhlk,bhk->bhl", q_scaled, n0)
+        # intra-chunk: D[t,s] = exp(b_t - b_s + li_s - m_t) for s<=t
+        logD = (b[..., :, None] - b[..., None, :] + lit[..., None, :]
+                - m_t[..., :, None])
+        tri = jnp.tril(jnp.ones((L, L), bool))
+        D = jnp.where(tri, jnp.exp(logD), 0.0)
+        scores = jnp.einsum("bhlk,bhsk->bhls", qt, kt) * D
+        num = num_inter + jnp.einsum("bhls,bhsv->bhlv", scores, vt)
+        # q_t·n_t = q_t·(inter part) + Σ_{s<=t} scores[t,s]
+        den = den_inter + jnp.sum(scores, axis=-1)            # (B,H,L)
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+        # ---- carry update ----
+        m_next = jnp.maximum(m0 + G[..., 0],
+                             jnp.max(lit + G - b, axis=-1))
+        scale_old = jnp.exp(m0 + G[..., 0] - m_next)[..., None, None]
+        w_s = jnp.exp(G - b + lit - m_next[..., None])        # (B,H,L)
+        C1 = C0 * scale_old + jnp.einsum("bhlk,bhlv->bhkv", kt * w_s[..., None], vt)
+        n1 = n0 * scale_old[..., 0] + jnp.einsum("bhlk->bhk", kt * w_s[..., None])
+        h = jnp.moveaxis(h, 1, 2)               # (B,L,H,hd)
+        return (C1, n1, m_next), h
+
+    (C, n, m), hs = jax.lax.scan(chunk_step, (state.C, state.n, state.m),
+                                 (qc, kc, vc, lic, lfc))
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, w)
+    return h, MLSTMState(C, n, m)
+
+
+def mlstm_init_state(batch: int, n_heads: int, hd: int) -> MLSTMState:
+    return MLSTMState(
+        C=jnp.zeros((batch, n_heads, hd, hd), jnp.float32),
+        n=jnp.zeros((batch, n_heads, hd), jnp.float32),
+        m=jnp.full((batch, n_heads), -1e30, jnp.float32))
+
+
+def mlstm_state_spec(batch: int, n_heads: int, hd: int):
+    return MLSTMState(
+        C=jax.ShapeDtypeStruct((batch, n_heads, hd, hd), jnp.float32),
+        n=jax.ShapeDtypeStruct((batch, n_heads, hd), jnp.float32),
+        m=jax.ShapeDtypeStruct((batch, n_heads), jnp.float32))
+
+
+def mlstm_step(params, state: MLSTMState, u_t, n_heads):
+    """One decode step. u_t: (B, 1, w)."""
+    h, new_state = mlstm_sequential(params, u_t, n_heads, state)
+    return h, new_state
+
+
+# ===========================================================================
+# sLSTM (xLSTM scalar cell, exponential gating, block-diag recurrence)
+# ===========================================================================
+class SLSTMState(NamedTuple):
+    c: jax.Array   # (B, w) f32
+    n: jax.Array
+    h: jax.Array
+    m: jax.Array
+
+
+def slstm_cell_init(rng, d_model: int, width: int, n_heads: int,
+                    dtype=jnp.float32):
+    ks = jax.random.split(rng, 8)
+    p = {}
+    for i, g in enumerate(("i", "f", "z", "o")):
+        p[f"w{g}"] = xavier(ks[i], (d_model, width), dtype)
+        p[f"r{g}"] = blockdiag_init(ks[4 + i], width, n_heads, dtype)
+        p[f"b{g}"] = (jnp.full((width,), 3.0, jnp.float32) if g == "f"
+                      else jnp.zeros((width,), jnp.float32))
+    return p
+
+
+def slstm_init_state(batch: int, width: int) -> SLSTMState:
+    z = jnp.zeros((batch, width), jnp.float32)
+    return SLSTMState(c=z, n=z, h=z, m=jnp.full((batch, width), -1e30))
+
+
+def slstm_state_spec(batch: int, width: int):
+    z = jax.ShapeDtypeStruct((batch, width), jnp.float32)
+    return SLSTMState(c=z, n=z, h=z, m=z)
+
+
+def _slstm_step(params, state: SLSTMState, xi, xf, xz, xo):
+    """Pre-computed input projections (B,w) f32; returns (h, state)."""
+    c, n, h, m = state
+    li = xi + blockdiag_apply(params["ri"], h) + params["bi"]
+    lf = jax.nn.log_sigmoid(
+        xf + blockdiag_apply(params["rf"], h) + params["bf"])
+    z = jnp.tanh(xz + blockdiag_apply(params["rz"], h) + params["bz"])
+    o = jax.nn.sigmoid(xo + blockdiag_apply(params["ro"], h) + params["bo"])
+    m_new = jnp.maximum(lf + m, li)
+    fp = jnp.exp(lf + m - m_new)
+    ip = jnp.exp(li - m_new)
+    c = fp * c + ip * z
+    n = jnp.maximum(fp * n + ip, 1e-6)
+    h = o * (c / n)
+    return h, SLSTMState(c=c, n=n, h=h, m=m_new)
+
+
+def slstm_forward(params, x, state: SLSTMState = None):
+    """x: (B,S,d) -> (B,S,w) sequential scan over time."""
+    B, S, _ = x.shape
+    w = params["wi"].shape[1]
+    if state is None:
+        state = slstm_init_state(B, w)
+    xi = (x @ params["wi"]).astype(jnp.float32)
+    xf = (x @ params["wf"]).astype(jnp.float32)
+    xz = (x @ params["wz"]).astype(jnp.float32)
+    xo = (x @ params["wo"]).astype(jnp.float32)
+
+    def step(st, inputs):
+        h, st = _slstm_step(params, st, *inputs)
+        return st, h
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (xi, xf, xz, xo))
+    state, hs = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(hs, 0, 1), state
+
+
+def slstm_step(params, state: SLSTMState, x_t):
+    """One decode step; x_t: (B, 1, d)."""
+    h, state = slstm_forward(params, x_t, state)
+    return h, state

@@ -1,0 +1,113 @@
+"""Optimizers as (init, update) pairs over pytrees — optax-style but
+self-contained (no external deps).
+
+``masked`` wraps any optimizer for lottery-ticket training: gradients of
+pruned weights are zeroed *before* the inner update and the updated
+params are re-masked *after*, so pruned weights stay exactly zero under
+momentum/weight-decay and the optimizer state never accumulates for
+dead coordinates.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.masks import apply_masks
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable   # (grads, state, params) -> (new_params, new_state)
+
+
+def _tree_zeros_like(params):
+    return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+
+def sgd(lr_fn, momentum: float = 0.9, nesterov: bool = False,
+        weight_decay: float = 0.0) -> Optimizer:
+    """SGD with momentum — the paper's training recipe (LR 0.1, m 0.9)."""
+
+    def init(params):
+        return {"mu": _tree_zeros_like(params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        lr = lr_fn(state["step"])
+
+        def upd(g, m, p):
+            g = g.astype(jnp.float32)
+            if weight_decay:
+                g = g + weight_decay * p.astype(jnp.float32)
+            m_new = momentum * m + g
+            step_dir = g + momentum * m_new if nesterov else m_new
+            return (p.astype(jnp.float32) - lr * step_dir).astype(p.dtype), \
+                m_new
+
+        flat = jax.tree.map(upd, grads, state["mu"], params)
+        new_params = jax.tree.map(lambda t: t[0], flat,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_mu = jax.tree.map(lambda t: t[1], flat,
+                              is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"mu": new_mu, "step": state["step"] + 1}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr_fn, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1) -> Optimizer:
+    def init(params):
+        return {"m": _tree_zeros_like(params),
+                "v": _tree_zeros_like(params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr = lr_fn(state["step"])
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m_new = b1 * m + (1 - b1) * g
+            v_new = b2 * v + (1 - b2) * jnp.square(g)
+            mh, vh = m_new / bc1, v_new / bc2
+            delta = mh / (jnp.sqrt(vh) + eps) + weight_decay * \
+                p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), \
+                m_new, v_new
+
+        flat = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        pick = lambda i: jax.tree.map(  # noqa: E731
+            lambda t: t[i], flat, is_leaf=lambda x: isinstance(x, tuple))
+        return pick(0), {"m": pick(1), "v": pick(2), "step": step}
+
+    return Optimizer(init, update)
+
+
+def with_gradient_clipping(opt: Optimizer, max_norm: float) -> Optimizer:
+    def update(grads, state, params):
+        leaves = jax.tree.leaves(grads)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in leaves))
+        scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+        return opt.update(grads, state, params)
+
+    return Optimizer(opt.init, update)
+
+
+def masked(opt: Optimizer, masks) -> Optimizer:
+    """Lottery-ticket wrapper: keep pruned coordinates exactly zero."""
+
+    def init(params):
+        return opt.init(params)
+
+    def update(grads, state, params):
+        grads = apply_masks(grads, masks)
+        new_params, new_state = opt.update(grads, state, params)
+        return apply_masks(new_params, masks), new_state
+
+    return Optimizer(init, update)

@@ -1,0 +1,35 @@
+"""Learning-rate schedules (pure functions of the integer step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def exponential_epoch_decay(lr: float, decay: float = 0.95,
+                            steps_per_epoch: int = 1):
+    """The paper's recipe: LR decreased by 5% after every epoch."""
+    def fn(step):
+        epoch = step // steps_per_epoch
+        return jnp.asarray(lr, jnp.float32) * (decay ** epoch)
+    return fn
+
+
+def cosine_decay(lr: float, total_steps: int, final_frac: float = 0.1):
+    def fn(step):
+        t = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return lr * (final_frac + (1 - final_frac) * cos)
+    return fn
+
+
+def warmup_cosine(lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1):
+    cos = cosine_decay(lr, total_steps, final_frac)
+
+    def fn(step):
+        warm = lr * jnp.minimum(step / max(warmup_steps, 1), 1.0)
+        return jnp.where(step < warmup_steps, warm, cos(step))
+    return fn

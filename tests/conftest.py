@@ -1,0 +1,12 @@
+import os
+import sys
+
+# smoke tests and benches must see the single real CPU device —
+# do NOT set xla_force_host_platform_device_count here (dry-run only).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,76 @@
+"""CNN models: shapes, residual wiring, BN state, training signal."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_cnn, list_cnns
+from repro.data import SyntheticImages
+from repro.models import cnn as cnn_lib
+from repro.optim import constant, sgd
+
+
+@pytest.mark.parametrize("name", list_cnns())
+def test_forward_shapes_and_finite(name):
+    cfg = get_cnn(name)
+    params, state = cnn_lib.init_params(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, 32, 3))
+    logits, new_state = cnn_lib.forward(params, state, cfg, x, train=True)
+    assert logits.shape == (2, 10)
+    assert np.isfinite(np.asarray(logits)).all()
+    # BN running stats updated in train mode
+    changed = any(
+        not np.allclose(np.asarray(a["mean"]), np.asarray(b["mean"]))
+        for a, b in zip(state["bns"], new_state["bns"]))
+    assert changed
+
+
+def test_resnet18_has_projection_shortcuts():
+    cfg = get_cnn("resnet18")
+    params, state = cnn_lib.init_params(jax.random.PRNGKey(0), cfg)
+    # stride-2 stage transitions at convs 5, 9, 13
+    assert set(params["shortcuts"].keys()) == {"5", "9", "13"}
+
+
+def test_eval_mode_uses_running_stats():
+    cfg = get_cnn("vgg11")
+    params, state = cnn_lib.init_params(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, 32, 3))
+    l1, st1 = cnn_lib.forward(params, state, cfg, x, train=False)
+    l2, st2 = cnn_lib.forward(params, state, cfg, x, train=False)
+    np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+    for a, b in zip(state["bns"], st1["bns"]):
+        np.testing.assert_array_equal(np.asarray(a["mean"]),
+                                      np.asarray(b["mean"]))
+
+
+def test_small_cnn_learns_synthetic_task():
+    from repro.configs import CNNConfig, ConvSpec
+    cfg = CNNConfig(name="t", family="cnn",
+                    convs=(ConvSpec(8, pool=True), ConvSpec(16, pool=True)),
+                    fc=(), num_classes=10, image_size=16)
+    data = SyntheticImages(image_size=16, noise=0.2)
+    params, state = cnn_lib.init_params(jax.random.PRNGKey(0), cfg)
+    opt = sgd(constant(0.05), momentum=0.9)
+    opt_state = opt.init(params)
+
+    @jax.jit
+    def step(params, opt_state, state, batch):
+        def lf(p):
+            loss, (nst, _) = cnn_lib.loss_fn(p, state, cfg, batch, True)
+            return loss, nst
+        (loss, nst), g = jax.value_and_grad(lf, has_aux=True)(params)
+        params, opt_state = opt.update(g, opt_state, params)
+        return params, opt_state, nst, loss
+
+    for i in range(60):
+        b = data.batch(i, 64)
+        params, opt_state, state, loss = step(
+            params, opt_state, state,
+            {"images": jnp.asarray(b["images"]),
+             "labels": jnp.asarray(b["labels"])})
+    b = data.batch(999, 256)
+    acc = float(cnn_lib.accuracy(params, state, cfg,
+                                 jnp.asarray(b["images"]),
+                                 jnp.asarray(b["labels"])))
+    assert acc > 0.8

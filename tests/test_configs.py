@@ -1,0 +1,81 @@
+"""Exact assigned configs: dimensions and parameter-count sanity."""
+import pytest
+
+from repro.configs import get_arch, get_cnn, list_archs, list_cnns
+
+# (name, layers, d_model, heads, kv, d_ff, vocab)
+ASSIGNED = [
+    ("recurrentgemma-2b", 26, 2560, 10, 1, 7680, 256000),
+    ("phi-3-vision-4.2b", 32, 3072, 32, 32, 8192, 32064),
+    ("yi-6b", 32, 4096, 32, 4, 11008, 64000),
+    ("command-r-35b", 40, 8192, 64, 8, 22528, 256000),
+    ("llama3.2-3b", 28, 3072, 24, 8, 8192, 128256),
+    ("qwen2-72b", 80, 8192, 64, 8, 29568, 152064),
+    ("deepseek-v3-671b", 61, 7168, 128, 128, 2048, 129280),
+    ("llama4-maverick-400b-a17b", 48, 5120, 40, 8, 8192, 202048),
+    ("whisper-tiny", 4, 384, 6, 6, 1536, 51865),
+    ("xlstm-125m", 12, 768, 4, 4, 0, 50304),
+]
+
+
+@pytest.mark.parametrize("name,L,d,H,kv,ff,v", ASSIGNED)
+def test_assigned_dims_exact(name, L, d, H, kv, ff, v):
+    cfg = get_arch(name)
+    assert cfg.n_layers == L
+    assert cfg.d_model == d
+    assert cfg.n_heads == H
+    assert cfg.n_kv_heads == kv
+    assert cfg.vocab_size == v
+    if name == "deepseek-v3-671b":
+        assert cfg.moe is not None and cfg.moe.d_ff_expert == ff
+        assert cfg.moe.num_experts == 256 and cfg.moe.top_k == 8
+        assert cfg.moe.num_shared_experts == 1
+        assert cfg.mla is not None
+    else:
+        assert cfg.d_ff == ff
+    if name == "llama4-maverick-400b-a17b":
+        assert cfg.moe.num_experts == 128 and cfg.moe.top_k == 1
+
+
+PARAM_BOUNDS = {
+    "recurrentgemma-2b": (2.0e9, 3.3e9),
+    "phi-3-vision-4.2b": (3.3e9, 4.6e9),
+    "yi-6b": (5.4e9, 6.7e9),
+    "command-r-35b": (27e9, 38e9),
+    "llama3.2-3b": (2.8e9, 3.8e9),
+    "qwen2-72b": (65e9, 80e9),
+    "deepseek-v3-671b": (600e9, 740e9),
+    "llama4-maverick-400b-a17b": (360e9, 440e9),
+    "whisper-tiny": (20e6, 80e6),
+    "xlstm-125m": (90e6, 260e6),
+}
+
+
+@pytest.mark.parametrize("name", sorted(PARAM_BOUNDS))
+def test_param_counts_in_published_range(name):
+    lo, hi = PARAM_BOUNDS[name]
+    n = get_arch(name).param_count()
+    assert lo <= n <= hi, f"{name}: {n / 1e9:.2f}B not in [{lo}, {hi}]"
+
+
+def test_moe_active_params():
+    ds = get_arch("deepseek-v3-671b")
+    assert 30e9 < ds.active_param_count() < 45e9        # ~37B active
+    l4 = get_arch("llama4-maverick-400b-a17b")
+    assert 12e9 < l4.active_param_count() < 20e9        # ~17B active
+
+
+def test_cnn_configs():
+    assert set(list_cnns()) == {"vgg11", "vgg16", "vgg19", "resnet18"}
+    r18 = get_cnn("resnet18")
+    assert len(r18.convs) == 17                          # C1-C17 (Fig. 8)
+    n = r18.param_count()
+    assert 10e6 < n < 12e6
+    assert len(get_cnn("vgg19").convs) == 16
+
+
+def test_padded_vocab_divisible():
+    for a in list_archs():
+        cfg = get_arch(a)
+        assert cfg.padded_vocab % 2048 == 0
+        assert cfg.padded_vocab >= cfg.vocab_size

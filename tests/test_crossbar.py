@@ -1,0 +1,84 @@
+"""Crossbar mapping + savings accounting (paper Figs 2-3 semantics)."""
+import numpy as np
+import pytest
+
+from repro.core import crossbar as xb
+
+
+def test_fig2_worst_case_no_savings():
+    """75% sparsity, one nonzero per row/col → zero hardware savings."""
+    m = np.zeros((4, 4), bool)
+    m[0, 1] = m[1, 3] = m[2, 0] = m[3, 2] = True
+    st = xb.xbar_stats(m, xr=4, xc=4)
+    assert st.nonzero_cells == 4
+    assert st.saved_cells == 0
+    assert st.xbars_needed_packed == 1
+    assert st.xbars_fully_free == 0
+
+
+def test_fig2_128_worst_case():
+    """128 nonzeros on the diagonal of a 128×128 crossbar: 99.2% sparse,
+    zero savings (paper §III.B)."""
+    m = np.eye(128, dtype=bool)
+    st = xb.xbar_stats(m)
+    assert st.nonzero_cells == 128
+    assert st.saved_cells == 0
+    assert st.xbars_needed_strict == 1
+
+
+def test_column_and_row_savings():
+    m = np.zeros((128, 128), bool)
+    m[:, 5] = True          # one live column
+    st = xb.xbar_stats(m)
+    assert st.saved_cells == 128 * 127
+    m2 = np.zeros((128, 128), bool)
+    m2[7, :] = True         # one live row
+    st2 = xb.xbar_stats(m2)
+    assert st2.saved_cells == 127 * 128
+
+
+def test_fully_free_crossbar():
+    m = np.zeros((256, 128), bool)
+    m[:128] = True
+    st = xb.xbar_stats(m)
+    assert st.n_xbars == 2
+    assert st.xbars_fully_free == 1
+    assert st.xbars_needed_strict == 1
+
+
+def test_conv_unroll_roundtrip_and_layout():
+    w = np.random.randn(3, 3, 8, 16)
+    m = xb.conv_to_matrix(w)
+    assert m.shape == (72, 16)
+    np.testing.assert_array_equal(xb.matrix_to_conv(m, w.shape), w)
+    # channel ic of filter oc = contiguous K² rows of column oc
+    np.testing.assert_array_equal(m[9:18, 3], w[:, :, 1, 3].reshape(-1))
+    # index (ic, kx, ky) = one row across filters
+    np.testing.assert_array_equal(m[9 * 2 + 3 * 1 + 2, :], w[1, 2, 2, :])
+
+
+def test_leaf_matrices_tags():
+    conv = np.random.randn(3, 3, 4, 8)
+    m, tag = xb.leaf_matrices(conv, conv=True)
+    assert tag == "conv" and m.shape == (1, 36, 8)
+    dense = np.random.randn(64, 32)
+    m, tag = xb.leaf_matrices(dense)
+    assert tag == "dense" and m.shape == (1, 64, 32)
+    stacked = np.random.randn(5, 64, 32)
+    m, tag = xb.leaf_matrices(stacked)
+    assert tag == "stack" and m.shape == (5, 64, 32)
+    back = xb.matrices_to_leaf(m, stacked.shape, tag)
+    np.testing.assert_array_equal(back, stacked)
+
+
+def test_edge_crossbars_actual_extent():
+    """Non-multiple dims: savings counted over actual extents only."""
+    m = np.ones((130, 100), bool)
+    st = xb.xbar_stats(m)
+    assert st.total_cells == 130 * 100
+    assert st.n_xbars == 2
+    assert st.saved_cells == 0
+    m[128:, :] = False          # kill the 2-row remainder crossbar
+    st = xb.xbar_stats(m)
+    assert st.xbars_fully_free == 1
+    assert st.saved_cells == 2 * 100

@@ -1,0 +1,74 @@
+"""Whisper-style encoder-decoder: shapes, cache continuity, training."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, scaled_down
+from repro.models import encdec
+
+B, S = 2, 16
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = scaled_down(get_arch("whisper-tiny"), dtype="float32")
+    params = encdec.init_params(jax.random.PRNGKey(0), cfg)
+    rng = jax.random.PRNGKey(1)
+    frames = jax.random.normal(rng, (B, cfg.encoder_seq_len, cfg.d_model))
+    tokens = jax.random.randint(rng, (B, S), 0, 100)
+    return cfg, params, frames, tokens
+
+
+def test_encoder_output_shape(setup):
+    cfg, params, frames, _ = setup
+    enc = encdec.encode(params, cfg, frames)
+    assert enc.shape == (B, cfg.encoder_seq_len, cfg.d_model)
+    assert np.isfinite(np.asarray(enc)).all()
+
+
+def test_forward_and_loss(setup):
+    cfg, params, frames, tokens = setup
+    batch = {"frames": frames, "tokens": tokens, "labels": tokens}
+    logits, _ = encdec.forward(params, cfg, batch)
+    assert logits.shape == (B, S, cfg.padded_vocab)
+    loss, _ = encdec.loss_fn(params, cfg, batch)
+    assert np.isfinite(float(loss))
+
+
+def test_prefill_matches_forward(setup):
+    cfg, params, frames, tokens = setup
+    batch = {"frames": frames, "tokens": tokens}
+    logits_full, _ = encdec.forward(params, cfg,
+                                    {**batch, "labels": tokens})
+    lg, caches = encdec.prefill(params, cfg, batch, capacity=S + 8)
+    np.testing.assert_allclose(np.asarray(lg[:, 0]),
+                               np.asarray(logits_full[:, -1]),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_decode_continuity(setup):
+    cfg, params, frames, tokens = setup
+    ext = jnp.concatenate([tokens, tokens[:, :1]], axis=1)
+    logits_ext, _ = encdec.forward(params, cfg,
+                                   {"frames": frames, "tokens": ext,
+                                    "labels": ext})
+    _, caches = encdec.prefill(params, cfg,
+                               {"frames": frames, "tokens": tokens},
+                               capacity=S + 8)
+    lg, caches = encdec.decode_step(params, cfg, caches, tokens[:, :1])
+    np.testing.assert_allclose(np.asarray(lg[:, 0]),
+                               np.asarray(logits_ext[:, -1]),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_cross_kv_computed_once(setup):
+    """Decode must not re-encode: cross KV identical across steps."""
+    cfg, params, frames, tokens = setup
+    _, caches = encdec.prefill(params, cfg,
+                               {"frames": frames, "tokens": tokens},
+                               capacity=S + 8)
+    k_before = np.asarray(caches[0]["cross"].k)
+    _, caches = encdec.decode_step(params, cfg, caches, tokens[:, :1])
+    np.testing.assert_array_equal(k_before,
+                                  np.asarray(caches[0]["cross"].k))

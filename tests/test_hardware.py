@@ -1,0 +1,113 @@
+"""Hardware savings accounting + ReRAM perf model (paper Figs 6-8)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_cnn
+from repro.core import hardware as hw
+from repro.core import perf_model as pm
+
+
+def _masks(conv_mask, fc_mask):
+    return {"convs": [{"w": jnp.asarray(conv_mask)}],
+            "fc": [{"w": jnp.asarray(fc_mask)}]}
+
+
+def test_unstructured_vs_structured_savings_gap():
+    """The paper's central claim (Fig 5 vs 6): high unstructured sparsity
+    yields low hardware savings; structured sparsity converts ~1:1."""
+    rng = np.random.RandomState(0)
+    # unstructured 90%: nonzeros scattered
+    m_unstruct = (rng.rand(3, 3, 64, 128) < 0.1).astype(np.float32)
+    # structured: 90% of columns (filters) dead
+    m_struct = np.ones((3, 3, 64, 128), np.float32)
+    dead = rng.choice(128, size=115, replace=False)
+    m_struct[:, :, :, dead] = 0.0
+
+    fc = np.ones((128, 10), np.float32)
+    rep_u = hw.analyze_masks(_masks(m_unstruct, fc), lambda p: "convs" in p)
+    rep_s = hw.analyze_masks(_masks(m_struct, fc), lambda p: "convs" in p)
+    assert rep_u.sparsity > 0.85
+    assert rep_s.sparsity > 0.85
+    assert rep_u.cell_savings < 0.25          # scattered → little savings
+    assert rep_s.cell_savings > 0.80          # structured → ~sparsity
+
+
+def test_savings_never_exceed_sparsity():
+    rng = np.random.RandomState(1)
+    m = (rng.rand(3, 3, 32, 64) < 0.5).astype(np.float32)
+    rep = hw.analyze_masks(_masks(m, np.ones((64, 10), np.float32)),
+                           lambda p: "convs" in p)
+    assert rep.cell_savings <= rep.sparsity + 1e-9
+
+
+def test_activation_savings_only_from_dead_filters():
+    m = np.ones((3, 3, 8, 16), np.float32)
+    m[:, :, :4, :] = 0.0          # channel pruning: no filter fully dead
+    vols = {"convs/0/w": 1024.0}
+    rep = hw.analyze_masks(_masks(m, np.ones((16, 10), np.float32)),
+                           lambda p: "convs" in p,
+                           activation_volumes=vols)
+    assert rep.activation_savings == 0.0
+    m2 = np.ones((3, 3, 8, 16), np.float32)
+    m2[:, :, :, :8] = 0.0         # filter pruning: half the outputs dead
+    rep2 = hw.analyze_masks(_masks(m2, np.ones((16, 10), np.float32)),
+                            lambda p: "convs" in p,
+                            activation_volumes=vols)
+    assert rep2.activation_savings == pytest.approx(0.5, abs=0.01)
+
+
+def test_cnn_activation_volumes_geometry():
+    cfg = get_cnn("vgg11")
+    vols = hw.cnn_activation_volumes(cfg)
+    assert vols["convs/0/w"] == 32 * 32 * 64
+    assert vols["convs/1/w"] == 16 * 16 * 128     # after one pool
+
+
+# ---------------- perf model ----------------
+def _layers(xbars, positions):
+    return [pm.LayerPerf(f"C{i}", p, x)
+            for i, (x, p) in enumerate(zip(xbars, positions))]
+
+
+def test_waterfill_equalizes_pipeline():
+    layers = _layers([100, 100, 100], [1024.0, 256.0, 64.0])
+    res = pm.waterfill(layers, budget=2000)
+    times = [l.out_positions / r
+             for l, r in zip(layers, res.replication)]
+    # slowest layers get replicas; spread must shrink vs r=1
+    assert max(times) < 1024.0
+    assert res.cycles_per_image == pytest.approx(max(times) * 3.0)
+
+
+def test_iso_area_speedup_increases_with_pruning():
+    unpruned = _layers([400, 400, 400], [1024.0, 256.0, 64.0])
+    half = _layers([200, 200, 200], [1024.0, 256.0, 64.0])
+    tenth = _layers([40, 40, 40], [1024.0, 256.0, 64.0])
+    s_half = pm.iso_area_speedup(unpruned, half, budget=1500)
+    s_tenth = pm.iso_area_speedup(unpruned, tenth, budget=1500)
+    assert s_half > 1.0
+    assert s_tenth > s_half
+
+
+def test_iso_perf_savings_match_xbar_reduction():
+    unpruned = _layers([100, 200], [256.0, 64.0])
+    pruned = _layers([25, 50], [256.0, 64.0])
+    out = pm.iso_perf_xbars(unpruned, pruned, budget=1000)
+    assert out["savings"] == pytest.approx(0.75, abs=0.02)
+
+
+def test_resnet18_early_layers_dominate_time():
+    """Fig 8: C1-C5 slowest despite few weights; C11+ hold most xbars."""
+    cfg = get_cnn("resnet18")
+    ones = {}
+    from repro.core import crossbar as xb
+    for i, spec in enumerate(cfg.convs):
+        ic = cfg.in_channels if i == 0 else cfg.convs[i - 1].out_channels
+        g = xb.grid_of((ic * 9, spec.out_channels))
+        ones[f"convs/{i}/w"] = g.n_xbars
+    layers = pm.conv_layer_perf(cfg, ones)
+    times = [l.out_positions for l in layers]
+    xbars = [l.xbars for l in layers]
+    assert np.argmax(times) < 5                     # early layers slowest
+    assert sum(xbars[10:]) / sum(xbars) > 0.6       # late layers hold xbars

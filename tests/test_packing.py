@@ -1,0 +1,58 @@
+"""Physical FFN packing: pruned model == packed model, fewer FLOPs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, scaled_down
+from repro.core import algorithm as alg
+from repro.core.masks import apply_masks, lm_prunable, make_masks
+from repro.core.packing import pack_ffn, pack_lm_params
+from repro.models import transformer as tfm
+
+
+def test_pack_ffn_exact_on_2d():
+    rng = np.random.RandomState(0)
+    d, ff = 32, 512
+    up = rng.randn(d, ff).astype(np.float32)
+    gate = rng.randn(d, ff).astype(np.float32)
+    down = rng.randn(ff, d).astype(np.float32)
+    m = np.ones((d, ff), np.float32)
+    dead = rng.choice(ff, size=400, replace=False)
+    m[:, dead] = 0.0
+    md = np.ones((ff, d), np.float32)
+    md[dead, :] = 0.0
+    up_p, gate_p, down_p, ffp = pack_ffn(up, gate, down, m, m, md)
+    assert ffp == 128                 # 112 live → rounded to one lane tile
+    x = rng.randn(4, d).astype(np.float32)
+    h_ref = (jax.nn.silu(x @ (gate * m)) * (x @ (up * m))) @ (down * md)
+    h_pack = (jax.nn.silu(x @ gate_p) * (x @ up_p)) @ down_p
+    np.testing.assert_allclose(np.asarray(h_pack), np.asarray(h_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_pack_lm_preserves_logits():
+    cfg = scaled_down(get_arch("yi-6b"), dtype="float32", d_ff=512)
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    masks = make_masks(params, lm_prunable)
+    # filter-prune the MLPs hard so most columns die
+    for _ in range(4):
+        masks = alg.prune_step(params, masks, "filter", 0.4,
+                               lambda p: False)
+    pruned = apply_masks(params, masks)
+    batch = {"tokens": jnp.arange(64).reshape(2, 32) % 100}
+    logits_ref, _ = tfm.forward(pruned, cfg, batch)
+    packed, cfg_p = pack_lm_params(pruned, masks, cfg)
+    assert cfg_p.d_ff < cfg.d_ff
+    logits_pack, _ = tfm.forward(packed, cfg_p, batch)
+    np.testing.assert_allclose(np.asarray(logits_pack),
+                               np.asarray(logits_ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_pack_noop_when_dense():
+    cfg = scaled_down(get_arch("yi-6b"), dtype="float32")
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    masks = make_masks(params, lm_prunable)
+    packed, cfg_p = pack_lm_params(params, masks, cfg)
+    assert cfg_p.d_ff == cfg.d_ff

@@ -1,0 +1,172 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import crossbar as xb
+from repro.core import scoring
+from repro.core.algorithm import prune_step
+from repro.core.masks import (apply_masks, make_masks, sparsity_fraction)
+from repro.kernels.bsmm import bsmm_pallas, compact_tile_indices
+from repro.kernels.ref import bsmm_ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@st.composite
+def mask_matrix(draw, max_dim=96):
+    r = draw(st.integers(4, max_dim))
+    c = draw(st.integers(4, max_dim))
+    density = draw(st.floats(0.0, 1.0))
+    seed = draw(st.integers(0, 2 ** 16))
+    rng = np.random.RandomState(seed)
+    return (rng.rand(r, c) < density)
+
+
+@given(mask_matrix())
+@settings(**SETTINGS)
+def test_xbar_stats_invariants(m):
+    st_ = xb.xbar_stats(m, xr=32, xc=32)
+    assert st_.total_cells == m.size
+    assert st_.nonzero_cells == int(m.sum())
+    # savings bounded by pruned cells
+    assert 0 <= st_.saved_cells <= m.size - st_.nonzero_cells
+    # packed never exceeds strict; strict never exceeds grid
+    assert st_.xbars_needed_packed <= st_.xbars_needed_strict
+    assert st_.xbars_needed_strict + st_.xbars_fully_free == st_.n_xbars
+    # live area covers all nonzeros
+    assert st_.live_area >= st_.nonzero_cells
+
+
+@given(mask_matrix(max_dim=64))
+@settings(**SETTINGS)
+def test_compact_indices_cover_exactly_live_tiles(m):
+    tm = xb.xbar_stats  # noqa: F841  (import guard)
+    bits = m[: (m.shape[0] // 8) * 8, : (m.shape[1] // 8) * 8]
+    if bits.size == 0:
+        return
+    tiles = bits.reshape(bits.shape[0] // 8, 8, bits.shape[1] // 8, 8)
+    live = tiles.any(axis=(1, 3)).astype(np.int32)
+    idx, counts, kmax = compact_tile_indices(live)
+    assert counts.sum() == live.sum()
+    assert kmax >= max(1, counts.max())
+    for j in range(live.shape[1]):
+        assert sorted(idx[j, :counts[j]].tolist()) == \
+            np.nonzero(live[:, j])[0].tolist()
+
+
+@given(st.integers(0, 2 ** 16), st.floats(0.05, 0.6),
+       st.sampled_from(["filter", "channel", "index", "ltp", "block",
+                        "cap"]))
+@settings(**SETTINGS)
+def test_prune_step_monotone_and_calibrated(seed, frac, gran):
+    rng = np.random.RandomState(seed)
+    params = {"conv": jnp.asarray(rng.randn(3, 3, 8, 16), jnp.float32),
+              "fc": jnp.asarray(rng.randn(130, 70), jnp.float32)}
+    masks = make_masks(params, lambda p, l: True)
+    new = prune_step(params, masks, gran, frac, lambda p: p == "conv")
+    # monotone: no resurrection
+    for a, b in zip(jax.tree.leaves(masks), jax.tree.leaves(new)):
+        assert (np.asarray(b) <= np.asarray(a)).all()
+    s = sparsity_fraction(new)
+    # hits the requested fraction within one (coarsest) group's size
+    assert s >= frac - 0.02
+    assert s <= min(1.0, frac + 0.35)
+
+
+@given(st.integers(0, 2 ** 16))
+@settings(max_examples=10, deadline=None)
+def test_bsmm_random_tile_masks(seed):
+    rng = np.random.RandomState(seed)
+    b = 16
+    M, K, N = 32, 64, 48
+    x = jnp.asarray(rng.randn(M, K), jnp.float32)
+    w = jnp.asarray(rng.randn(K, N), jnp.float32)
+    tm = (rng.rand(K // b, N // b) > rng.rand()).astype(np.int32)
+    out = bsmm_pallas(x, w, tm, bm=b, bk=b, bn=b, interpret=True)
+    ref = bsmm_ref(x, w, tm, b, b)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-3)
+
+
+@given(st.integers(0, 2 ** 16), st.floats(0.1, 0.9))
+@settings(**SETTINGS)
+def test_apply_masks_idempotent_and_sparsity_exact(seed, density):
+    rng = np.random.RandomState(seed)
+    params = {"w": jnp.asarray(rng.randn(32, 32), jnp.float32)}
+    m = (rng.rand(32, 32) < density).astype(np.float32)
+    masks = {"w": jnp.asarray(m)}
+    once = apply_masks(params, masks)
+    twice = apply_masks(once, masks)
+    np.testing.assert_array_equal(np.asarray(once["w"]),
+                                  np.asarray(twice["w"]))
+    assert (np.asarray(once["w"])[m == 0] == 0).all()
+
+
+@given(st.integers(0, 2 ** 16))
+@settings(max_examples=10, deadline=None)
+def test_conv_unroll_is_bijection(seed):
+    rng = np.random.RandomState(seed)
+    k = rng.choice([1, 3, 5])
+    ic, oc = rng.randint(1, 12), rng.randint(1, 12)
+    w = rng.randn(k, k, ic, oc)
+    np.testing.assert_array_equal(
+        xb.matrix_to_conv(xb.conv_to_matrix(w), w.shape), w)
+
+
+@given(mask_matrix(max_dim=80))
+@settings(**SETTINGS)
+def test_group_zeroing_kills_exactly_requested(m):
+    w = np.random.RandomState(0).randn(*m.shape).astype(np.float32)
+    mask = m.astype(np.float32)
+    gs = scoring.group_scores("p", w, mask, "filter", conv=False)
+    alive_cols = np.nonzero(gs.alive[0])[0]
+    if len(alive_cols) == 0:
+        return
+    kill = np.zeros_like(gs.alive)
+    kill[0, alive_cols[0]] = True
+    new = scoring.zero_groups(mask, gs, kill)
+    assert new[:, alive_cols[0]].sum() == 0
+    others = np.delete(np.arange(m.shape[1]), alive_cols[0])
+    np.testing.assert_array_equal(new[:, others], mask[:, others])
+
+
+@given(st.integers(0, 2 ** 16), st.floats(0.1, 0.95))
+@settings(max_examples=15, deadline=None)
+def test_pack_ffn_equivalence_random_masks(seed, dead_frac):
+    """Packed FFN == masked FFN for any column-structured mask."""
+    from repro.core.packing import pack_ffn
+    rng = np.random.RandomState(seed)
+    d, ff = 16, 256
+    up = rng.randn(d, ff).astype(np.float32)
+    gate = rng.randn(d, ff).astype(np.float32)
+    down = rng.randn(ff, d).astype(np.float32)
+    dead = rng.rand(ff) < dead_frac
+    m = np.ones((d, ff), np.float32)
+    m[:, dead] = 0.0
+    md = np.ones((ff, d), np.float32)
+    md[dead, :] = 0.0
+    up_p, gate_p, down_p, ffp = pack_ffn(up, gate, down, m, m, md)
+    assert ffp % 128 == 0 or ffp == ff
+    x = rng.randn(3, d).astype(np.float32)
+    ref = (jax.nn.silu(x @ (gate * m)) * (x @ (up * m))) @ (down * md)
+    got = (jax.nn.silu(x @ gate_p) * (x @ up_p)) @ down_p
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+@given(st.integers(0, 2 ** 16), st.sampled_from([8, 16]))
+@settings(max_examples=15, deadline=None)
+def test_quantize_roundtrip_bounded(seed, bits):
+    """|dequant(quant(w)) - w| <= scale/2 per output channel."""
+    from repro.core.quantize import dequantize, quantize
+    rng = np.random.RandomState(seed)
+    w = jnp.asarray(rng.randn(24, 12) * rng.uniform(0.01, 10), jnp.float32)
+    qt = quantize(w, bits)
+    back = dequantize(qt, jnp.float32)
+    err = np.abs(np.asarray(back) - np.asarray(w))
+    # half-ulp rounding bound with float32 slack on the q·scale product
+    bound = np.asarray(qt.scale)[0] * 0.502 + 1e-7
+    assert (err <= bound[None, :]).all()

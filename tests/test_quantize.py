@@ -1,0 +1,81 @@
+"""Fixed-point quantization: round-trip error, masked zeros, bandwidth."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.quantize import (QTensor, dequantize, qmatmul, quantize,
+                                 quantize_tree, tree_bytes)
+
+
+def test_roundtrip_error_bounded():
+    rng = np.random.RandomState(0)
+    w = jnp.asarray(rng.randn(64, 32), jnp.float32)
+    for bits, tol in ((8, 1e-2), (16, 1e-4)):
+        qt = quantize(w, bits)
+        back = dequantize(qt, jnp.float32)
+        err = np.abs(np.asarray(back) - np.asarray(w)).max()
+        scale_max = float(np.asarray(qt.scale).max())
+        assert err <= scale_max * 0.5 + 1e-9
+        assert err < tol * np.abs(np.asarray(w)).max() * 2
+
+
+def test_pruned_weights_stay_zero():
+    rng = np.random.RandomState(1)
+    w = rng.randn(32, 16).astype(np.float32)
+    w[:, :8] = 0.0                     # filter-pruned columns
+    qt = quantize(jnp.asarray(w), 8)
+    assert (np.asarray(qt.q)[:, :8] == 0).all()
+    assert (np.asarray(dequantize(qt, jnp.float32))[:, :8] == 0).all()
+
+
+def test_qmatmul_close_to_dense():
+    rng = np.random.RandomState(2)
+    x = jnp.asarray(rng.randn(4, 64), jnp.float32)
+    w = jnp.asarray(rng.randn(64, 32), jnp.float32)
+    qt = quantize(w, 8)
+    out = qmatmul(x, qt)
+    ref = x @ w
+    rel = float(jnp.linalg.norm(out - ref) / jnp.linalg.norm(ref))
+    assert rel < 0.02
+
+
+def test_int16_matches_reram_precision():
+    """16-bit fixed point (the paper's ReRAM precision) is ~lossless
+    for bf16-scale weights."""
+    rng = np.random.RandomState(3)
+    w = jnp.asarray(rng.randn(128, 64) * 0.02, jnp.float32)
+    qt = quantize(w, 16)
+    back = dequantize(qt, jnp.float32)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(w),
+                               rtol=5e-4, atol=5e-6)
+
+
+def test_tree_quantize_and_bytes():
+    rng = np.random.RandomState(4)
+    params = {"attn": {"wq": jnp.asarray(rng.randn(64, 64), jnp.float32)},
+              "norm": {"scale": jnp.ones((64,), jnp.float32)}}
+    dense_bytes = tree_bytes(params)
+    qparams = quantize_tree(params, lambda p, l: l.ndim >= 2, bits=8)
+    assert isinstance(qparams["attn"]["wq"], QTensor)
+    assert not isinstance(qparams["norm"]["scale"], QTensor)
+    qbytes = tree_bytes(qparams)
+    # int8 + scales ≈ 1/4 of f32 storage for the matrix part
+    assert qbytes < dense_bytes * 0.35
+
+
+def test_quantize_composes_with_packing():
+    """pack → quantize: serving weights shrink by sparsity × 4 (f32→int8)."""
+    from repro.core.packing import pack_ffn
+    rng = np.random.RandomState(5)
+    d, ff = 32, 512
+    up = rng.randn(d, ff).astype(np.float32)
+    down = rng.randn(ff, d).astype(np.float32)
+    m = np.ones((d, ff), np.float32)
+    m[:, 128:] = 0.0                      # 75% columns dead
+    md = np.ones((ff, d), np.float32)
+    md[128:, :] = 0.0
+    up_p, _, down_p, ffp = pack_ffn(up, None, down, m, None, md)
+    q_up = quantize(up_p, 8)
+    dense_bytes = up.size * 4
+    assert q_up.nbytes < dense_bytes * 0.08   # 4× (int8) × 4× (packing)

@@ -1,0 +1,107 @@
+"""Algorithm 1 state machine — scripted train/eval, fully deterministic."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import PruneConfig
+from repro.core import algorithm as alg
+from repro.core.masks import make_masks, sparsity_fraction
+
+
+def _params(seed=0):
+    r = np.random.RandomState(seed)
+    return {"a": jnp.asarray(r.randn(3, 3, 4, 8), jnp.float32),
+            "b": jnp.asarray(r.randn(256, 128), jnp.float32)}
+
+
+PRUNABLE = lambda p, l: l.ndim >= 2      # noqa: E731
+CONV = lambda p: p == "a"                # noqa: E731
+
+
+def test_accepts_until_accuracy_drops_then_switches():
+    calls = {"train": 0, "evals": []}
+
+    def train_fn(params, masks):
+        calls["train"] += 1
+        return params
+
+    # accept twice at filter granularity, then always fail
+    def eval_fn(params, masks):
+        s = sparsity_fraction(masks)
+        acc = 1.0 if s < 0.45 else 0.5
+        calls["evals"].append((s, acc))
+        return acc
+
+    cfg = PruneConfig(prune_fraction=0.25, max_iters=20)
+    res = alg.realprune(init_params=_params(), train_fn=train_fn,
+                        eval_fn=eval_fn, prunable=PRUNABLE, conv_pred=CONV,
+                        cfg=cfg, baseline_accuracy=1.0)
+    # sparsity after accepted iterations stays below the 0.45 acc cliff
+    assert 0.3 < res.sparsity < 0.45
+    grans = [e.granularity for e in res.history]
+    assert grans[0] == "filter"
+    assert "channel" in grans and "index" in grans    # switched twice
+    undone = [e for e in res.history if not e.accepted]
+    assert len(undone) == 3                            # one per granularity
+
+
+def test_rewind_returns_initial_weights():
+    params = _params()
+
+    def train_fn(p, masks):
+        return jax.tree.map(lambda x: x + 100.0, p)   # training moves far
+
+    def eval_fn(p, masks):
+        return 1.0
+
+    cfg = PruneConfig(prune_fraction=0.2, max_iters=2)
+    res = alg.realprune(init_params=params, train_fn=train_fn,
+                        eval_fn=eval_fn, prunable=PRUNABLE, conv_pred=CONV,
+                        cfg=cfg, baseline_accuracy=0.0)
+    # surviving weights equal the t=0 initialisation (lottery rewind)
+    m = res.masks["b"]
+    np.testing.assert_allclose(np.asarray(res.params["b"]),
+                               np.asarray(params["b"] * m))
+    assert res.sparsity > 0.3
+
+
+def test_max_iters_bound():
+    cfg = PruneConfig(prune_fraction=0.1, max_iters=3)
+    res = alg.realprune(init_params=_params(),
+                        train_fn=lambda p, m: p,
+                        eval_fn=lambda p, m: 1.0,
+                        prunable=PRUNABLE, conv_pred=CONV, cfg=cfg,
+                        baseline_accuracy=0.0)
+    assert len(res.history) == 3
+
+
+def test_masks_monotone_nonincreasing():
+    masks_seen = []
+
+    def eval_fn(p, m):
+        masks_seen.append(jax.tree.map(
+            lambda x: None if x is None else np.asarray(x), m,
+            is_leaf=lambda x: x is None))
+        return 1.0
+
+    cfg = PruneConfig(prune_fraction=0.3, max_iters=4)
+    alg.realprune(init_params=_params(), train_fn=lambda p, m: p,
+                  eval_fn=eval_fn, prunable=PRUNABLE, conv_pred=CONV,
+                  cfg=cfg, baseline_accuracy=0.0)
+    for prev, cur in zip(masks_seen, masks_seen[1:]):
+        for a, b in zip(jax.tree.leaves(prev), jax.tree.leaves(cur)):
+            assert (b <= a).all()      # pruned weights never resurrect
+
+
+def test_baseline_methods_single_granularity():
+    for method in ("ltp", "block", "cap"):
+        res = alg.lottery_baseline(
+            init_params=_params(), train_fn=lambda p, m: p,
+            eval_fn=lambda p, m: 1.0, prunable=PRUNABLE, conv_pred=CONV,
+            cfg=PruneConfig(prune_fraction=0.25, max_iters=3),
+            method=method, baseline_accuracy=0.0)
+        assert res.sparsity > 0.4, method
+        assert all(e.granularity == {"ltp": "ltp", "block": "block",
+                                     "cap": "cap"}[method]
+                   for e in res.history)

@@ -1,0 +1,94 @@
+"""Recurrent cells: parallel forms vs sequential oracles; decode steps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import recurrent as R
+
+B, S, w, H, d = 2, 64, 32, 4, 16
+
+
+@pytest.fixture(scope="module")
+def rngs():
+    return jax.random.split(jax.random.PRNGKey(0), 4)
+
+
+def test_mlstm_chunkwise_equals_sequential(rngs):
+    p = R.mlstm_cell_init(rngs[0], w, H)
+    u = jax.random.normal(rngs[1], (B, S, w)) * 0.5
+    h_seq, st_seq = R.mlstm_sequential(p, u, H)
+    for chunk in (8, 16, 32):
+        h_chk, st_chk = R.mlstm_chunkwise(p, u, H, chunk=chunk)
+        np.testing.assert_allclose(np.asarray(h_seq), np.asarray(h_chk),
+                                   rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(np.asarray(st_seq.C),
+                                   np.asarray(st_chk.C),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_mlstm_state_carries_across_calls(rngs):
+    p = R.mlstm_cell_init(rngs[0], w, H)
+    u = jax.random.normal(rngs[1], (B, S, w)) * 0.5
+    h_full, st_full = R.mlstm_sequential(p, u, H)
+    h1, st1 = R.mlstm_sequential(p, u[:, : S // 2], H)
+    h2, st2 = R.mlstm_sequential(p, u[:, S // 2:], H, st1)
+    np.testing.assert_allclose(np.asarray(h_full[:, S // 2:]),
+                               np.asarray(h2), rtol=2e-4, atol=2e-4)
+
+
+def test_rglru_parallel_equals_stepwise(rngs):
+    p = R.rglru_init(rngs[0], d, w, H, 4)
+    x = jax.random.normal(rngs[2], (B, S, d)) * 0.5
+    y_full, st = R.rglru_make_cache(p, x)
+    st2 = R.rglru_init_state(p, B)
+    ys = []
+    for t in range(S):
+        yt, st2 = R.rglru_step(p, st2, x[:, t:t + 1])
+        ys.append(yt)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(ys, 1)),
+                               np.asarray(y_full), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st2.h), np.asarray(st.h),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_rglru_stability_long_sequence(rngs):
+    p = R.rglru_init(rngs[0], d, w, H, 4)
+    x = jax.random.normal(rngs[2], (1, 2048, d)) * 3.0
+    y = R.rglru_forward(p, x)
+    assert not np.any(np.isnan(np.asarray(y)))
+    assert np.abs(np.asarray(y)).max() < 1e3    # decay keeps state bounded
+
+
+def test_slstm_step_equals_scan(rngs):
+    p = R.slstm_cell_init(rngs[0], d, w, H)
+    x = jax.random.normal(rngs[3], (B, S, d)) * 0.5
+    h_full, st_full = R.slstm_forward(p, x)
+    st = R.slstm_init_state(B, w)
+    hs = []
+    for t in range(S):
+        ht, st = R.slstm_step(p, st, x[:, t:t + 1])
+        hs.append(ht)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(hs, 1)),
+                               np.asarray(h_full), rtol=1e-4, atol=1e-4)
+
+
+def test_slstm_exponential_gate_stability(rngs):
+    p = R.slstm_cell_init(rngs[0], d, w, H)
+    x = jax.random.normal(rngs[3], (B, 512, d)) * 5.0
+    h, _ = R.slstm_forward(p, x)
+    assert not np.any(np.isnan(np.asarray(h)))
+    assert np.abs(np.asarray(h)).max() <= 1.0 + 1e-5   # o·c/n bounded
+
+
+def test_conv1d_step_equals_full(rngs):
+    p = R.conv1d_init(rngs[0], w, 4)
+    u = jax.random.normal(rngs[1], (B, S, w))
+    full = R.conv1d_apply(p, u)
+    state = jnp.zeros((B, 3, w))
+    outs = []
+    for t in range(S):
+        y, state = R.conv1d_step(p, state, u[:, t])
+        outs.append(y[:, None])
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(outs, 1)),
+                               np.asarray(full), rtol=1e-5, atol=1e-5)

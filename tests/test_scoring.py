@@ -1,0 +1,89 @@
+"""Group scoring + mask zeroing for all granularities."""
+import numpy as np
+import pytest
+
+from repro.core import scoring
+from repro.core.crossbar import conv_to_matrix
+
+
+def _conv(shape=(3, 3, 8, 16), seed=0):
+    return np.random.RandomState(seed).randn(*shape).astype(np.float32)
+
+
+def test_filter_groups_score_and_zero():
+    w = _conv()
+    mask = np.ones_like(w)
+    gs = scoring.group_scores("p", w, mask, "filter", conv=True)
+    assert gs.scores.shape == (1, 16)
+    # score of filter oc = mean |w[:,:,:,oc]|
+    np.testing.assert_allclose(gs.scores[0, 3],
+                               np.abs(w[:, :, :, 3]).mean(), rtol=1e-6)
+    kill = np.zeros((1, 16), bool)
+    kill[0, 3] = True
+    new = scoring.zero_groups(mask, gs, kill)
+    assert new[:, :, :, 3].sum() == 0
+    assert new.sum() == mask.size - 72
+
+
+def test_channel_groups_conv():
+    w = _conv()
+    mask = np.ones_like(w)
+    gs = scoring.group_scores("p", w, mask, "channel", conv=True)
+    assert gs.scores.shape == (1, 8, 16)
+    np.testing.assert_allclose(gs.scores[0, 2, 5],
+                               np.abs(w[:, :, 2, 5]).mean(), rtol=1e-6)
+    kill = np.zeros((1, 8, 16), bool)
+    kill[0, 2, 5] = True
+    new = scoring.zero_groups(mask, gs, kill)
+    assert new[:, :, 2, 5].sum() == 0
+    assert new.sum() == mask.size - 9
+
+
+def test_index_groups_rowwise():
+    w = np.random.RandomState(1).randn(64, 300).astype(np.float32)
+    mask = np.ones_like(w)
+    gs = scoring.group_scores("p", w, mask, "index", conv=False)
+    # 300 cols → 3 col tiles (128,128,44)
+    assert gs.scores.shape == (1, 64, 3)
+    kill = np.zeros_like(gs.scores, bool)
+    kill[0, 10, 2] = True       # row 10 in last (44-wide) tile
+    new = scoring.zero_groups(mask, gs, kill)
+    assert new[10, 256:].sum() == 0
+    assert new[10, :256].sum() == 256
+
+
+def test_dense_channel_uses_128_row_tiles():
+    w = np.random.RandomState(2).randn(300, 64).astype(np.float32)
+    mask = np.ones_like(w)
+    gs = scoring.group_scores("p", w, mask, "channel", conv=False)
+    assert gs.scores.shape == (1, 3, 64)
+    kill = np.zeros_like(gs.scores, bool)
+    kill[0, 0, 7] = True
+    new = scoring.zero_groups(mask, gs, kill)
+    assert new[:128, 7].sum() == 0 and new[128:, 7].all()
+
+
+def test_select_global_prune_hits_fraction():
+    np.random.seed(3)
+    sets = []
+    leaves = {}
+    for i, shape in enumerate([(64, 128), (128, 256)]):
+        w = np.random.randn(*shape).astype(np.float32)
+        m = np.ones_like(w)
+        leaves[f"l{i}"] = (w, m)
+        sets.append(scoring.group_scores(f"l{i}", w, m, "ltp", conv=False))
+    remaining = sum(m.size for (_, m) in leaves.values())
+    kills = scoring.select_global_prune(sets, 0.25, remaining)
+    killed = sum(k.sum() for k in kills.values())
+    assert abs(killed / remaining - 0.25) < 0.01
+
+
+def test_scores_ignore_dead_groups():
+    w = _conv()
+    mask = np.ones_like(w)
+    gs = scoring.group_scores("p", w, mask, "filter", conv=True)
+    kill = np.zeros((1, 16), bool)
+    kill[0, :8] = True
+    m2 = scoring.zero_groups(mask, gs, kill)
+    gs2 = scoring.group_scores("p", w, m2, "filter", conv=True)
+    assert (~gs2.alive[0, :8]).all() and gs2.alive[0, 8:].all()

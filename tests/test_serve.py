@@ -1,0 +1,58 @@
+"""Serving engine: batched prefill/decode, greedy consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, scaled_down
+from repro.models import transformer as tfm
+from repro.serve import Request, ServeEngine
+
+
+@pytest.fixture(scope="module")
+def engine():
+    cfg = scaled_down(get_arch("llama3.2-3b"), dtype="float32")
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    return ServeEngine(params=params, cfg=cfg, prefill_fn=tfm.prefill,
+                       decode_fn=tfm.decode_step, batch_slots=4,
+                       capacity=96), cfg, params
+
+
+def test_serves_all_requests(engine):
+    eng, cfg, params = engine
+    rng = np.random.RandomState(0)
+    for i in range(10):
+        eng.submit(Request(uid=i,
+                           prompt=rng.randint(0, 100, 8).astype(np.int32),
+                           max_new_tokens=6))
+    done = eng.run()
+    assert len(done) == 10
+    assert all(len(r.tokens) == 6 for r in done)
+    assert all(r.done for r in done)
+
+
+def test_greedy_matches_forward_argmax(engine):
+    """First generated token == argmax of the forward logits."""
+    eng, cfg, params = engine
+    prompt = np.arange(1, 13, dtype=np.int32)
+    eng.submit(Request(uid=99, prompt=prompt, max_new_tokens=2))
+    done = eng.run()
+    req = [r for r in done if r.uid == 99][0]
+    logits, _ = tfm.forward(params, cfg,
+                            {"tokens": jnp.asarray(prompt[None])})
+    want = int(jnp.argmax(logits[0, -1]))
+    assert req.tokens[0] == want
+
+
+def test_eos_stops_generation(engine):
+    eng, cfg, params = engine
+    prompt = np.arange(1, 9, dtype=np.int32)
+    logits, _ = tfm.forward(params, cfg,
+                            {"tokens": jnp.asarray(prompt[None])})
+    eos = int(jnp.argmax(logits[0, -1]))   # first generated token = EOS
+    eng.submit(Request(uid=7, prompt=prompt, max_new_tokens=10,
+                       eos_id=eos))
+    done = eng.run()
+    req = [r for r in done if r.uid == 7][0]
+    assert req.tokens[0] == eos
+    assert len(req.tokens) <= 2

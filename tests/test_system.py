@@ -1,0 +1,130 @@
+"""End-to-end behaviour tests for the paper's system.
+
+The full story on one small CNN: baseline training reaches high
+accuracy → ReaLPrune finds a sparse ticket with no accuracy drop →
+the ticket's sparsity translates to crossbar savings and an iso-area
+ReRAM training speedup > 1 → the surviving masks drive the TPU
+block-sparse kernel with matching tile accounting.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import CNNConfig, ConvSpec, PruneConfig
+from repro.core import algorithm as alg
+from repro.core import perf_model as pm
+from repro.core.hardware import analyze_masks, cnn_activation_volumes
+from repro.core.masks import apply_masks, cnn_prunable, path_str
+from repro.data import SyntheticImages
+from repro.models import cnn as cnn_lib
+from repro.optim import exponential_epoch_decay, masked, sgd
+
+CFG = CNNConfig(name="sys-cnn", family="cnn",
+                convs=(ConvSpec(32, pool=True), ConvSpec(64, pool=True),
+                       ConvSpec(64)),
+                fc=(), num_classes=10, image_size=16)
+DATA = SyntheticImages(image_size=16, noise=0.25)
+CONV_PRED = lambda p: "convs" in p    # noqa: E731
+
+
+@pytest.fixture(scope="module")
+def pipeline():
+    rng = jax.random.PRNGKey(0)
+    params0, bn0 = cnn_lib.init_params(rng, CFG)
+    holder = {"bn": bn0}
+
+    def train_fn(params, masks, steps=70):
+        opt = masked(sgd(exponential_epoch_decay(0.05, 0.95, 40)), masks)
+        opt_state = opt.init(params)
+        state, params = bn0, apply_masks(params, masks)
+
+        @jax.jit
+        def step(params, opt_state, state, batch):
+            def lf(p):
+                loss, (nst, _) = cnn_lib.loss_fn(p, state, CFG, batch, True)
+                return loss, nst
+            (loss, nst), g = jax.value_and_grad(lf, has_aux=True)(params)
+            params, opt_state = opt.update(g, opt_state, params)
+            return params, opt_state, nst, loss
+
+        for i in range(steps):
+            b = DATA.batch(i, 64)
+            params, opt_state, state, _ = step(
+                params, opt_state, state,
+                {"images": jnp.asarray(b["images"]),
+                 "labels": jnp.asarray(b["labels"])})
+        holder["bn"] = state
+        return params
+
+    def eval_fn(params, masks):
+        accs = [float(cnn_lib.accuracy(
+            params, holder["bn"], CFG,
+            jnp.asarray(DATA.batch(10_000 + i, 128)["images"]),
+            jnp.asarray(DATA.batch(10_000 + i, 128)["labels"])))
+            for i in range(3)]
+        return float(np.mean(accs))
+
+    res = alg.realprune(
+        init_params=params0, train_fn=train_fn, eval_fn=eval_fn,
+        prunable=cnn_prunable, conv_pred=CONV_PRED,
+        cfg=PruneConfig(prune_fraction=0.15, max_iters=10,
+                        accuracy_tolerance=0.02))
+    return res, eval_fn, train_fn
+
+
+def test_ticket_is_sparse_with_no_accuracy_drop(pipeline):
+    res, eval_fn, train_fn = pipeline
+    assert res.sparsity > 0.3
+    # last ACCEPTED event's accuracy met the gate by construction
+    accepted = [e for e in res.history if e.accepted]
+    assert accepted, "no prune step was accepted"
+    assert accepted[-1].accuracy >= 0.95
+
+
+def test_coarse_to_fine_schedule_followed(pipeline):
+    res, _, _ = pipeline
+    order = {"filter": 0, "channel": 1, "index": 2}
+    seen = [order[e.granularity] for e in res.history]
+    assert seen == sorted(seen)        # never goes back to coarser
+
+
+def test_sparsity_translates_to_hardware_savings(pipeline):
+    res, _, _ = pipeline
+    rep = analyze_masks(res.masks, CONV_PRED,
+                        activation_volumes=cnn_activation_volumes(CFG))
+    assert rep.cell_savings > 0.1
+    assert rep.xbar_savings > 0.1
+    vols = cnn_activation_volumes(CFG)
+    unpruned = pm.conv_layer_perf(
+        CFG, {l.path: l.stats.n_xbars for l in rep.layers}, vols)
+    pruned = pm.conv_layer_perf(
+        CFG, {l.path: l.stats.xbars_needed_packed for l in rep.layers},
+        vols)
+    assert pm.iso_area_speedup(unpruned, pruned) > 1.0
+
+
+def test_masks_drive_bsmm_consistently(pipeline):
+    res, _, _ = pipeline
+    from repro.core.crossbar import conv_to_matrix
+    from repro.kernels.ops import sparse_dense, tile_density
+
+    leaf = None
+
+    def grab(path, x):
+        nonlocal leaf
+        if x is not None and path_str(path) == "convs/2/w":
+            leaf = np.asarray(x)
+        return x
+
+    jax.tree_util.tree_map_with_path(grab, res.masks,
+                                     is_leaf=lambda x: x is None)
+    mat_mask = conv_to_matrix(leaf)
+    rng = np.random.RandomState(0)
+    K, N = mat_mask.shape
+    w = jnp.asarray(rng.randn(K, N), jnp.float32)
+    x = jnp.asarray(rng.randn(4, K), jnp.float32)
+    out = sparse_dense(x, w, mat_mask)
+    ref = x @ (w * jnp.asarray(mat_mask, jnp.float32))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-3)
