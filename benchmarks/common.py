@@ -53,13 +53,15 @@ def cnn_params(name: str, seed: int = 0):
 
 
 def masks_at_sparsity(params, target_sparsity: float, method: str,
-                      frac_per_iter: float = 0.25, max_iters: int = 40):
+                      frac_per_iter: float = 0.25, max_iters: int = 40,
+                      geometry=None):
     """Iterate the method's prune step until the target sparsity.
 
     For realprune the coarse→fine schedule advances on a fixed budget
     (filter to ~40%, channel to ~70%, index beyond) — the accuracy-gated
     switching of Algorithm 1 replaced by the sparsity budget (no
-    training in this deterministic mode).
+    training in this deterministic mode).  ``geometry`` (a
+    ``TileGeometry``) selects a non-default crossbar size.
     """
     grans = METHOD_GRANULARITIES[method]
     masks = masks_lib.make_masks(params, cnn_prunable)
@@ -73,14 +75,19 @@ def masks_at_sparsity(params, target_sparsity: float, method: str,
             g += 1
         frac = min(frac_per_iter,
                    (target_sparsity - s) / max(1e-9, 1.0 - s))
-        masks = prune_step(params, masks, grans[g], frac, CONV_PRED)
+        masks = prune_step(params, masks, grans[g], frac, CONV_PRED,
+                           geometry=geometry)
     return masks
 
 
-def hw_report(name: str, masks):
+def hw_report(name: str, masks, geometry=None):
     cfg = get_cnn(name)
+    kw = {}
+    if geometry is not None:
+        kw = {"xbar_rows": geometry.rows, "xbar_cols": geometry.cols}
     return analyze_masks(masks, CONV_PRED,
-                         activation_volumes=cnn_activation_volumes(cfg))
+                         activation_volumes=cnn_activation_volumes(cfg),
+                         **kw)
 
 
 def csv_line(name: str, us: float, derived: str) -> str:

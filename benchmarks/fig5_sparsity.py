@@ -1,27 +1,21 @@
 """Paper Fig. 5: achievable sparsity per pruning technique.
 
 Quick mode (default, used by ``benchmarks.run``): the full Algorithm 1
-loop (train → prune → eval-gate → rewind) on a reduced CNN with
-synthetic CIFAR-like data — validates the ORDERING (LTP ≥ ReaLPrune >
-Block ≈ CAP) and the no-accuracy-drop gate in minutes on CPU.  The
-paper-scale run lives in ``examples/prune_cnn_lottery.py``.
+loop (train → prune → eval-gate → rewind) through the ``repro.api``
+session layer on a reduced CNN with synthetic CIFAR-like data —
+validates the ORDERING (LTP ≥ ReaLPrune > Block ≈ CAP) and the
+no-accuracy-drop gate in minutes on CPU.  The paper-scale run lives in
+``examples/prune_cnn_lottery.py``.
 """
 from __future__ import annotations
 
-import functools
 from typing import Dict
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from benchmarks.common import PAPER_FIG5_REMAINING, Timer, csv_line
+from benchmarks.common import (METHOD_GRANULARITIES, PAPER_FIG5_REMAINING,
+                               Timer, csv_line)
+from repro.api import CNNAdapter, PruningSession
 from repro.configs import CNNConfig, ConvSpec, PruneConfig
-from repro.core import algorithm as alg
-from repro.core.masks import apply_masks, cnn_prunable
 from repro.data import SyntheticImages
-from repro.models import cnn as cnn_lib
-from repro.optim import exponential_epoch_decay, masked, sgd
 
 # calibration: overparameterised enough for the synthetic task that
 # moderate coarse-granularity prunes pass the accuracy gate (matches
@@ -31,72 +25,25 @@ CFG = CNNConfig(
     convs=(ConvSpec(32, pool=True), ConvSpec(64, pool=True),
            ConvSpec(64), ConvSpec(64)),
     fc=(), num_classes=10, image_size=16)
-DATA = SyntheticImages(image_size=16, noise=0.25, seed=0)
 STEPS = 80
 
 
-def _train_eval(rng):
-    params0, bn0 = cnn_lib.init_params(rng, CFG)
-    holder = {"bn": bn0}
-
-    def train_fn(params, masks):
-        opt = masked(sgd(exponential_epoch_decay(0.05, 0.95, 40)), masks)
-        opt_state = opt.init(params)
-        state = bn0
-        params = apply_masks(params, masks)
-
-        @jax.jit
-        def step(params, opt_state, state, batch):
-            def lf(p):
-                loss, (nst, _) = cnn_lib.loss_fn(p, state, CFG, batch,
-                                                 train=True)
-                return loss, nst
-            (loss, nst), g = jax.value_and_grad(lf, has_aux=True)(params)
-            params, opt_state = opt.update(g, opt_state, params)
-            return params, opt_state, nst, loss
-
-        for i in range(STEPS):
-            b = DATA.batch(i, 64)
-            params, opt_state, state, _ = step(
-                params, opt_state, state,
-                {"images": jnp.asarray(b["images"]),
-                 "labels": jnp.asarray(b["labels"])})
-        holder["bn"] = state
-        return params
-
-    def eval_fn(params, masks):
-        accs = []
-        for i in range(3):
-            b = DATA.batch(10_000 + i, 128)
-            accs.append(float(cnn_lib.accuracy(
-                params, holder["bn"], CFG, jnp.asarray(b["images"]),
-                jnp.asarray(b["labels"]))))
-        return float(np.mean(accs))
-
-    return params0, train_fn, eval_fn
+def _adapter():
+    return CNNAdapter(
+        CFG, data=SyntheticImages(image_size=16, noise=0.25, seed=0),
+        steps=STEPS, batch_size=64, lr=0.05, lr_decay=0.95, decay_every=40,
+        eval_batches=3, eval_batch_size=128)
 
 
 def run(quick: bool = True) -> Dict[str, float]:
-    rng = jax.random.PRNGKey(0)
     pc = PruneConfig(prune_fraction=0.15, max_iters=12,
                      accuracy_tolerance=0.02)
     results = {}
     lines = []
-    for method in ("realprune", "ltp", "block", "cap"):
-        params0, train_fn, eval_fn = _train_eval(rng)
+    for method, grans in METHOD_GRANULARITIES.items():
+        session = PruningSession(_adapter(), pc, granularities=grans)
         with Timer() as t:
-            if method == "realprune":
-                res = alg.realprune(
-                    init_params=params0, train_fn=train_fn, eval_fn=eval_fn,
-                    prunable=cnn_prunable,
-                    conv_pred=lambda p: "convs" in p or "shortcuts" in p,
-                    cfg=pc)
-            else:
-                res = alg.lottery_baseline(
-                    init_params=params0, train_fn=train_fn, eval_fn=eval_fn,
-                    prunable=cnn_prunable,
-                    conv_pred=lambda p: "convs" in p or "shortcuts" in p,
-                    cfg=pc, method=method)
+            res = session.run()
         results[method] = res.sparsity
         paper = 1.0 - PAPER_FIG5_REMAINING[method]
         lines.append(csv_line(

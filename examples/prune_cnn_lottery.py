@@ -1,6 +1,7 @@
 """Paper pipeline at configurable scale: ReaLPrune a ResNet-18-family
 CNN on CIFAR-like data, export the winning ticket, and verify the
-ticket trains from scratch with no accuracy loss (paper §V.B).
+ticket trains from scratch with no accuracy loss (paper §V.B) — all
+through the ``repro.api`` session layer.
 
     PYTHONPATH=src python examples/prune_cnn_lottery.py [--full]
 
@@ -12,20 +13,11 @@ import argparse
 import sys
 sys.path.insert(0, "src")
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
+from repro.api import CNNAdapter, PruningSession
 from repro.configs import CNNConfig, ConvSpec, PruneConfig, get_cnn
-from repro.core import algorithm as alg
 from repro.core import lottery
-from repro.core.hardware import analyze_masks, cnn_activation_volumes
-from repro.core.masks import apply_masks, cnn_prunable
+from repro.core.hardware import cnn_activation_volumes
 from repro.data import SyntheticImages
-from repro.models import cnn as cnn_lib
-from repro.optim import exponential_epoch_decay, masked, sgd
-
-CONV_PRED = lambda p: "convs" in p or "shortcuts" in p  # noqa: E731
 
 MINI_RESNET = CNNConfig(
     name="mini-resnet", family="cnn",
@@ -43,73 +35,41 @@ def main():
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--steps", type=int, default=120)
     ap.add_argument("--ticket-dir", default="/tmp/realprune_ticket")
+    ap.add_argument("--ckpt", default=None,
+                    help="session checkpoint dir (resume a killed run)")
     args = ap.parse_args()
 
     cfg = get_cnn("resnet18") if args.full else MINI_RESNET
-    data = SyntheticImages(image_size=cfg.image_size, noise=0.25)
-    rng = jax.random.PRNGKey(0)
-    params0, bn0 = cnn_lib.init_params(rng, cfg)
-    holder = {"bn": bn0}
-
-    def train_fn(params, masks):
-        opt = masked(sgd(exponential_epoch_decay(
-            0.1, 0.95, args.steps // 2)), masks)   # paper: LR .1, -5%/epoch
-        opt_state = opt.init(params)
-        state, params = bn0, apply_masks(params, masks)
-
-        @jax.jit
-        def step(params, opt_state, state, batch):
-            def lf(p):
-                loss, (nst, _) = cnn_lib.loss_fn(p, state, cfg, batch, True)
-                return loss, nst
-            (loss, nst), g = jax.value_and_grad(lf, has_aux=True)(params)
-            params, opt_state = opt.update(g, opt_state, params)
-            return params, opt_state, nst, loss
-
-        for i in range(args.steps):
-            b = data.batch(i, 128)                 # paper: batch size 128
-            params, opt_state, state, _ = step(
-                params, opt_state, state,
-                {"images": jnp.asarray(b["images"]),
-                 "labels": jnp.asarray(b["labels"])})
-        holder["bn"] = state
-        return params
-
-    def eval_fn(params, masks):
-        accs = [float(cnn_lib.accuracy(
-            params, holder["bn"], cfg,
-            jnp.asarray(data.batch(10_000 + i, 256)["images"]),
-            jnp.asarray(data.batch(10_000 + i, 256)["labels"])))
-            for i in range(4)]
-        return float(np.mean(accs))
+    adapter = CNNAdapter(
+        cfg, data=SyntheticImages(image_size=cfg.image_size, noise=0.25),
+        steps=args.steps, batch_size=128,            # paper: batch size 128
+        lr=0.1, lr_decay=0.95,                       # paper: LR .1, -5%/epoch
+        eval_batches=4, eval_batch_size=256)
 
     print(f"== ReaLPrune lottery pipeline: {cfg.name} ==")
-    res = alg.realprune(
-        init_params=params0, train_fn=train_fn, eval_fn=eval_fn,
-        prunable=cnn_prunable, conv_pred=CONV_PRED,
-        cfg=PruneConfig(prune_fraction=0.25, max_iters=10,
-                        accuracy_tolerance=0.02))
+    session = PruningSession(
+        adapter, PruneConfig(prune_fraction=0.25, max_iters=10,
+                             accuracy_tolerance=0.02),
+        ckpt_dir=args.ckpt)
+    res = session.run()
     print(f"winning-ticket sparsity: {res.sparsity:.3f}")
 
     # export/import the ticket (paper §V.C: prune once, reuse forever)
-    w0 = lottery.snapshot(params0)
-    lottery.export_ticket(args.ticket_dir, w0, res.masks)
-    w_back, m_back = lottery.import_ticket(args.ticket_dir, params0,
-                                           res.masks)
+    session.export_ticket(args.ticket_dir)
+    w_back, m_back = lottery.import_ticket(args.ticket_dir,
+                                           session.init_params, res.masks)
     print(f"ticket exported to {args.ticket_dir} and re-imported")
 
     # train the ticket from scratch — no accuracy loss vs baseline
-    baseline_params = train_fn(params0,
-                               jax.tree.map(lambda x: None, res.masks,
-                                            is_leaf=lambda x: x is None))
-    base_acc = eval_fn(baseline_params, None)
-    ticket_params = train_fn(lottery.rewind(w_back, m_back), m_back)
-    ticket_acc = eval_fn(ticket_params, m_back)
+    baseline_params = adapter.train(session.init_params, None)
+    base_acc = adapter.evaluate(baseline_params)
+    ticket_params = adapter.train(lottery.rewind(w_back, m_back), m_back)
+    ticket_acc = adapter.evaluate(ticket_params, m_back)
     print(f"baseline acc {base_acc:.3f} | ticket acc {ticket_acc:.3f} "
           f"(sparsity {res.sparsity:.1%})")
 
-    rep = analyze_masks(res.masks, CONV_PRED,
-                        activation_volumes=cnn_activation_volumes(cfg))
+    rep = session.hardware_report(
+        activation_volumes=cnn_activation_volumes(cfg))
     print(f"hardware: cell savings {rep.cell_savings:.1%}, "
           f"crossbars {rep.xbars_needed}/{rep.xbars_unpruned} "
           f"(-{rep.xbar_savings:.1%})")

@@ -3,84 +3,50 @@
     PYTHONPATH=src python examples/quickstart.py
 
 Runs the full Algorithm 1 loop (train → crossbar-aware prune → accuracy
-gate → lottery rewind) on a small CNN with synthetic CIFAR-like data,
-then reports sparsity, crossbar savings, ReRAM training speedup, and
-the TPU block-sparse kernel's tile savings for the resulting masks.
+gate → lottery rewind) through the ``repro.api`` session layer on a
+small CNN with synthetic CIFAR-like data, then reports sparsity,
+crossbar savings, ReRAM training speedup, and the TPU block-sparse
+kernel's tile savings for the resulting masks.
 """
 import sys
 sys.path.insert(0, "src")
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
+from repro.api import CNNAdapter, PruningSession
 from repro.configs import CNNConfig, ConvSpec, PruneConfig
-from repro.core import algorithm as alg
-from repro.core.hardware import analyze_masks, cnn_activation_volumes
-from repro.core.masks import apply_masks, cnn_prunable, path_str
+from repro.core.hardware import cnn_activation_volumes
+from repro.core.masks import path_str
 from repro.core import perf_model as pm
 from repro.data import SyntheticImages
-from repro.models import cnn as cnn_lib
-from repro.optim import exponential_epoch_decay, masked, sgd
 
 CFG = CNNConfig(
     name="quickstart-cnn", family="cnn",
     convs=(ConvSpec(32, pool=True), ConvSpec(64, pool=True), ConvSpec(64)),
     fc=(), num_classes=10, image_size=16)
-DATA = SyntheticImages(image_size=16, noise=0.25)
-CONV_PRED = lambda p: "convs" in p or "shortcuts" in p  # noqa: E731
+
+
+def show(e):
+    print(f"  iter {e.iteration:2d} [{e.granularity:7s}] "
+          f"sparsity {e.sparsity_before:.2f}→{e.sparsity_after:.2f} "
+          f"acc {e.accuracy:.3f} {'keep' if e.accepted else 'undo'}")
 
 
 def main():
-    rng = jax.random.PRNGKey(0)
-    params0, bn0 = cnn_lib.init_params(rng, CFG)
-    holder = {"bn": bn0}
-
-    def train_fn(params, masks, steps=80):
-        opt = masked(sgd(exponential_epoch_decay(0.05, 0.95, 40)), masks)
-        opt_state = opt.init(params)
-        state, params = bn0, apply_masks(params, masks)
-
-        @jax.jit
-        def step(params, opt_state, state, batch):
-            def lf(p):
-                loss, (nst, _) = cnn_lib.loss_fn(p, state, CFG, batch, True)
-                return loss, nst
-            (loss, nst), g = jax.value_and_grad(lf, has_aux=True)(params)
-            params, opt_state = opt.update(g, opt_state, params)
-            return params, opt_state, nst, loss
-
-        for i in range(steps):
-            b = DATA.batch(i, 64)
-            params, opt_state, state, loss = step(
-                params, opt_state, state,
-                {"images": jnp.asarray(b["images"]),
-                 "labels": jnp.asarray(b["labels"])})
-        holder["bn"] = state
-        return params
-
-    def eval_fn(params, masks):
-        accs = [float(cnn_lib.accuracy(
-            params, holder["bn"], CFG,
-            jnp.asarray(DATA.batch(10_000 + i, 128)["images"]),
-            jnp.asarray(DATA.batch(10_000 + i, 128)["labels"])))
-            for i in range(3)]
-        return float(np.mean(accs))
-
     print("== ReaLPrune quickstart ==")
-    res = alg.realprune(
-        init_params=params0, train_fn=train_fn, eval_fn=eval_fn,
-        prunable=cnn_prunable, conv_pred=CONV_PRED,
-        cfg=PruneConfig(prune_fraction=0.15, max_iters=12,
-                        accuracy_tolerance=0.02))
-    for e in res.history:
-        print(f"  iter {e.iteration:2d} [{e.granularity:7s}] "
-              f"sparsity {e.sparsity_before:.2f}→{e.sparsity_after:.2f} "
-              f"acc {e.accuracy:.3f} {'keep' if e.accepted else 'undo'}")
+    adapter = CNNAdapter(CFG, data=SyntheticImages(image_size=16, noise=0.25),
+                         steps=80, batch_size=64, lr=0.05, lr_decay=0.95,
+                         decay_every=40, eval_batches=3)
+    session = PruningSession(
+        adapter, PruneConfig(prune_fraction=0.15, max_iters=12,
+                             accuracy_tolerance=0.02),
+        callbacks=[show])
+    res = session.run()
     print(f"final sparsity: {res.sparsity:.3f}")
 
-    rep = analyze_masks(res.masks, CONV_PRED,
-                        activation_volumes=cnn_activation_volumes(CFG))
+    rep = session.hardware_report(
+        activation_volumes=cnn_activation_volumes(CFG))
     print(f"crossbar cell savings: {rep.cell_savings:.3f}  "
           f"crossbars: {rep.xbars_needed}/{rep.xbars_unpruned} "
           f"(-{rep.xbar_savings:.1%})  "
@@ -88,9 +54,11 @@ def main():
 
     vols = cnn_activation_volumes(CFG)
     unpruned = pm.conv_layer_perf(
-        CFG, {l.path: l.stats.n_xbars for l in rep.layers}, vols)
+        CFG, {l.path: l.stats.n_xbars for l in rep.layers}, vols,
+        act_cells_per_xbar=session.geometry.cells)
     pruned = pm.conv_layer_perf(
-        CFG, {l.path: l.stats.xbars_needed_packed for l in rep.layers}, vols)
+        CFG, {l.path: l.stats.xbars_needed_packed for l in rep.layers}, vols,
+        act_cells_per_xbar=session.geometry.cells)
     print(f"ReRAM iso-area training speedup: "
           f"{pm.iso_area_speedup(unpruned, pruned):.2f}x")
 
@@ -107,7 +75,8 @@ def main():
         jax.tree_util.tree_map_with_path(grab, res.masks,
                                          is_leaf=lambda x: x is None)
         from repro.core.crossbar import conv_to_matrix
-        dens = tile_density(conv_to_matrix(leaf), 128, 128)
+        dens = tile_density(conv_to_matrix(leaf),
+                            session.geometry.rows, session.geometry.cols)
         print(f"bsmm tile density for {pth}: {dens:.2f} "
               f"(TPU compute saving {1 - dens:.1%})")
 

@@ -1,10 +1,12 @@
 """Batched serving demo: ServeEngine over a pruned (ticket) LM.
 
-    PYTHONPATH=src python examples/serve_pruned.py [--arch yi-6b]
+    PYTHONPATH=src python examples/serve_pruned.py [--arch yi-6b] \
+        [--temperature 0.8]
 
 Builds a reduced config of the chosen architecture, prunes it
-crossbar-aware, and serves a queue of batched requests through
-prefill + decode with KV caches.
+crossbar-aware through ``repro.api.structured_prune``, and serves a
+queue of batched requests through prefill + decode with KV caches —
+greedy by default, temperature sampling with ``--temperature``.
 """
 import argparse
 import sys
@@ -13,11 +15,9 @@ sys.path.insert(0, "src")
 import jax
 import numpy as np
 
-from repro.configs import get_arch, scaled_down
-from repro.core import algorithm as alg
-from repro.core.masks import apply_masks, lm_prunable, make_masks, \
-    sparsity_fraction
-from repro.models import transformer as tfm
+from repro.api import LMAdapter, structured_prune
+from repro.configs import PruneConfig, get_arch, scaled_down
+from repro.core.masks import apply_masks, lm_prunable, sparsity_fraction
 from repro.serve import Request, ServeEngine
 
 
@@ -26,22 +26,26 @@ def main():
     ap.add_argument("--arch", default="yi-6b")
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy; >0 = temperature sampling")
+    ap.add_argument("--sample-seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = scaled_down(get_arch(args.arch), dtype="float32")
-    rng = jax.random.PRNGKey(0)
-    params = tfm.init_params(rng, cfg)
+    adapter = LMAdapter(cfg)
+    params = adapter.init_params(jax.random.PRNGKey(0))
 
     # prune the serving weights (tile/crossbar-aware)
-    masks = make_masks(params, lm_prunable)
-    masks = alg.prune_step(params, masks, "filter", 0.2, lambda p: False)
-    masks = alg.prune_step(params, masks, "index", 0.2, lambda p: False)
+    masks = structured_prune(params, [("filter", 0.2), ("index", 0.2)],
+                             prunable=lm_prunable, cfg=PruneConfig())
     params = apply_masks(params, masks)
     print(f"serving {cfg.name} at {sparsity_fraction(masks):.1%} sparsity")
 
-    engine = ServeEngine(params=params, cfg=cfg, prefill_fn=tfm.prefill,
-                         decode_fn=tfm.decode_step, batch_slots=4,
-                         capacity=128)
+    prefill_fn, decode_fn = adapter.serve_fns()
+    engine = ServeEngine(params=params, cfg=cfg, prefill_fn=prefill_fn,
+                         decode_fn=decode_fn, batch_slots=4, capacity=128,
+                         temperature=args.temperature,   # <=0 → greedy
+                         sample_seed=args.sample_seed)
     rng_np = np.random.RandomState(0)
     for i in range(args.requests):
         prompt = rng_np.randint(0, 200, size=rng_np.randint(4, 24))
@@ -51,7 +55,9 @@ def main():
     for r in sorted(done, key=lambda r: r.uid)[:6]:
         print(f"req {r.uid:02d}: prompt[{len(r.prompt):2d} toks] → "
               f"{r.tokens}")
-    print(f"served {len(done)} requests in batches of ≤4")
+    mode = ("greedy" if args.temperature <= 0
+            else f"T={args.temperature:.2f}")
+    print(f"served {len(done)} requests in batches of ≤4 ({mode})")
 
 
 if __name__ == "__main__":

@@ -1,7 +1,8 @@
 """End-to-end driver: train a ~100M-parameter LM for a few hundred
-steps with the full production stack — Trainer (checkpoint/resume/
-straggler policy), sharded-ready model code, masked optimizer — then
-apply crossbar-aware (tile) pruning and continue training the ticket.
+steps with the full production stack — ``LMAdapter`` over ``Trainer``
+(checkpoint/resume/straggler policy), sharded-ready model code, masked
+optimizer — then apply crossbar-aware (tile) pruning via
+``repro.api.structured_prune`` and continue training the ticket.
 
     PYTHONPATH=src python examples/train_lm_pruned.py \
         [--steps 200] [--prune-steps 100] [--ckpt /tmp/lm_ckpt]
@@ -10,22 +11,16 @@ The model is the xlstm-125m architecture scaled to ~100M params with a
 small vocab (CPU-friendly); the same script runs any --arch.
 """
 import argparse
-import dataclasses
 import sys
 sys.path.insert(0, "src")
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro.configs import get_arch, scaled_down
-from repro.core import algorithm as alg
-from repro.core.masks import (apply_masks, lm_prunable, make_masks,
-                              sparsity_fraction)
-from repro.data import DataPipeline, SyntheticLM
-from repro.models import transformer as tfm
-from repro.optim import adamw, constant, masked, warmup_cosine
-from repro.train import Trainer
+from repro.api import LMAdapter, structured_prune
+from repro.configs import PruneConfig, get_arch, scaled_down
+from repro.core.hardware import analyze_masks
+from repro.core.masks import apply_masks, lm_prunable, sparsity_fraction
+from repro.data import SyntheticLM
 
 
 def build(arch: str):
@@ -50,55 +45,38 @@ def main():
     args = ap.parse_args()
 
     cfg = build(args.arch)
-    rng = jax.random.PRNGKey(0)
-    params = tfm.init_params(rng, cfg)
+    adapter = LMAdapter(cfg, data=SyntheticLM(vocab_size=256,
+                                              seq_len=args.seq, seed=0),
+                        steps=args.steps, batch_size=args.batch,
+                        peak_lr=3e-4, warmup=20, log_every=25,
+                        step_deadline_s=30.0)
+    params = adapter.init_params(jax.random.PRNGKey(0))
     n = sum(x.size for x in jax.tree.leaves(params))
     print(f"== {cfg.name}: {n / 1e6:.1f}M params, "
           f"{args.steps} steps @ B={args.batch} S={args.seq} ==")
 
-    gen = SyntheticLM(vocab_size=256, seq_len=args.seq, seed=0)
-
-    def batch_fn(step):
-        b = gen.batch(step, args.batch)
-        return {"tokens": jnp.asarray(b["tokens"]),
-                "labels": jnp.asarray(b["labels"])}
-
-    def loss_fn(params, batch):
-        loss, metrics = tfm.loss_fn(params, cfg, batch)
-        return loss, metrics
-
-    opt = adamw(warmup_cosine(3e-4, 20, args.steps))
-    trainer = Trainer(loss_fn=loss_fn, optimizer=opt, params=params,
-                      data_iter=DataPipeline(batch_fn, prefetch=0),
-                      ckpt_dir=args.ckpt, ckpt_every=50, async_ckpt=True,
-                      step_deadline_s=30.0)
-    m0 = trainer.run(args.steps, log_every=25)
-    print(f"dense phase done: loss {m0['loss']:.4f} "
+    trained = adapter.train(params, None, ckpt_dir=args.ckpt)
+    print(f"dense phase done: loss {adapter.last_metrics['loss']:.4f} "
           f"(resumable checkpoints in {args.ckpt})")
 
     # ---- crossbar-aware pruning of the trained LM ----
-    trained = trainer.state.params
-    masks = make_masks(trained, lm_prunable)
-    for gran, frac in (("filter", 0.2), ("channel", 0.2), ("index", 0.2)):
-        masks = alg.prune_step(trained, masks, gran, frac, lambda p: False)
+    prune_cfg = PruneConfig()
+    masks = structured_prune(
+        trained, [("filter", 0.2), ("channel", 0.2), ("index", 0.2)],
+        prunable=lm_prunable, cfg=prune_cfg)
     print(f"tile-pruned to sparsity {sparsity_fraction(masks):.1%} "
           f"(filter→channel→index, crossbar-aware)")
 
     # lottery rewind to the dense-phase start, retrain the ticket
     pruned = apply_masks(trained, masks)
-    opt2 = masked(adamw(constant(1e-4)), masks)
-    trainer2 = Trainer(loss_fn=loss_fn, optimizer=opt2, params=pruned,
-                       data_iter=DataPipeline(batch_fn,
-                                              start_step=args.steps,
-                                              prefetch=0),
-                       ckpt_dir=None)
-    m1 = trainer2.run(args.prune_steps, log_every=20)
-    print(f"pruned fine-tune: loss {m1['loss']:.4f} "
-          f"(dense was {m0['loss']:.4f})")
+    adapter.train(pruned, masks, steps=args.prune_steps,
+                  start_step=args.steps, learning_rate=1e-4)
+    print(f"pruned fine-tune: loss {adapter.last_metrics['loss']:.4f}")
 
-    # hardware view of the pruned LM
-    from repro.core.hardware import analyze_masks
-    rep = analyze_masks(masks, lambda p: False)
+    # hardware view of the pruned LM at the config's crossbar geometry
+    rep = analyze_masks(masks, lambda p: False,
+                        xbar_rows=prune_cfg.xbar_rows,
+                        xbar_cols=prune_cfg.xbar_cols)
     print(f"crossbars: {rep.xbars_needed}/{rep.xbars_unpruned} "
           f"(-{rep.xbar_savings:.1%}); cell savings {rep.cell_savings:.1%}")
 

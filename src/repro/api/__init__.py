@@ -1,0 +1,27 @@
+"""``repro.api`` — the single entry point for pruning, training, and
+serving pruned models.
+
+    from repro.api import CNNAdapter, PruningSession
+    session = PruningSession(CNNAdapter(cfg), PruneConfig())
+    result = session.run()                       # resumable Algorithm 1
+    session.export_ticket("/tickets/vgg16")      # winning ticket out
+    engine = session.serve_engine()              # LMs: straight to serving
+
+Layering:
+
+    adapters.py — ModelAdapter protocol + CNN/LM adapters on Trainer
+    session.py  — PruningSession (events, checkpoint/resume, handoff)
+
+plus ``structured_prune`` for one-shot (no accuracy gate) schedules.
+Strategy registration for custom granularities lives in
+``repro.core.strategies``; re-exported here for convenience.
+"""
+from repro.api.adapters import (  # noqa: F401
+    CNNAdapter, FunctionAdapter, LMAdapter, ModelAdapter,
+)
+from repro.api.session import PruningSession, structured_prune  # noqa: F401
+from repro.core.algorithm import PruneEvent, PruneResult  # noqa: F401
+from repro.core.strategies import (  # noqa: F401
+    GranularityStrategy, TileGeometry, available_strategies, get_strategy,
+    register_strategy,
+)

@@ -1,0 +1,258 @@
+"""Model adapters: bundle init/train/eval/prunability behind one protocol.
+
+Algorithm 1 is model-agnostic — the only model-specific pieces are how
+to initialise parameters, train them under a mask, score them, and
+decide which leaves are prunable.  A ``ModelAdapter`` packages those
+four so ``PruningSession`` (and the examples) never hand-roll training
+closures.
+
+``CNNAdapter`` and ``LMAdapter`` are built on ``repro.train.loop.
+Trainer`` — the same operational layer (jitted masked steps, data
+pipeline, checkpoint/resume) used for production training, so a model
+pruned through the session fine-tunes and serves with zero glue code.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.masks import (apply_masks, cnn_prunable, lm_prunable,
+                              make_masks)
+from repro.data import DataPipeline, SyntheticImages, SyntheticLM
+from repro.optim import (adamw, constant, exponential_epoch_decay, masked,
+                         sgd, warmup_cosine)
+from repro.train import Trainer
+
+
+class ModelAdapter:
+    """Protocol: everything a pruning session needs from a model.
+
+    ``train``/``evaluate`` take ``masks=None`` for the dense model.
+    ``evaluate`` returns a scalar where HIGHER IS BETTER (accuracy for
+    classifiers; adapters for likelihood models return negative loss).
+    """
+
+    cfg: Any = None
+
+    def init_params(self, rng):
+        raise NotImplementedError
+
+    def train(self, params, masks=None, steps: Optional[int] = None):
+        raise NotImplementedError
+
+    def evaluate(self, params, masks=None) -> float:
+        raise NotImplementedError
+
+    def prunable(self, path: str, leaf) -> bool:
+        raise NotImplementedError
+
+    def conv_pred(self, path: str) -> bool:
+        return False
+
+    def serve_fns(self) -> Tuple[Callable, Callable]:
+        """(prefill_fn, decode_fn) for ServeEngine handoff (LMs only)."""
+        raise NotImplementedError(
+            f"{type(self).__name__} does not support serving")
+
+
+@dataclasses.dataclass
+class FunctionAdapter(ModelAdapter):
+    """Wrap plain closures — the bridge for ``core.algorithm.realprune``
+    callers and for scripted/deterministic tests."""
+
+    params: Any = None
+    train_fn: Callable = None           # (params, masks) -> params
+    eval_fn: Callable = None            # (params, masks) -> float
+    prunable: Callable = None           # (path, leaf) -> bool
+    conv_pred: Callable = None          # (path) -> bool
+    cfg: Any = None
+
+    def init_params(self, rng):
+        return jax.tree.map(lambda x: x, self.params)
+
+    def train(self, params, masks=None, steps=None):
+        return self.train_fn(params, masks)
+
+    def evaluate(self, params, masks=None) -> float:
+        return float(self.eval_fn(params, masks))
+
+
+class CNNAdapter(ModelAdapter):
+    """CNN (VGG/ResNet family) on image batches, trained via ``Trainer``.
+
+    BatchNorm statistics thread through the Trainer's aux-state channel;
+    each ``train`` call restarts them from initialisation (every prune
+    iteration retrains the rewound ticket from scratch, paper line 3).
+    """
+
+    def __init__(self, cfg, *, data=None, steps: int = 80,
+                 batch_size: int = 64, lr: float = 0.05,
+                 lr_decay: float = 0.95, decay_every: Optional[int] = None,
+                 eval_batches: int = 3, eval_batch_size: int = 128,
+                 momentum: float = 0.9, log_every: int = 0):
+        from repro.models import cnn as cnn_lib
+        self._cnn = cnn_lib
+        self.cfg = cfg
+        self.data = data or SyntheticImages(image_size=cfg.image_size,
+                                            noise=0.25)
+        self.steps = steps
+        self.batch_size = batch_size
+        self.lr, self.lr_decay = lr, lr_decay
+        self.decay_every = decay_every
+        self.eval_batches = eval_batches
+        self.eval_batch_size = eval_batch_size
+        self.momentum = momentum
+        self.log_every = log_every
+        self._bn0 = None
+        self._bn = None
+
+    # -- protocol ----------------------------------------------------------
+    def init_params(self, rng):
+        params, bn = self._cnn.init_params(rng, self.cfg)
+        self._bn0 = bn
+        self._bn = bn
+        return params
+
+    def prunable(self, path, leaf):
+        return cnn_prunable(path, leaf)
+
+    def conv_pred(self, path):
+        return "convs" in path or "shortcuts" in path
+
+    def _batch(self, step, size):
+        b = self.data.batch(step, size)
+        return {"images": jnp.asarray(b["images"]),
+                "labels": jnp.asarray(b["labels"])}
+
+    def train(self, params, masks=None, steps=None):
+        if self._bn0 is None:
+            raise RuntimeError("call init_params before train")
+        steps = steps or self.steps
+        sched = exponential_epoch_decay(
+            self.lr, self.lr_decay, self.decay_every or max(steps // 2, 1))
+        opt = sgd(sched, momentum=self.momentum)
+        if masks is not None:
+            opt = masked(opt, masks)
+            params = apply_masks(params, masks)
+
+        def loss(p, state, batch):
+            l, (new_state, _) = self._cnn.loss_fn(p, state, self.cfg, batch,
+                                                  train=True)
+            return l, (new_state, {})
+
+        # donate=False: the session re-applies masks to the same w_init
+        # snapshot across iterations, so caller buffers must survive
+        trainer = Trainer(
+            loss_fn=loss, optimizer=opt, params=params,
+            data_iter=DataPipeline(
+                lambda s: self._batch(s, self.batch_size), prefetch=0),
+            ckpt_dir=None, aux_state=self._bn0, donate=False)
+        trainer.run(steps, log_every=self.log_every)
+        self._bn = trainer.state.aux
+        return trainer.state.params
+
+    def evaluate(self, params, masks=None) -> float:
+        accs = []
+        for i in range(self.eval_batches):
+            b = self._batch(10_000 + i, self.eval_batch_size)
+            accs.append(float(self._cnn.accuracy(
+                params, self._bn, self.cfg, b["images"], b["labels"])))
+        return float(np.mean(accs))
+
+
+class LMAdapter(ModelAdapter):
+    """Transformer-family LM on synthetic token streams via ``Trainer``.
+
+    ``evaluate`` returns NEGATIVE mean cross-entropy on held-out batches
+    (higher is better, so the session's accuracy gate applies
+    unchanged; set ``PruneConfig.accuracy_tolerance`` in nats).
+    """
+
+    def __init__(self, cfg, *, data=None, steps: int = 100,
+                 batch_size: int = 8, seq_len: int = 128,
+                 peak_lr: float = 3e-4, warmup: int = 20,
+                 eval_batches: int = 2, microbatch: Optional[int] = None,
+                 remat: bool = False, log_every: int = 0,
+                 step_deadline_s: Optional[float] = None):
+        from repro.models import transformer as tfm
+        self._tfm = tfm
+        self.cfg = cfg
+        self.data = data or SyntheticLM(
+            vocab_size=min(int(cfg.vocab_size), 256), seq_len=seq_len,
+            seed=0)
+        self.steps = steps
+        self.batch_size = batch_size
+        self.peak_lr, self.warmup = peak_lr, warmup
+        self.eval_batches = eval_batches
+        self.microbatch, self.remat = microbatch, remat
+        self.log_every = log_every
+        self.step_deadline_s = step_deadline_s
+        self.last_metrics: Dict[str, float] = {}
+
+    # -- protocol ----------------------------------------------------------
+    def init_params(self, rng):
+        return self._tfm.init_params(rng, self.cfg)
+
+    def prunable(self, path, leaf):
+        return lm_prunable(path, leaf)
+
+    def conv_pred(self, path):
+        return False
+
+    def _batch(self, step):
+        b = self.data.batch(step, self.batch_size)
+        return {"tokens": jnp.asarray(b["tokens"]),
+                "labels": jnp.asarray(b["labels"])}
+
+    def _loss(self, params, batch):
+        return self._tfm.loss_fn(params, self.cfg, batch)
+
+    def make_trainer(self, params, masks=None, *, steps: Optional[int] = None,
+                     start_step: int = 0, ckpt_dir: Optional[str] = None,
+                     ckpt_every: int = 50, async_ckpt: bool = True,
+                     learning_rate: Optional[float] = None) -> Trainer:
+        """A fully-wired Trainer for these weights — the session/ticket
+        handoff point for long runs that need their own checkpoints."""
+        steps = steps or self.steps
+        sched = (constant(learning_rate) if learning_rate is not None
+                 else warmup_cosine(self.peak_lr,
+                                    min(self.warmup, max(steps // 2, 1)),
+                                    steps))
+        opt = adamw(sched)
+        if masks is not None:
+            opt = masked(opt, masks)
+            params = apply_masks(params, masks)
+        return Trainer(
+            loss_fn=self._loss, optimizer=opt, params=params,
+            data_iter=DataPipeline(self._batch, start_step=start_step,
+                                   prefetch=0),
+            ckpt_dir=ckpt_dir, ckpt_every=ckpt_every, async_ckpt=async_ckpt,
+            microbatch=self.microbatch, remat=self.remat, donate=False,
+            step_deadline_s=self.step_deadline_s)
+
+    def train(self, params, masks=None, steps=None, *, start_step: int = 0,
+              ckpt_dir: Optional[str] = None,
+              learning_rate: Optional[float] = None):
+        trainer = self.make_trainer(params, masks, steps=steps,
+                                    start_step=start_step, ckpt_dir=ckpt_dir,
+                                    learning_rate=learning_rate)
+        self.last_metrics = trainer.run(steps or self.steps,
+                                        log_every=self.log_every)
+        return trainer.state.params
+
+    def evaluate(self, params, masks=None) -> float:
+        losses = []
+        for i in range(self.eval_batches):
+            b = self.data.batch(10_000 + i, self.batch_size)
+            batch = {"tokens": jnp.asarray(b["tokens"]),
+                     "labels": jnp.asarray(b["labels"])}
+            loss, _ = self._tfm.loss_fn(params, self.cfg, batch)
+            losses.append(float(loss))
+        return -float(np.mean(losses))
+
+    def serve_fns(self):
+        return self._tfm.prefill, self._tfm.decode_step

@@ -1,0 +1,222 @@
+"""PruningSession: Algorithm 1 as a resumable, observable session.
+
+    adapter = CNNAdapter(cfg)
+    session = PruningSession(adapter, PruneConfig(prune_fraction=0.25),
+                             ckpt_dir="/ckpt/prune")
+    result = session.run()          # train → prune → gate → rewind, resumable
+
+The session owns the loop state (iteration, granularity cursor, masks,
+baseline accuracy, event history) and checkpoints it through
+``CheckpointManager`` after every iteration, so a long prune run killed
+by preemption resumes from the last completed iteration and produces
+the same ``PruneResult`` as an uninterrupted run (adapters are
+deterministic given their seed).  Each iteration emits a streaming
+``PruneEvent`` to registered callbacks.
+
+Crossbar geometry comes from ``PruneConfig.xbar_rows/xbar_cols`` and is
+threaded into scoring, zeroing, and the hardware report — no hardcoded
+128s anywhere on the session path.
+"""
+from __future__ import annotations
+
+import logging
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs.base import PruneConfig
+from repro.core import lottery
+from repro.core.algorithm import PruneEvent, PruneResult, prune_step
+from repro.core.hardware import HWReport, analyze_masks
+from repro.core.masks import apply_masks, make_masks, sparsity_fraction
+from repro.core.strategies import TileGeometry
+
+log = logging.getLogger("realprune.session")
+
+_HIST_COLS = 6        # iteration, gran_idx, s_before, s_after, acc, accepted
+
+
+def structured_prune(params, schedule: Sequence[Tuple[str, float]], *,
+                     prunable: Callable, conv_pred: Callable = None,
+                     cfg: Optional[PruneConfig] = None, block: int = 32):
+    """One-shot crossbar-aware pruning: apply a fixed (granularity,
+    fraction) schedule to trained weights without the accuracy gate.
+
+    The config's crossbar geometry drives every step.  Returns masks.
+    """
+    cfg = cfg or PruneConfig()
+    geom = TileGeometry.from_config(cfg)
+    conv_pred = conv_pred or (lambda p: False)
+    masks = make_masks(params, prunable)
+    for gran, frac in schedule:
+        masks = prune_step(params, masks, gran, frac, conv_pred,
+                           block=block, geometry=geom)
+    return masks
+
+
+class PruningSession:
+    """Drive Algorithm 1 over a ``ModelAdapter`` with resume + events."""
+
+    def __init__(self, adapter, cfg: Optional[PruneConfig] = None, *,
+                 granularities: Optional[Sequence[str]] = None,
+                 baseline_accuracy: Optional[float] = None,
+                 seed: int = 0, block: int = 32,
+                 ckpt_dir: Optional[str] = None, keep: int = 3,
+                 callbacks: Sequence[Callable[[PruneEvent], None]] = ()):
+        self.adapter = adapter
+        self.cfg = cfg or PruneConfig()
+        self.geometry = TileGeometry.from_config(self.cfg)
+        self.grans = list(granularities or self.cfg.granularities)
+        self.baseline_accuracy = baseline_accuracy
+        self.seed = seed
+        self.block = block
+        self.callbacks = list(callbacks)
+        self.ckpt = (CheckpointManager(ckpt_dir, keep=keep,
+                                       async_save=False)
+                     if ckpt_dir else None)
+        self.result: Optional[PruneResult] = None
+        self._w_init = None
+
+    # -- checkpoint plumbing ----------------------------------------------
+    def _hist_array(self, history: List[PruneEvent]) -> np.ndarray:
+        rows = [[e.iteration, self.grans.index(e.granularity),
+                 e.sparsity_before, e.sparsity_after, e.accuracy,
+                 float(e.accepted)] for e in history]
+        return np.asarray(rows, np.float64).reshape(len(rows), _HIST_COLS)
+
+    def _hist_events(self, arr) -> List[PruneEvent]:
+        out = []
+        for row in np.asarray(arr).reshape(-1, _HIST_COLS):
+            out.append(PruneEvent(int(round(row[0])),
+                                  self.grans[int(round(row[1]))],
+                                  float(row[2]), float(row[3]),
+                                  float(row[4]), bool(row[5] > 0.5)))
+        return out
+
+    def _save(self, itr, g_idx, masks, baseline, history):
+        if self.ckpt is None:
+            return
+        self.ckpt.save(itr, {
+            "masks": masks,
+            "g_idx": np.asarray(g_idx, np.int32),
+            "baseline": np.asarray(baseline, np.float64),
+            "hist": self._hist_array(history)}, blocking=True)
+
+    def _restore(self, masks_template):
+        if self.ckpt is None:
+            return None
+        tmpl = {"masks": masks_template,
+                "g_idx": jnp.zeros((), jnp.int32),
+                "baseline": jnp.zeros((), jnp.float32),
+                "hist": jnp.zeros((0, _HIST_COLS), jnp.float32)}
+        step, tree = self.ckpt.restore(tmpl)
+        if step is None:
+            return None
+        history = self._hist_events(tree["hist"])
+        log.info("resumed pruning session at iteration %d "
+                 "(%d events, sparsity %.3f)", step, len(history),
+                 sparsity_fraction(tree["masks"]))
+        return (step, int(tree["g_idx"]), tree["masks"],
+                float(tree["baseline"]), history)
+
+    # -- the loop ----------------------------------------------------------
+    def run(self, rng=None) -> PruneResult:
+        """Run (or resume) Algorithm 1 to completion."""
+        cfg, adapter = self.cfg, self.adapter
+        if rng is None:
+            rng = jax.random.PRNGKey(self.seed)
+        w_init = adapter.init_params(rng)                   # t=0 snapshot
+        self._w_init = w_init
+        masks = make_masks(w_init, adapter.prunable)
+        itr, g_idx = 0, 0
+        history: List[PruneEvent] = []
+        baseline = self.baseline_accuracy
+
+        restored = self._restore(masks)
+        if restored is not None:
+            itr, g_idx, masks, baseline, history = restored
+        elif baseline is None:
+            trained = adapter.train(w_init, masks)          # dense baseline
+            baseline = float(adapter.evaluate(trained, masks))
+            log.info("baseline accuracy: %.4f", baseline)
+            self._save(0, 0, masks, baseline, history)
+
+        params = apply_masks(w_init, masks)
+        while itr < cfg.max_iters and g_idx < len(self.grans):
+            itr += 1
+            trained = adapter.train(params, masks)              # line 3
+            cand = prune_step(trained, masks, self.grans[g_idx],  # line 4
+                              cfg.prune_fraction, adapter.conv_pred,
+                              block=self.block, geometry=self.geometry)
+            cand_params = apply_masks(trained, cand)
+            acc = float(adapter.evaluate(cand_params, cand))     # line 5
+            s_before = sparsity_fraction(masks)
+            s_after = sparsity_fraction(cand)
+            ok = acc >= baseline - cfg.accuracy_tolerance
+            event = PruneEvent(itr, self.grans[g_idx], s_before, s_after,
+                               acc, ok)
+            history.append(event)
+            log.info("iter %d [%s] sparsity %.3f->%.3f acc %.4f (%s)", itr,
+                     self.grans[g_idx], s_before, s_after, acc,
+                     "keep" if ok else "undo")
+            if ok:
+                masks = cand
+            else:
+                g_idx += 1                                   # lines 6-7
+            params = apply_masks(w_init, masks)              # line 8
+            self._save(itr, g_idx, masks, baseline, history)
+            for cb in self.callbacks:
+                cb(event)
+        final_params = apply_masks(w_init, masks)
+        self.result = PruneResult(masks=masks, params=final_params,
+                                  history=history)
+        return self.result
+
+    # -- handoffs ----------------------------------------------------------
+    def _require_result(self) -> PruneResult:
+        if self.result is None:
+            raise RuntimeError("run() the session first")
+        return self.result
+
+    @property
+    def init_params(self):
+        """The t=0 snapshot the winning ticket rewinds to."""
+        if self._w_init is None:
+            raise RuntimeError("run() the session first")
+        return self._w_init
+
+    def export_ticket(self, path: str) -> None:
+        """Serialise the winning ticket (w_init, masks) — paper §V.C."""
+        res = self._require_result()
+        lottery.export_ticket(path, lottery.snapshot(self._w_init),
+                              res.masks)
+
+    def finetune(self, steps: Optional[int] = None, **kwargs):
+        """Continue training the ticket through the adapter's Trainer."""
+        res = self._require_result()
+        return self.adapter.train(res.params, res.masks, steps, **kwargs)
+
+    def serve_engine(self, *, batch_slots: int = 8, capacity: int = 512,
+                     greedy: Optional[bool] = None, temperature: float = 0.0,
+                     sample_seed: int = 0):
+        """Hand the pruned weights straight to a ``ServeEngine``."""
+        from repro.serve import ServeEngine
+        res = self._require_result()
+        prefill_fn, decode_fn = self.adapter.serve_fns()
+        return ServeEngine(params=res.params, cfg=self.adapter.cfg,
+                           prefill_fn=prefill_fn, decode_fn=decode_fn,
+                           batch_slots=batch_slots, capacity=capacity,
+                           greedy=greedy, temperature=temperature,
+                           sample_seed=sample_seed)
+
+    def hardware_report(self, activation_volumes=None) -> HWReport:
+        """Crossbar accounting of the final masks at the session's
+        (config-driven) geometry."""
+        res = self._require_result()
+        return analyze_masks(res.masks, self.adapter.conv_pred,
+                             activation_volumes=activation_volumes,
+                             xbar_rows=self.geometry.rows,
+                             xbar_cols=self.geometry.cols)

@@ -1,17 +1,31 @@
 """ReaLPrune core: the paper's contribution as a composable library.
 
-crossbar.py — weight→crossbar unroll mapping + tile accounting
-masks.py    — mask pytrees, prunability predicates
-scoring.py  — filter/channel/index (+ltp/block/cap) group scoring
-realprune.py— Algorithm 1 (iterative coarse→fine prune + rewind)
-lottery.py  — winning-ticket snapshot/rewind/export
-hardware.py — crossbar savings accounting (Figs 2 & 6)
+Layering (bottom → top):
+
+crossbar.py   — weight→crossbar unroll mapping + tile accounting
+                (geometry-parametric: xr×xc, default 128×128)
+masks.py      — mask pytrees, prunability predicates
+strategies.py — GranularityStrategy registry: filter/channel/index
+                (+ltp/block/cap/xbar) group shapes, pluggable by name
+scoring.py    — global lowest-percentile group selection + name dispatch
+algorithm.py  — prune_step primitive + realprune/lottery_baseline
+                compatibility shims over repro.api.PruningSession
+lottery.py    — winning-ticket snapshot/rewind/export
+hardware.py   — crossbar savings accounting (Figs 2 & 6)
 perf_model.py — pipelined ReRAM execution model (Figs 7 & 8)
+
+The user-facing entry point is ``repro.api`` (ModelAdapter +
+PruningSession); this package stays framework-light and host-side so
+pruning decisions remain a one-time offline effort (paper §V.C).
 """
 from repro.core.masks import (  # noqa: F401
     apply_masks, cnn_is_conv, cnn_prunable, lm_prunable, make_masks,
     mask_grads, sparsity, sparsity_fraction,
 )
+from repro.core.strategies import (  # noqa: F401
+    GranularityStrategy, GroupSet, TileGeometry, available_strategies,
+    get_strategy, register_strategy,
+)
 from repro.core.algorithm import (  # noqa: F401
-    PruneResult, lottery_baseline, prune_step, realprune,
+    PruneEvent, PruneResult, lottery_baseline, prune_step, realprune,
 )

@@ -12,17 +12,20 @@
     8:     reinitialize remaining weights with w_initial
     return pruned model
 
-The engine is model-agnostic: callers supply ``train_fn`` and
-``eval_fn`` closures plus a prunability predicate.  Pruning decisions
-run host-side (numpy) — pruning is a one-time offline effort (paper
-§V.C); training/eval run in JAX.
+The loop itself lives in ``repro.api.session.PruningSession`` (which
+adds streaming events, checkpoint/resume, and ticket handoff);
+``realprune`` / ``lottery_baseline`` here are thin compatibility shims
+that wrap caller-supplied ``train_fn``/``eval_fn`` closures in a
+``FunctionAdapter`` and run a session.  ``prune_step`` — one
+crossbar-aware prune at a named granularity — remains the shared
+primitive.  Pruning decisions run host-side (numpy) — pruning is a
+one-time offline effort (paper §V.C); training/eval run in JAX.
 """
 from __future__ import annotations
 
-import dataclasses
 import logging
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -31,7 +34,8 @@ import numpy as np
 from repro.configs.base import PruneConfig
 from repro.core import masks as masks_lib
 from repro.core import scoring
-from repro.core.masks import apply_masks, path_str, sparsity_fraction
+from repro.core.masks import path_str, sparsity_fraction
+from repro.core.strategies import TileGeometry
 
 log = logging.getLogger("realprune")
 
@@ -80,10 +84,12 @@ def _leaf_items(params, masks, prunable_conv: Callable[[str], bool]):
 
 
 def prune_step(params, masks, granularity: str, fraction: float,
-               conv_pred: Callable[[str], bool], block: int = 32):
+               conv_pred: Callable[[str], bool], block: int = 32,
+               geometry: Optional[TileGeometry] = None):
     """One crossbar-aware prune of ``fraction`` of remaining weights."""
     items = _leaf_items(params, masks, conv_pred)
-    group_sets = [scoring.group_scores(p, w, m, granularity, conv)
+    group_sets = [scoring.group_scores(p, w, m, granularity, conv,
+                                       block=block, geometry=geometry)
                   for (p, w, m, conv) in items]
     remaining = sum(int(m.sum()) for (_, _, m, _) in items)
     kills = scoring.select_global_prune(group_sets, fraction, remaining)
@@ -120,45 +126,19 @@ def realprune(
     baseline_accuracy: Optional[float] = None,
     granularities: Optional[Sequence[str]] = None,
 ) -> PruneResult:
-    """Run Algorithm 1 and return the sparsest no-accuracy-drop model."""
-    w_init = jax.tree.map(lambda x: x, init_params)     # t=0 snapshot
-    masks = masks_lib.make_masks(init_params, prunable)
-    grans = list(granularities or cfg.granularities)
-    g_idx = 0
-    history: List[PruneEvent] = []
+    """Run Algorithm 1 and return the sparsest no-accuracy-drop model.
 
-    if baseline_accuracy is None:
-        trained = train_fn(w_init, masks)
-        baseline_accuracy = float(eval_fn(trained, masks))
-        log.info("baseline accuracy: %.4f", baseline_accuracy)
+    Compatibility shim over ``repro.api.PruningSession`` — prefer the
+    session API (adapters, events, checkpoint/resume) in new code.
+    """
+    from repro.api.adapters import FunctionAdapter
+    from repro.api.session import PruningSession
 
-    params = w_init
-    best = (masks, 0.0)
-    itr = 0
-    while itr < cfg.max_iters and g_idx < len(grans):
-        itr += 1
-        trained = train_fn(params, masks)                       # line 3
-        cand = prune_step(trained, masks, grans[g_idx],          # line 4
-                          cfg.prune_fraction, conv_pred)
-        cand_params = apply_masks(trained, cand)
-        acc = float(eval_fn(cand_params, cand))                  # line 5
-        s_before = sparsity_fraction(masks)
-        s_after = sparsity_fraction(cand)
-        ok = acc >= baseline_accuracy - cfg.accuracy_tolerance
-        history.append(PruneEvent(itr, grans[g_idx], s_before, s_after,
-                                  acc, ok))
-        log.info("iter %d [%s] sparsity %.3f->%.3f acc %.4f (%s)", itr,
-                 grans[g_idx], s_before, s_after, acc,
-                 "keep" if ok else "undo")
-        if ok:
-            masks = cand
-            if s_after > best[1]:
-                best = (cand, s_after)
-        else:
-            g_idx += 1                                           # lines 6-7
-        params = apply_masks(w_init, masks)                      # line 8
-    final_params = apply_masks(w_init, masks)
-    return PruneResult(masks=masks, params=final_params, history=history)
+    adapter = FunctionAdapter(params=init_params, train_fn=train_fn,
+                              eval_fn=eval_fn, prunable=prunable,
+                              conv_pred=conv_pred)
+    return PruningSession(adapter, cfg, granularities=granularities,
+                          baseline_accuracy=baseline_accuracy).run()
 
 
 def lottery_baseline(*, init_params, train_fn, eval_fn, prunable, conv_pred,

@@ -6,7 +6,10 @@ This reproduces the paper's §IV.A mapping exactly (Fig. 3a):
     of shape (IC·K·K, OC) — rows indexed by (ic, kx, ky) so one filter
     *channel* is a contiguous K² row block of one column; one *filter*
     is a whole column; one *index* (ic,kx,ky) is a whole row.
-  * The matrix is tiled into ⌈R/128⌉ × ⌈C/128⌉ crossbars.
+  * The matrix is tiled into ⌈R/xr⌉ × ⌈C/xc⌉ crossbars (xr×xc is the
+    crossbar geometry — the paper's 128×128 by default; every function
+    takes it as a parameter so ``PruneConfig.xbar_rows/xbar_cols``
+    flows through the whole stats path).
   * A crossbar row/column can be power-gated or reused only if every
     cell in it (within that crossbar) is zero (Fig. 2).
 
@@ -121,13 +124,16 @@ class XbarStats:
     xbars_needed_packed: int = 0  # ceil(live cell area / xbar area) (reuse)
     xbars_needed_strict: int = 0  # crossbars containing any non-zero
     live_area: int = 0            # Σ live_rows × live_cols per crossbar
+    xbar_rows: int = XBAR_ROWS    # geometry the stats were computed with
+    xbar_cols: int = XBAR_COLS
 
     def merge(self, o: "XbarStats"):
         for f in ("total_cells", "nonzero_cells", "saved_cells", "n_xbars",
                   "xbars_fully_free", "xbars_needed_strict", "live_area"):
             setattr(self, f, getattr(self, f) + getattr(o, f))
-        # packed count recomputed from live_area by the caller
-        self.xbars_needed_packed = -(-self.live_area // (XBAR_ROWS * XBAR_COLS))
+        # packed count recomputed from live_area under this geometry
+        self.xbars_needed_packed = -(-self.live_area
+                                     // (self.xbar_rows * self.xbar_cols))
 
 
 def xbar_stats(mask_matrix: np.ndarray, xr: int = XBAR_ROWS,
@@ -135,7 +141,8 @@ def xbar_stats(mask_matrix: np.ndarray, xr: int = XBAR_ROWS,
     """mask_matrix: (R, C) of {0,1} — 1 = weight kept."""
     R, C = mask_matrix.shape
     st = XbarStats(total_cells=R * C,
-                   nonzero_cells=int(mask_matrix.sum()))
+                   nonzero_cells=int(mask_matrix.sum()),
+                   xbar_rows=xr, xbar_cols=xc)
     for _, _, rs, cs in iter_xbars(R, C, xr, xc):
         blk = mask_matrix[rs, cs]
         r_live = int((blk.any(axis=1)).sum())

@@ -110,9 +110,15 @@ class HWReport:
 
 
 def analyze_masks(masks, conv_pred: Callable[[str], bool],
-                  activation_volumes: Optional[Dict[str, float]] = None
-                  ) -> HWReport:
-    """Crossbar accounting for every prunable leaf of a mask pytree."""
+                  activation_volumes: Optional[Dict[str, float]] = None,
+                  xbar_rows: int = xb.XBAR_ROWS,
+                  xbar_cols: int = xb.XBAR_COLS) -> HWReport:
+    """Crossbar accounting for every prunable leaf of a mask pytree.
+
+    ``xbar_rows``/``xbar_cols`` set the crossbar geometry for the whole
+    stats path (pass ``PruneConfig.xbar_rows/xbar_cols`` to match the
+    geometry the masks were pruned with).
+    """
     report = HWReport()
     vols = activation_volumes or {}
 
@@ -121,10 +127,10 @@ def analyze_masks(masks, conv_pred: Callable[[str], bool],
             return leaf
         p = path_str(path)
         mats, _ = xb.leaf_matrices(np.asarray(leaf), conv_pred(p))
-        agg = xb.XbarStats()
+        agg = xb.XbarStats(xbar_rows=xbar_rows, xbar_cols=xbar_cols)
         alive_out = total_out = 0
         for b in range(mats.shape[0]):
-            st = xb.xbar_stats(mats[b] != 0)
+            st = xb.xbar_stats(mats[b] != 0, xr=xbar_rows, xc=xbar_cols)
             agg.merge(st)
             alive_out += int(xb.alive_columns(mats[b] != 0).sum())
             total_out += mats[b].shape[1]

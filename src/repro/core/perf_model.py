@@ -51,12 +51,16 @@ class LayerPerf:
 def conv_layer_perf(cfg, xbars_per_layer: Dict[str, int],
                     act_volumes: Optional[Dict[str, float]] = None,
                     cells_per_weight: int = CELLS_PER_WEIGHT,
-                    pipelined_training: bool = True) -> List[LayerPerf]:
+                    pipelined_training: bool = True,
+                    act_cells_per_xbar: float = ACT_CELLS_PER_XBAR
+                    ) -> List[LayerPerf]:
     """Build LayerPerf list for a CNNConfig given per-layer crossbar needs.
 
     ``xbars_per_layer`` counts single-cell-per-weight crossbars (the
     mapping unit of core.crossbar); the 16-bit/2-bit-cell encoding
     multiplies physical crossbars by ``cells_per_weight``.
+    ``act_cells_per_xbar`` is the crossbar cell capacity — pass
+    ``xbar_rows * xbar_cols`` when using non-default geometry.
 
     Pipelined training (PipeLayer [1]) keeps layer l's activations
     resident until the backward pass returns to it: in-flight copies ≈
@@ -73,7 +77,7 @@ def conv_layer_perf(cfg, xbars_per_layer: Dict[str, int],
             size //= spec.stride
         copies = 2 * (L - i) if pipelined_training else 1
         act_xb = np.ceil(acts.get(f"convs/{i}/w", 0.0) * copies
-                         * cells_per_weight / ACT_CELLS_PER_XBAR)
+                         * cells_per_weight / act_cells_per_xbar)
         layers.append(LayerPerf(
             f"C{i + 1}", float(size * size),
             xbars_per_layer.get(f"convs/{i}/w", 0) * cells_per_weight,

@@ -1,15 +1,16 @@
 """Group scoring for crossbar-aware pruning (paper §IV.B).
 
-Granularities on the unrolled weight matrix M (R×C), crossbars 128×128:
+Granularities on the unrolled weight matrix M (R×C), crossbars xr×xc
+(``TileGeometry``, default 128×128):
 
   * ``filter``  — one whole column (conv: one filter IC·K·K; dense: one
                   output unit).  The only granularity that also removes
                   an activation.
   * ``channel`` — conv: the K² rows of one input channel within one
-                  column (paper Fig. 3c); dense: the 128-row crossbar
+                  column (paper Fig. 3c); dense: the xr-row crossbar
                   segment of one column.  Zeroing it frees a crossbar
                   column.
-  * ``index``   — one row restricted to one 128-column crossbar
+  * ``index``   — one row restricted to one xc-column crossbar
                   (paper Fig. 3d).  Zeroing it frees a crossbar row.
 
 Group score = mean |w| over the group's weights (paper: "average
@@ -21,155 +22,46 @@ all the filters/channels/… of the CNN".
 Baselines reuse the same machinery with their own group shapes:
   * ``ltp``   — every single weight is its own group (unstructured).
   * ``block`` — square b×b blocks (BLK-REW [9] adapted to crossbars).
-  * ``cap``   — full 128-row crossbar column segments (CAP [7]): same
+  * ``cap``   — full xr-row crossbar column segments (CAP [7]): same
                 as dense 'channel' for every layer type.
+
+The group shapes themselves live in ``repro.core.strategies`` as a
+registry of ``GranularityStrategy`` objects; this module keeps the
+selection machinery (``select_global_prune``) and thin compatibility
+wrappers dispatching by name.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.core.crossbar import XBAR_COLS, XBAR_ROWS, leaf_matrices
+from repro.core.strategies import (  # noqa: F401  (re-exported for compat)
+    DEFAULT_GEOMETRY, GranularityStrategy, GroupSet, TileGeometry,
+    available_strategies, get_strategy, register_strategy,
+)
 
 GRANULARITIES = ("filter", "channel", "index")
 BASELINE_GRANULARITIES = ("ltp", "block", "cap")
 
 
-@dataclass
-class GroupSet:
-    """Flattened groups of one leaf at one granularity.
-
-    ``ids``    — (n_groups, …) integer array mapping each matrix entry
-                 to a group id via ``group_of`` (stored implicitly; we
-                 keep per-group row/col slices instead for speed).
-    ``scores`` — (n_groups,) mean |w| over group entries (alive mask
-                 applied by caller).
-    ``sizes``  — (n_groups,) number of weights in each group.
-    ``alive``  — (n_groups,) bool: group has any surviving weight.
-    """
-    path: str
-    granularity: str
-    scores: np.ndarray
-    sizes: np.ndarray
-    alive: np.ndarray
-    # info needed to zero a group in the leaf's mask
-    meta: Dict
-
-
-def _group_reduce(x: np.ndarray, mask: np.ndarray, axes: Tuple[int, ...]):
-    """(mean|x| over alive entries, any(mask), alive count) over ``axes``."""
-    absx = np.abs(x) * mask
-    cnt = mask.sum(axis=axes)
-    scores = absx.sum(axis=axes) / np.maximum(cnt, 1e-9)
-    return scores, mask.any(axis=axes), cnt.astype(np.int64)
-
-
-def _pad_to(x: np.ndarray, r: int, c: int):
-    R, C = x.shape[-2:]
-    pr, pc = (-R) % r, (-C) % c
-    if pr or pc:
-        pad = [(0, 0)] * (x.ndim - 2) + [(0, pr), (0, pc)]
-        x = np.pad(x, pad)
-    return x
-
-
 def group_scores(path: str, w: np.ndarray, mask: np.ndarray,
-                 granularity: str, conv: bool,
-                 block: int = 32) -> GroupSet:
-    """Compute per-group scores for one leaf."""
-    wm, tag = leaf_matrices(w, conv)
-    mm, _ = leaf_matrices(mask, conv)
-    B, R, C = wm.shape
-    meta = {"tag": tag, "shape": w.shape, "conv": conv, "B": B, "R": R,
-            "C": C}
-    if granularity == "filter":
-        scores, alive, sizes = _group_reduce(wm, mm, (1,))   # (B, C)
-    elif granularity == "channel":
-        if conv:
-            K = w.shape[0]
-            ic = w.shape[2]
-            wv = wm.reshape(B, ic, K * K, C)
-            mv = mm.reshape(B, ic, K * K, C)
-            scores, alive, sizes = _group_reduce(wv, mv, (2,))  # (B, ic, C)
-            meta["kk"] = K * K
-        else:
-            wp, mp = _pad_to(wm, XBAR_ROWS, 1), _pad_to(mm, XBAR_ROWS, 1)
-            nt = wp.shape[1] // XBAR_ROWS
-            wv = wp.reshape(B, nt, XBAR_ROWS, C)
-            mv = mp.reshape(B, nt, XBAR_ROWS, C)
-            scores, alive, sizes = _group_reduce(wv, mv, (2,))  # (B, nt, C)
-            meta["nt"] = nt
-    elif granularity == "index":
-        wp, mp = _pad_to(wm, 1, XBAR_COLS), _pad_to(mm, 1, XBAR_COLS)
-        nt = wp.shape[2] // XBAR_COLS
-        wv = wp.reshape(B, R, nt, XBAR_COLS)
-        mv = mp.reshape(B, R, nt, XBAR_COLS)
-        scores, alive, sizes = _group_reduce(wv, mv, (3,))   # (B, R, nt)
-        meta["nt"] = nt
-    elif granularity == "ltp":
-        scores = np.abs(wm) * mm
-        alive = mm.astype(bool)
-        sizes = np.ones_like(scores, dtype=np.int64)
-    elif granularity == "block":
-        wp, mp = _pad_to(wm, block, block), _pad_to(mm, block, block)
-        nr, nc = wp.shape[1] // block, wp.shape[2] // block
-        wv = wp.reshape(B, nr, block, nc, block)
-        mv = mp.reshape(B, nr, block, nc, block)
-        scores, alive, sizes = _group_reduce(wv, mv, (2, 4))  # (B, nr, nc)
-        meta["nr"], meta["nc"], meta["block"] = nr, nc, block
-    elif granularity == "cap":
-        return group_scores(path, w, mask, "channel", conv=False)
-    else:
-        raise ValueError(granularity)
-    return GroupSet(path, granularity, scores, sizes, alive.astype(bool),
-                    meta)
+                 granularity: str, conv: bool, block: int = 32,
+                 geometry: Optional[TileGeometry] = None) -> GroupSet:
+    """Compute per-group scores for one leaf (dispatch by name)."""
+    return get_strategy(granularity).score(
+        path, w, mask, conv=conv, geom=geometry or DEFAULT_GEOMETRY,
+        block=block)
 
 
 def zero_groups(mask: np.ndarray, gs: GroupSet, kill: np.ndarray
                 ) -> np.ndarray:
     """Return a new leaf mask with the ``kill`` groups zeroed.
 
-    ``kill`` has the same shape as ``gs.scores`` (bool).
+    ``kill`` has the same shape as ``gs.scores`` (bool).  The zeroing
+    geometry comes from ``gs.meta`` — always the one scored with.
     """
-    conv = gs.meta["conv"]
-    mm, tag = leaf_matrices(mask, conv)
-    mm = mm.copy()
-    B, R, C = mm.shape
-    g = gs.granularity
-    if g == "filter":
-        mm *= ~kill[:, None, :]                      # (B,1,C)
-    elif g == "channel" and conv:
-        kk = gs.meta["kk"]
-        ic = kill.shape[1]
-        mv = mm.reshape(B, ic, kk, C)
-        mv *= ~kill[:, :, None, :]
-        mm = mv.reshape(B, R, C)
-    elif g in ("channel", "cap"):
-        nt = gs.meta["nt"]
-        mp = _pad_to(mm, XBAR_ROWS, 1)
-        mv = mp.reshape(B, nt, XBAR_ROWS, C)
-        mv *= ~kill[:, :, None, :]
-        mm = mv.reshape(B, nt * XBAR_ROWS, C)[:, :R, :]
-    elif g == "index":
-        nt = gs.meta["nt"]
-        mp = _pad_to(mm, 1, XBAR_COLS)
-        mv = mp.reshape(B, R, nt, XBAR_COLS)
-        mv *= ~kill[:, :, :, None]
-        mm = mv.reshape(B, R, nt * XBAR_COLS)[:, :, :C]
-    elif g == "ltp":
-        mm *= ~kill
-    elif g == "block":
-        nr, nc, blk = gs.meta["nr"], gs.meta["nc"], gs.meta["block"]
-        mp = _pad_to(mm, blk, blk)
-        mv = mp.reshape(B, nr, blk, nc, blk)
-        mv *= ~kill[:, :, None, :, None]
-        mm = mv.reshape(B, nr * blk, nc * blk)[:, :R, :C]
-    else:
-        raise ValueError(g)
-    from repro.core.crossbar import matrices_to_leaf
-    return matrices_to_leaf(mm, gs.meta["shape"], tag)
+    return get_strategy(gs.granularity).zero(mask, gs, kill)
 
 
 def select_global_prune(group_sets: List[GroupSet], fraction: float,

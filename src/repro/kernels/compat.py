@@ -1,0 +1,13 @@
+"""Pallas version compatibility shims.
+
+The kernels target the current Pallas TPU API; older jax releases ship
+the same classes under legacy names (``TPUCompilerParams`` →
+``CompilerParams`` rename).  Resolve once here so every kernel module
+works across the supported jax range without scattering getattr calls.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as _pltpu
+
+CompilerParams = getattr(_pltpu, "CompilerParams", None) or getattr(
+    _pltpu, "TPUCompilerParams")

@@ -21,6 +21,21 @@ def _tile_stats_kernel(w_ref, live_ref, sum_ref):
     live_ref[0, 0] = (jnp.any(blk != 0)).astype(jnp.int32)
 
 
+def tile_stats_for_config(w, prune_cfg, *, interpret: bool = True):
+    """Tile stats at a ``PruneConfig``'s crossbar geometry.
+
+    The tile extents come from ``prune_cfg.xbar_rows/xbar_cols`` so the
+    device-side bitmap agrees with the host-side ``xbar_stats``
+    accounting for the same config; ragged edges are zero-padded.
+    """
+    bk, bn = int(prune_cfg.xbar_rows), int(prune_cfg.xbar_cols)
+    K, N = w.shape
+    pk, pn = (-K) % bk, (-N) % bn
+    if pk or pn:
+        w = jnp.pad(w, ((0, pk), (0, pn)))
+    return tile_stats_pallas(w, bk=bk, bn=bn, interpret=interpret)
+
+
 def tile_stats_pallas(w, *, bk: int = 128, bn: int = 128,
                       interpret: bool = True):
     """w: (K, N) → (live (Kt, Nt) int32, sums (Kt, Nt) f32)."""

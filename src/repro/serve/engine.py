@@ -34,12 +34,18 @@ class Request:
 class ServeEngine:
     def __init__(self, *, params, cfg, prefill_fn, decode_fn,
                  batch_slots: int = 8, capacity: int = 512,
-                 greedy: bool = True):
+                 greedy: Optional[bool] = None, temperature: float = 0.0,
+                 sample_seed: int = 0):
         self.params = params
         self.cfg = cfg
         self.capacity = capacity
         self.slots = batch_slots
-        self.greedy = greedy
+        # greedy=None (default) derives from temperature, so passing
+        # temperature=0.8 alone turns sampling on; an explicit greedy
+        # wins over temperature
+        self.greedy = (temperature <= 0.0) if greedy is None else greedy
+        self.temperature = temperature
+        self._rng = np.random.default_rng(sample_seed)
         self._prefill = jax.jit(
             lambda p, batch: prefill_fn(p, cfg, batch, capacity))
         self._decode = jax.jit(
@@ -51,7 +57,16 @@ class ServeEngine:
         self.queue.append(req)
 
     def _sample(self, logits: np.ndarray) -> np.ndarray:
-        return np.argmax(logits, axis=-1)
+        """Greedy argmax, or temperature sampling via the Gumbel trick.
+
+        ``temperature <= 0`` degrades to argmax so callers can sweep a
+        temperature schedule down to deterministic decoding.
+        """
+        if self.greedy or self.temperature <= 0.0:
+            return np.argmax(logits, axis=-1)
+        z = logits.astype(np.float64) / self.temperature
+        g = self._rng.gumbel(size=z.shape)
+        return np.argmax(z + g, axis=-1)
 
     def run(self) -> List[Request]:
         """Serve everything in the queue to completion (batch at a time).
@@ -71,7 +86,10 @@ class ServeEngine:
                                            {"tokens": jnp.asarray(toks)})
             last = self._sample(np.asarray(logits[:, -1]))
             for i, r in enumerate(group):
-                r.tokens.append(int(last[i]))
+                t = int(last[i])
+                r.tokens.append(t)
+                if r.eos_id is not None and t == r.eos_id:
+                    r.done = True
             budget = max(r.max_new_tokens for r in group)
             cur = last.astype(np.int32)
             for _ in range(budget - 1):

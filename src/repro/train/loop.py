@@ -30,13 +30,15 @@ class TrainState:
     params: Any
     opt_state: Any
     step: int = 0
+    aux: Any = None                  # non-gradient model state (e.g. BN stats)
 
 
 def make_train_step(loss_fn: Callable, optimizer: Optimizer,
                     microbatch: Optional[int] = None,
                     remat: bool = False,
                     donate: bool = True,
-                    compressor=None):
+                    compressor=None,
+                    has_aux_state: bool = False):
     """Build a jitted train step.
 
     loss_fn: (params, batch) -> (loss, metrics_dict)
@@ -46,8 +48,31 @@ def make_train_step(loss_fn: Callable, optimizer: Optimizer,
     compressor: optional gradient compressor (TopK / MaskAware from
         repro.distributed.compression); its error-feedback residual is
         threaded through opt_state under the key "_compress_residual".
+    has_aux_state: the model threads non-gradient state (BatchNorm
+        statistics, EMA buffers) through the step.  loss_fn then has
+        signature (params, state, batch) -> (loss, (new_state, metrics))
+        and the built step is (params, opt_state, state, batch) ->
+        (params, opt_state, new_state, metrics).
     """
     lf = jax.checkpoint(loss_fn) if remat else loss_fn
+    if has_aux_state:
+        if microbatch is not None or compressor is not None:
+            raise ValueError("aux state is not supported together with "
+                             "microbatching or gradient compression")
+
+        def aux_step_fn(params, opt_state, state, batch):
+            def inner(p):
+                loss, (new_state, metrics) = lf(p, state, batch)
+                return loss, (new_state, metrics)
+
+            (loss, (new_state, metrics)), grads = jax.value_and_grad(
+                inner, has_aux=True)(params)
+            new_params, new_opt = optimizer.update(grads, opt_state, params)
+            metrics = dict(metrics)
+            metrics["loss"] = loss
+            return new_params, new_opt, new_state, metrics
+
+        return jax.jit(aux_step_fn, donate_argnums=(0, 1) if donate else ())
     grad_fn = jax.value_and_grad(lf, has_aux=True)
 
     def step_fn(params, opt_state, batch):
@@ -108,11 +133,15 @@ class Trainer:
                  async_ckpt: bool = True,
                  microbatch: Optional[int] = None, remat: bool = False,
                  compressor=None,
+                 aux_state=None,
+                 donate: bool = True,
                  step_deadline_s: Optional[float] = None,
                  on_straggler: Optional[Callable[[int, float], None]] = None):
+        self._has_aux = aux_state is not None
         self.step_fn = make_train_step(loss_fn, optimizer,
                                        microbatch=microbatch, remat=remat,
-                                       compressor=compressor)
+                                       compressor=compressor, donate=donate,
+                                       has_aux_state=self._has_aux)
         self.optimizer = optimizer
         self.data_iter = data_iter
         self.ckpt = (CheckpointManager(ckpt_dir, keep=keep,
@@ -120,7 +149,8 @@ class Trainer:
                      if ckpt_dir else None)
         self.ckpt_every = ckpt_every
         self.state = TrainState(
-            params, init_opt_state(optimizer, params, compressor), 0)
+            params, init_opt_state(optimizer, params, compressor), 0,
+            aux_state)
         self.step_deadline_s = step_deadline_s
         self.on_straggler = on_straggler or (
             lambda step, dt: log.warning(
@@ -134,20 +164,25 @@ class Trainer:
         tmpl = {"params": self.state.params,
                 "opt_state": self.state.opt_state,
                 "step": jnp.zeros((), jnp.int32)}
+        if self._has_aux:
+            tmpl["aux"] = self.state.aux
         step, tree = self.ckpt.restore(tmpl)
         if step is not None:
             self.state = TrainState(tree["params"], tree["opt_state"],
-                                    int(tree["step"]))
+                                    int(tree["step"]),
+                                    tree.get("aux", self.state.aux))
             log.info("resumed from checkpoint at step %d", self.state.step)
 
     def save(self, blocking: bool = False):
         if self.ckpt is None:
             return
-        self.ckpt.save(self.state.step, {
+        tree = {
             "params": self.state.params,
             "opt_state": self.state.opt_state,
-            "step": jnp.asarray(self.state.step, jnp.int32)},
-            blocking=blocking)
+            "step": jnp.asarray(self.state.step, jnp.int32)}
+        if self._has_aux:
+            tree["aux"] = self.state.aux
+        self.ckpt.save(self.state.step, tree, blocking=blocking)
 
     def run(self, num_steps: int, log_every: int = 50) -> Dict[str, float]:
         metrics = {}
@@ -155,13 +190,20 @@ class Trainer:
         while self.state.step < target:
             batch = next(self.data_iter)
             t0 = time.perf_counter()
-            params, opt_state, metrics = self.step_fn(
-                self.state.params, self.state.opt_state, batch)
+            if self._has_aux:
+                params, opt_state, aux, metrics = self.step_fn(
+                    self.state.params, self.state.opt_state,
+                    self.state.aux, batch)
+            else:
+                params, opt_state, metrics = self.step_fn(
+                    self.state.params, self.state.opt_state, batch)
+                aux = self.state.aux
             jax.block_until_ready(metrics["loss"])
             dt = time.perf_counter() - t0
             if self.step_deadline_s is not None and dt > self.step_deadline_s:
                 self.on_straggler(self.state.step, dt)
-            self.state = TrainState(params, opt_state, self.state.step + 1)
+            self.state = TrainState(params, opt_state, self.state.step + 1,
+                                    aux)
             if self.state.step % self.ckpt_every == 0:
                 self.save()
             if log_every and self.state.step % log_every == 0:

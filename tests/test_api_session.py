@@ -1,0 +1,188 @@
+"""repro.api: adapters, PruningSession resume-to-identical-result,
+structured_prune, and the config-driven crossbar geometry on the
+session path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (CNNAdapter, FunctionAdapter, LMAdapter,
+                       PruningSession, structured_prune)
+from repro.configs import (CNNConfig, ConvSpec, PruneConfig, get_arch,
+                           scaled_down)
+from repro.core.masks import lm_prunable, sparsity_fraction
+
+
+def _params(seed=0):
+    r = np.random.RandomState(seed)
+    return {"a": jnp.asarray(r.randn(3, 3, 4, 8), jnp.float32),
+            "b": jnp.asarray(r.randn(256, 128), jnp.float32)}
+
+
+def _scripted_adapter(params, cliff=0.45):
+    """Deterministic adapter: accuracy collapses past ``cliff`` sparsity."""
+    return FunctionAdapter(
+        params=params,
+        train_fn=lambda p, m: p,
+        eval_fn=lambda p, m: 1.0 if sparsity_fraction(m) < cliff else 0.5,
+        prunable=lambda p, l: l.ndim >= 2,
+        conv_pred=lambda p: p == "a")
+
+
+def test_session_runs_algorithm1_semantics():
+    res = PruningSession(_scripted_adapter(_params()),
+                         PruneConfig(prune_fraction=0.25, max_iters=20),
+                         baseline_accuracy=1.0).run()
+    assert 0.3 < res.sparsity < 0.45
+    grans = [e.granularity for e in res.history]
+    assert grans[0] == "filter"
+    assert "channel" in grans and "index" in grans
+    assert sum(not e.accepted for e in res.history) == 3
+
+
+def test_session_streams_events_to_callbacks():
+    seen = []
+    res = PruningSession(_scripted_adapter(_params()),
+                         PruneConfig(prune_fraction=0.25, max_iters=5),
+                         baseline_accuracy=1.0,
+                         callbacks=[seen.append]).run()
+    assert len(seen) == len(res.history)
+    assert [e.iteration for e in seen] == list(range(1, len(seen) + 1))
+
+
+def test_interrupted_session_resumes_to_identical_result(tmp_path):
+    params = _params()
+    cfg = PruneConfig(prune_fraction=0.25, max_iters=20)
+    full = PruningSession(_scripted_adapter(params), cfg,
+                          baseline_accuracy=1.0).run()
+
+    class Preempted(Exception):
+        pass
+
+    def preempt(event):
+        if event.iteration == 2:
+            raise Preempted()
+
+    interrupted = PruningSession(_scripted_adapter(params), cfg,
+                                 baseline_accuracy=1.0,
+                                 ckpt_dir=str(tmp_path),
+                                 callbacks=[preempt])
+    with pytest.raises(Preempted):
+        interrupted.run()
+
+    resumed = PruningSession(_scripted_adapter(params), cfg,
+                             baseline_accuracy=1.0,
+                             ckpt_dir=str(tmp_path)).run()
+    assert len(resumed.history) == len(full.history)
+    for a, b in zip(full.history, resumed.history):
+        assert (a.iteration, a.granularity, a.accepted) == \
+            (b.iteration, b.granularity, b.accepted)
+        assert a.sparsity_after == pytest.approx(b.sparsity_after, rel=1e-6)
+    for x, y in zip(jax.tree.leaves(full.masks),
+                    jax.tree.leaves(resumed.masks)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    np.testing.assert_allclose(np.asarray(full.params["b"]),
+                               np.asarray(resumed.params["b"]))
+
+
+def test_session_geometry_64_changes_crossbar_accounting(tmp_path):
+    """PruneConfig(xbar_rows=64, xbar_cols=64) flows through prune_step
+    and the hardware report — same masks semantics, different tiling."""
+    params = _params()
+    res64 = PruningSession(
+        _scripted_adapter(params),
+        PruneConfig(prune_fraction=0.25, max_iters=4,
+                    xbar_rows=64, xbar_cols=64),
+        baseline_accuracy=1.0, granularities=["index"]).run()
+    res128 = PruningSession(
+        _scripted_adapter(params),
+        PruneConfig(prune_fraction=0.25, max_iters=4),
+        baseline_accuracy=1.0, granularities=["index"]).run()
+    # 'index' groups are rows within one col-tile: 64-wide tiles make
+    # strictly finer groups on the 128-col leaf, so the masks differ
+    m64 = np.asarray(res64.masks["b"])
+    m128 = np.asarray(res128.masks["b"])
+    assert m64.shape == m128.shape and not np.array_equal(m64, m128)
+
+
+def test_session_hardware_report_uses_config_geometry():
+    params = {"b": jnp.asarray(
+        np.random.RandomState(0).randn(128, 128), jnp.float32)}
+    adapter = _scripted_adapter(params, cliff=2.0)     # accept everything
+    s64 = PruningSession(adapter, PruneConfig(max_iters=1, xbar_rows=64,
+                                              xbar_cols=64),
+                         baseline_accuracy=1.0)
+    s64.run()
+    rep64 = s64.hardware_report()
+    s128 = PruningSession(adapter, PruneConfig(max_iters=1),
+                          baseline_accuracy=1.0)
+    s128.run()
+    rep128 = s128.hardware_report()
+    assert rep64.xbars_unpruned == 4
+    assert rep128.xbars_unpruned == 1
+
+
+def test_export_ticket_and_init_params(tmp_path):
+    params = _params()
+    session = PruningSession(_scripted_adapter(params),
+                             PruneConfig(prune_fraction=0.25, max_iters=3),
+                             baseline_accuracy=1.0)
+    res = session.run()
+    np.testing.assert_array_equal(np.asarray(session.init_params["b"]),
+                                  np.asarray(params["b"]))
+    session.export_ticket(str(tmp_path / "ticket"))
+    from repro.core import lottery
+    w, m = lottery.import_ticket(str(tmp_path / "ticket"), params, res.masks)
+    for a, b in zip(jax.tree.leaves(m), jax.tree.leaves(res.masks)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_structured_prune_schedule():
+    params = _params()
+    masks = structured_prune(
+        params, [("filter", 0.2), ("index", 0.2)],
+        prunable=lambda p, l: True, conv_pred=lambda p: p == "a")
+    s = sparsity_fraction(masks)
+    assert 0.3 <= s <= 0.5          # 1 - 0.8² within one group's slack
+
+
+def test_cnn_adapter_end_to_end():
+    cfg = CNNConfig(name="t-cnn", family="cnn",
+                    convs=(ConvSpec(8, pool=True),), fc=(),
+                    num_classes=10, image_size=8)
+    adapter = CNNAdapter(cfg, steps=2, batch_size=8, eval_batches=1,
+                         eval_batch_size=16)
+    session = PruningSession(
+        adapter, PruneConfig(prune_fraction=0.3, max_iters=1,
+                             accuracy_tolerance=1.0))
+    res = session.run()
+    assert res.sparsity > 0.2
+    assert len(res.history) == 1
+    acc = adapter.evaluate(res.params, res.masks)
+    assert 0.0 <= acc <= 1.0
+
+
+def test_lm_adapter_train_eval_and_serve_fns():
+    cfg = scaled_down(get_arch("llama3.2-3b"), n_layers=1, d_model=32,
+                      n_heads=2, n_kv_heads=2, d_ff=64, head_dim=16,
+                      vocab_size=64, dtype="float32")
+    adapter = LMAdapter(cfg, steps=2, batch_size=2, seq_len=8,
+                        eval_batches=1)
+    params = adapter.init_params(jax.random.PRNGKey(0))
+    score0 = adapter.evaluate(params)
+    assert np.isfinite(score0) and score0 < 0          # -CE
+    trained = adapter.train(params, None, steps=2)
+    assert np.isfinite(adapter.last_metrics["loss"])
+    masks = structured_prune(trained, [("filter", 0.25)],
+                             prunable=lm_prunable)
+    assert sparsity_fraction(masks) > 0.1
+    prefill_fn, decode_fn = adapter.serve_fns()
+    assert callable(prefill_fn) and callable(decode_fn)
+
+
+def test_function_adapter_requires_no_rng_state():
+    params = _params()
+    ad = _scripted_adapter(params)
+    p1 = ad.init_params(jax.random.PRNGKey(0))
+    p2 = ad.init_params(jax.random.PRNGKey(7))
+    np.testing.assert_array_equal(np.asarray(p1["b"]), np.asarray(p2["b"]))

@@ -1,9 +1,15 @@
-"""Hypothesis property tests on the system's invariants."""
+"""Hypothesis property tests on the system's invariants.
+
+Skipped (not errored) when the optional ``hypothesis`` dev extra is
+absent, so a bare environment still collects and runs the tier-1 suite.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import crossbar as xb
 from repro.core import scoring

@@ -44,6 +44,41 @@ def test_greedy_matches_forward_argmax(engine):
     assert req.tokens[0] == want
 
 
+def _mk_engine(cfg, params, temperature, seed=0, **kw):
+    return ServeEngine(params=params, cfg=cfg, prefill_fn=tfm.prefill,
+                       decode_fn=tfm.decode_step, batch_slots=2,
+                       capacity=96, temperature=temperature,
+                       sample_seed=seed, **kw)
+
+
+def _stream(eng, prompt, n=8):
+    eng.submit(Request(uid=0, prompt=prompt, max_new_tokens=n))
+    return eng.run()[0].tokens
+
+
+def test_temperature_alone_turns_sampling_on(engine):
+    """temperature>0 samples (≠ greedy stream) without a greedy flag;
+    a fixed seed fixes the stream."""
+    _, cfg, params = engine
+    prompt = np.arange(1, 9, dtype=np.int32)
+    greedy_toks = _stream(_mk_engine(cfg, params, temperature=0.0), prompt)
+    s1 = _stream(_mk_engine(cfg, params, temperature=1.5), prompt)
+    s2 = _stream(_mk_engine(cfg, params, temperature=1.5), prompt)
+    assert s1 == s2                       # same seed → same stream
+    assert s1 != greedy_toks              # it actually sampled
+    assert len(s1) == 8
+
+
+def test_explicit_greedy_wins_over_temperature(engine):
+    _, cfg, params = engine
+    prompt = np.arange(1, 9, dtype=np.int32)
+    forced = _stream(_mk_engine(cfg, params, temperature=1.5, greedy=True),
+                     prompt, n=3)
+    greedy_toks = _stream(_mk_engine(cfg, params, temperature=0.0), prompt,
+                          n=3)
+    assert forced == greedy_toks
+
+
 def test_eos_stops_generation(engine):
     eng, cfg, params = engine
     prompt = np.arange(1, 9, dtype=np.int32)

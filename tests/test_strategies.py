@@ -1,0 +1,174 @@
+"""Strategy registry: every registered granularity round-trips
+score→zero with the sparsity invariants, and non-default crossbar
+geometry changes the whole accounting path (no hardcoded 128s)."""
+import numpy as np
+import pytest
+
+from repro.configs import PruneConfig
+from repro.core import scoring
+from repro.core import strategies as strat
+from repro.core.crossbar import xbar_stats
+from repro.core.hardware import analyze_masks
+
+
+def _leaves():
+    r = np.random.RandomState(0)
+    return [
+        ("conv", r.randn(3, 3, 8, 16).astype(np.float32), True),
+        ("fc", r.randn(130, 70).astype(np.float32), False),
+    ]
+
+
+@pytest.mark.parametrize("name", strat.available_strategies())
+def test_registry_roundtrip_score_zero(name):
+    """score → kill the lowest quarter of groups → zero: exactly the
+    selected groups die, nothing resurrects, sizes account for the
+    removed weights."""
+    for path, w, conv in _leaves():
+        mask = np.ones_like(w)
+        gs = scoring.group_scores(path, w, mask, name, conv=conv)
+        assert gs.scores.shape == gs.sizes.shape == gs.alive.shape
+        assert gs.alive.all()
+        assert int(gs.sizes.sum()) == w.size       # groups tile the leaf
+        flat = np.argsort(gs.scores.reshape(-1), kind="stable")
+        n_kill = max(1, flat.size // 4)
+        kill = np.zeros(gs.scores.size, bool)
+        kill[flat[:n_kill]] = True
+        kill = kill.reshape(gs.scores.shape)
+        new = scoring.zero_groups(mask, gs, kill)
+        assert new.shape == mask.shape
+        assert ((new == 0) | (new == 1)).all()
+        assert (new <= mask).all()                  # monotone
+        removed = mask.sum() - new.sum()
+        assert removed == gs.sizes[kill].sum()
+        # re-scoring marks exactly the killed groups dead
+        gs2 = scoring.group_scores(path, w, new, name, conv=conv)
+        assert not gs2.alive[kill].any()
+        assert gs2.alive[~kill].all()
+
+
+def test_get_strategy_unknown_name():
+    with pytest.raises(KeyError):
+        strat.get_strategy("no-such-granularity")
+
+
+def test_register_custom_strategy_plugs_into_prune_step():
+    import jax.numpy as jnp
+
+    from repro.core.algorithm import prune_step
+    from repro.core.masks import make_masks, sparsity_fraction
+
+    class EveryOtherColumn(strat.GranularityStrategy):
+        """Toy shape: groups = column pairs."""
+        name = "colpair"
+
+        def score(self, path, w, mask, *, conv,
+                  geom=strat.DEFAULT_GEOMETRY, block=32):
+            return strat.get_strategy("filter").score(
+                path, w, mask, conv=conv, geom=geom, block=block)
+
+        def zero(self, mask, gs, kill):
+            return strat.get_strategy("filter").zero(mask, gs, kill)
+
+    strat.register_strategy(EveryOtherColumn())
+    try:
+        assert "colpair" in strat.available_strategies()
+        params = {"w": jnp.asarray(np.random.RandomState(1)
+                                   .randn(64, 32), jnp.float32)}
+        masks = make_masks(params, lambda p, l: True)
+        new = prune_step(params, masks, "colpair", 0.25, lambda p: False)
+        assert 0.2 <= sparsity_fraction(new) <= 0.35
+    finally:
+        strat._REGISTRY.pop("colpair", None)
+
+
+# ---------------------------------------------------------------------------
+# Non-default geometry: PruneConfig(xbar_rows=64, xbar_cols=64) must
+# change crossbar accounting everywhere on the stats path.
+# ---------------------------------------------------------------------------
+def test_geometry_from_config():
+    geom = strat.TileGeometry.from_config(
+        PruneConfig(xbar_rows=64, xbar_cols=64))
+    assert (geom.rows, geom.cols, geom.cells) == (64, 64, 4096)
+
+
+def test_xbar_stats_geometry_changes_accounting():
+    m = np.ones((128, 128), bool)
+    m[64:, :] = False                     # bottom half dead
+    st128 = xbar_stats(m)                 # one 128×128 crossbar
+    st64 = xbar_stats(m, xr=64, xc=64)    # four 64×64 crossbars
+    assert st128.n_xbars == 1 and st128.xbars_fully_free == 0
+    assert st64.n_xbars == 4 and st64.xbars_fully_free == 2
+    assert st64.xbars_needed_packed == 2  # live area = 2 full 64×64 tiles
+    assert st128.xbars_needed_packed == 1
+
+
+def test_analyze_masks_64_geometry():
+    m = np.ones((128, 128), np.float32)
+    m[64:, :] = 0.0
+    masks = {"w": m}
+    rep128 = analyze_masks(masks, lambda p: False)
+    rep64 = analyze_masks(masks, lambda p: False,
+                          xbar_rows=64, xbar_cols=64)
+    assert rep128.xbars_unpruned == 1
+    assert rep64.xbars_unpruned == 4
+    assert rep64.xbars_needed == 2        # packed under 64×64 geometry
+    # merged aggregate recomputes packed count with the 64×64 cell area
+    assert rep64.layers[0].stats.xbar_rows == 64
+
+
+def test_channel_and_index_respect_geometry():
+    r = np.random.RandomState(3)
+    w = r.randn(256, 256).astype(np.float32)
+    mask = np.ones_like(w)
+    geom = strat.TileGeometry.from_config(
+        PruneConfig(xbar_rows=64, xbar_cols=64))
+    gs = scoring.group_scores("p", w, mask, "channel", conv=False,
+                              geometry=geom)
+    assert gs.scores.shape == (1, 4, 256)          # 256/64 row tiles
+    kill = np.zeros_like(gs.scores, bool)
+    kill[0, 1, 5] = True
+    new = scoring.zero_groups(mask, gs, kill)
+    assert new[64:128, 5].sum() == 0               # 64-row segment died
+    assert new[:64, 5].all() and new[128:, 5].all()
+
+    gs = scoring.group_scores("p", w, mask, "index", conv=False,
+                              geometry=geom)
+    assert gs.scores.shape == (1, 256, 4)          # 256/64 col tiles
+    kill = np.zeros_like(gs.scores, bool)
+    kill[0, 10, 2] = True
+    new = scoring.zero_groups(mask, gs, kill)
+    assert new[10, 128:192].sum() == 0
+    assert new[10, :128].all() and new[10, 192:].all()
+
+
+def test_xbar_strategy_kills_whole_tiles():
+    r = np.random.RandomState(4)
+    w = r.randn(128, 128).astype(np.float32)
+    mask = np.ones_like(w)
+    geom = strat.TileGeometry(64, 64)
+    gs = scoring.group_scores("p", w, mask, "xbar", conv=False,
+                              geometry=geom)
+    assert gs.scores.shape == (1, 2, 2)
+    kill = np.zeros((1, 2, 2), bool)
+    kill[0, 0, 1] = True
+    new = scoring.zero_groups(mask, gs, kill)
+    assert new[:64, 64:].sum() == 0
+    assert new.sum() == mask.size - 64 * 64
+    # the killed tile is exactly one fully-free crossbar at this geometry
+    st = xbar_stats(new != 0, xr=64, xc=64)
+    assert st.xbars_fully_free == 1
+
+
+def test_tile_stats_kernel_follows_config_geometry():
+    import jax.numpy as jnp
+
+    from repro.kernels.tile_stats import tile_stats_for_config
+
+    w = np.ones((128, 130), np.float32)
+    w[:64, :64] = 0.0
+    live, sums = tile_stats_for_config(
+        jnp.asarray(w), PruneConfig(xbar_rows=64, xbar_cols=64))
+    assert live.shape == (2, 3)                    # 128/64 × ceil(130/64)
+    assert int(np.asarray(live)[0, 0]) == 0
+    assert np.asarray(live)[1].all()
