@@ -108,10 +108,15 @@ class PruningSession:
     def _restore(self, masks_template):
         if self.ckpt is None:
             return None
+        # baseline/hist templates are host numpy float64, matching
+        # ``_save``: a float32 template would downcast the restored
+        # baseline and could flip the ``acc >= baseline - tol`` gate
+        # after resume (numpy templates restore without JAX dtype
+        # canonicalisation — see checkpoint.manager.load_pytree)
         tmpl = {"masks": masks_template,
-                "g_idx": jnp.zeros((), jnp.int32),
-                "baseline": jnp.zeros((), jnp.float32),
-                "hist": jnp.zeros((0, _HIST_COLS), jnp.float32)}
+                "g_idx": np.zeros((), np.int32),
+                "baseline": np.zeros((), np.float64),
+                "hist": np.zeros((0, _HIST_COLS), np.float64)}
         step, tree = self.ckpt.restore(tmpl)
         if step is None:
             return None
@@ -201,8 +206,14 @@ class PruningSession:
 
     def serve_engine(self, *, batch_slots: int = 8, capacity: int = 512,
                      greedy: Optional[bool] = None, temperature: float = 0.0,
-                     sample_seed: int = 0):
-        """Hand the pruned weights straight to a ``ServeEngine``."""
+                     sample_seed: int = 0, use_bsmm: Optional[bool] = None,
+                     interpret: Optional[bool] = None):
+        """Hand the pruned ticket straight to a ``ServeEngine``.
+
+        The ticket's masks ride along, so the engine derives the
+        per-layer 128×128 tile bitmaps and routes decode projections
+        through the block-sparse kernel (``use_bsmm=False`` opts out).
+        """
         from repro.serve import ServeEngine
         res = self._require_result()
         prefill_fn, decode_fn = self.adapter.serve_fns()
@@ -210,7 +221,8 @@ class PruningSession:
                            prefill_fn=prefill_fn, decode_fn=decode_fn,
                            batch_slots=batch_slots, capacity=capacity,
                            greedy=greedy, temperature=temperature,
-                           sample_seed=sample_seed)
+                           sample_seed=sample_seed, masks=res.masks,
+                           use_bsmm=use_bsmm, interpret=interpret)
 
     def hardware_report(self, activation_volumes=None) -> HWReport:
         """Crossbar accounting of the final masks at the session's

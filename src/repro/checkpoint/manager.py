@@ -88,6 +88,11 @@ def load_pytree(directory: str, template, shardings=None):
         sh = flat_sh.get(p)
         if sh is not None:
             return jax.device_put(arr, sh)
+        # numpy template leaves restore host-side, bypassing JAX dtype
+        # canonicalisation (jnp.asarray would silently downcast float64
+        # checkpoints to float32 when x64 is off)
+        if isinstance(leaf, np.ndarray) and not isinstance(leaf, jax.Array):
+            return arr
         return jnp.asarray(arr)
 
     return jax.tree_util.tree_map_with_path(fill, template,

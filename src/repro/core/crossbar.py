@@ -128,6 +128,12 @@ class XbarStats:
     xbar_cols: int = XBAR_COLS
 
     def merge(self, o: "XbarStats"):
+        if (o.xbar_rows, o.xbar_cols) != (self.xbar_rows, self.xbar_cols):
+            raise ValueError(
+                f"cannot merge XbarStats computed under different crossbar "
+                f"geometries: {self.xbar_rows}x{self.xbar_cols} vs "
+                f"{o.xbar_rows}x{o.xbar_cols} — recompute both at one "
+                "geometry first")
         for f in ("total_cells", "nonzero_cells", "saved_cells", "n_xbars",
                   "xbars_fully_free", "xbars_needed_strict", "live_area"):
             setattr(self, f, getattr(self, f) + getattr(o, f))

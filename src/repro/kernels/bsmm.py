@@ -23,7 +23,7 @@ paper §V.C), so the compacted indices are baked in as constants.
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -86,7 +86,14 @@ def bsmm_pallas(x, w, tile_mask: np.ndarray, *, bm: int = 128,
         f"shapes must tile: {(M, K, N)} vs {(bm, bk, bn)}"
     idx, counts, kmax = compact_tile_indices(tile_mask)
     assert idx.shape[0] == N // bn and tile_mask.shape[0] == K // bk
+    return _bsmm_compact(x, w, idx, counts, kmax, bm=bm, bk=bk, bn=bn,
+                         interpret=interpret)
 
+
+def _bsmm_compact(x, w, idx, counts, kmax: int, *, bm: int, bk: int,
+                  bn: int, interpret: bool):
+    M, K = x.shape
+    N = w.shape[1]
     grid = (M // bm, N // bn, kmax)
     kernel = pl.pallas_call(
         _bsmm_kernel,
@@ -109,6 +116,77 @@ def bsmm_pallas(x, w, tile_mask: np.ndarray, *, bm: int = 128,
         interpret=interpret,
     )
     return kernel(jnp.asarray(counts), jnp.asarray(idx), x, w)
+
+
+# ---------------------------------------------------------------------------
+# Tile plans: precompiled sparsity metadata for serving-time matmuls
+# ---------------------------------------------------------------------------
+class TilePlan(NamedTuple):
+    """Static bsmm dispatch data for one pruned (K, N) weight.
+
+    Built once offline from the pruning masks (``make_tile_plan``);
+    closed over by the jitted decode step so the compacted indices are
+    compile-time constants, exactly like the crossbar bitstream the
+    paper bakes into the ReRAM controller.
+    """
+    idx: np.ndarray         # (Nt, KMAX) int32 — live K-tile ids per column
+    counts: np.ndarray      # (Nt,) int32
+    kmax: int
+    tile: int               # square tile edge (the MXU/crossbar 128)
+    live_tiles: int
+    total_tiles: int
+    interpret: bool = True
+
+
+def make_tile_plan(mask: np.ndarray, *, tile: int = 128,
+                   interpret: bool = True) -> Optional[TilePlan]:
+    """Elementwise {0,1} mask (K, N) → ``TilePlan`` or None if the shape
+    does not tile evenly (caller falls back to a dense matmul)."""
+    m = np.asarray(mask)
+    if m.ndim != 2:
+        return None
+    K, N = m.shape
+    if K == 0 or N == 0 or K % tile or N % tile:
+        return None
+    bitmap = (m != 0).reshape(K // tile, tile, N // tile, tile).any((1, 3))
+    idx, counts, kmax = compact_tile_indices(bitmap.astype(np.int32))
+    return TilePlan(idx=idx, counts=counts, kmax=kmax, tile=tile,
+                    live_tiles=int(bitmap.sum()),
+                    total_tiles=int(bitmap.size), interpret=interpret)
+
+
+def plan_matmul(x, w, plan: Optional[TilePlan]):
+    """x (..., K) @ w (K, N) routed through the block-sparse kernel.
+
+    ``plan=None`` is the dense path.  Rows are zero-padded up to a
+    sublane multiple (decode batches are tiny: a handful of slots), so
+    decode-time compute/bandwidth still scales with the live-tile count
+    along K — the dimension pruning actually thins.
+    """
+    if plan is None:
+        return x @ w
+    lead = x.shape[:-1]
+    K = x.shape[-1]
+    N = w.shape[-1]
+    M = int(np.prod(lead)) if lead else 1
+    x2 = x.reshape(M, K)
+    # pad M to a multiple of 8 (f32 sublane); large M tiles at 128
+    mp = -M % 8
+    Mp = M + mp
+    if Mp >= plan.tile:
+        mp += -Mp % plan.tile
+        Mp = M + mp
+        bm = plan.tile
+    else:
+        bm = Mp
+    if mp:
+        x2 = jnp.pad(x2, ((0, mp), (0, 0)))
+    out = _bsmm_compact(x2, w, plan.idx, plan.counts, plan.kmax,
+                        bm=bm, bk=plan.tile, bn=plan.tile,
+                        interpret=plan.interpret)
+    if mp:
+        out = out[:M]
+    return out.reshape(*lead, N)
 
 
 def _masked_kernel(x_ref, w_ref, m_ref, o_ref, acc_ref):

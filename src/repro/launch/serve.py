@@ -45,6 +45,7 @@ def main():
     install(ShardingRules(mesh))
 
     params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    masks = None
     if args.pruned > 0:
         masks = make_masks(params, lm_prunable)
         per_step = 1 - (1 - args.pruned) ** (1 / 3)
@@ -59,7 +60,7 @@ def main():
         engine = ServeEngine(params=params, cfg=cfg,
                              prefill_fn=tfm.prefill,
                              decode_fn=tfm.decode_step,
-                             batch_slots=8, capacity=256)
+                             batch_slots=8, capacity=256, masks=masks)
         rng = np.random.RandomState(0)
         for i in range(args.requests):
             engine.submit(Request(
@@ -67,8 +68,12 @@ def main():
                                           ).astype(np.int32),
                 max_new_tokens=args.max_new))
         done = engine.run()
-    total = sum(len(r.tokens) for r in done)
-    print(f"served {len(done)} requests, {total} tokens generated")
+    rep = engine.report
+    print(f"served {rep.requests} requests, {rep.tokens_generated} tokens "
+          f"in {rep.decode_steps} decode steps "
+          f"(occupancy {rep.slot_occupancy:.0%}, "
+          f"{rep.tokens_per_s:.1f} tok/s, "
+          f"bsmm={'on' if rep.bsmm_enabled else 'off'})")
 
 
 if __name__ == "__main__":

@@ -17,6 +17,7 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import bsmm
 from repro.models.layers import apply_rope, rmsnorm, rmsnorm_init, xavier
 
 
@@ -73,7 +74,8 @@ def attend(q, k, v, *, causal: bool, q_offset, scale: Optional[float] = None,
     """Exact attention for one query block against full keys.
 
     q: (B,Sq,Hq,hd)  k,v: (B,Sk,Hkv,hd).  q_offset: global position of
-    q[0] (int or traced scalar).  kv_valid_len: mask keys >= this length.
+    q[0] (int or traced scalar).  kv_valid_len: mask keys >= this length
+    — a scalar, or a (B,) vector for per-row (per-slot) valid lengths.
     """
     B, Sq, Hq, hd = q.shape
     Sk, Hkv = k.shape[1], k.shape[2]
@@ -87,8 +89,14 @@ def attend(q, k, v, *, causal: bool, q_offset, scale: Optional[float] = None,
     if causal:
         mask &= kpos[None, :] <= qpos[:, None]
     if kv_valid_len is not None:
-        mask &= (kpos < kv_valid_len)[None, :]
-    scores = jnp.where(mask[None, None, None], scores, -1e30)
+        kvl = jnp.asarray(kv_valid_len)
+        if kvl.ndim == 0:
+            mask &= (kpos < kvl)[None, :]
+        else:                                  # per-row: (B,) → (B,Sq,Sk)
+            mask = mask[None] & (kpos[None, :] < kvl[:, None])[:, None, :]
+    if mask.ndim == 2:
+        mask = mask[None]
+    scores = jnp.where(mask[:, None, None], scores, -1e30)
     w = jax.nn.softmax(scores, axis=-1)
     out = _grouped_out(w, v)                           # (B,Sq,Hkv,G,dv)
     return out.reshape(B, Sq, Hq, v.shape[-1]).astype(q.dtype)
@@ -183,11 +191,13 @@ def gqa_cache_spec(batch: int, capacity: int, n_kv_heads: int, head_dim: int,
     return KVCache(k=zeros, v=zeros, index=jax.ShapeDtypeStruct((), jnp.int32))
 
 
-def gqa_qkv(params, x, *, n_heads, n_kv_heads, head_dim, positions, rope_theta):
+def gqa_qkv(params, x, *, n_heads, n_kv_heads, head_dim, positions,
+            rope_theta, plan=None):
     B, S, _ = x.shape
-    q = x @ params["wq"]
-    k = x @ params["wk"]
-    v = x @ params["wv"]
+    plan = plan or {}
+    q = bsmm.plan_matmul(x, params["wq"], plan.get("wq"))
+    k = bsmm.plan_matmul(x, params["wk"], plan.get("wk"))
+    v = bsmm.plan_matmul(x, params["wv"], plan.get("wv"))
     if "bq" in params:
         q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
     q = q.reshape(B, S, n_heads, head_dim)
@@ -215,13 +225,25 @@ def gqa_forward(params, x, *, n_heads, n_kv_heads, head_dim, rope_theta,
 
 def gqa_make_cache(params, x, *, n_heads, n_kv_heads, head_dim, rope_theta,
                    capacity: int, window: Optional[int] = None,
-                   block_q: int = 512):
-    """Prefill: returns (attn_out_projected, KVCache)."""
+                   block_q: int = 512, valid_len=None):
+    """Prefill: returns (attn_out_projected, KVCache).
+
+    ``valid_len`` (B,) marks right-padded batches: tokens at positions
+    ≥ valid_len[b] are padding.  Causality already keeps real queries
+    from seeing the padded tail, so only the cache bookkeeping changes —
+    the per-row index starts at ``valid_len`` instead of S, and decode
+    masks (then overwrites) the pad keys above it.  Requires S ≤
+    capacity and full (non-windowed) attention.
+    """
     B, S, _ = x.shape
     positions = jnp.broadcast_to(jnp.arange(S), (B, S))
     q, k, v = gqa_qkv(params, x, n_heads=n_heads, n_kv_heads=n_kv_heads,
                       head_dim=head_dim, positions=positions,
                       rope_theta=rope_theta)
+    if valid_len is not None and (window is not None or S > capacity):
+        raise ValueError("valid_len prefill needs full attention with "
+                         f"S <= capacity, got S={S}, capacity={capacity}, "
+                         f"window={window}")
     if window is not None:
         out = sliding_window_attention(q, k, v, window=window)
         keep = min(window, capacity, S)
@@ -232,32 +254,49 @@ def gqa_make_cache(params, x, *, n_heads, n_kv_heads, head_dim, rope_theta,
     vc = jnp.zeros_like(kc)
     kc = jax.lax.dynamic_update_slice(kc, k[:, S - keep:], (0, 0, 0, 0))
     vc = jax.lax.dynamic_update_slice(vc, v[:, S - keep:], (0, 0, 0, 0))
-    cache = KVCache(kc, vc, jnp.asarray(S, jnp.int32))
+    if valid_len is None:
+        index = jnp.asarray(S, jnp.int32)
+    else:
+        index = jnp.asarray(valid_len, jnp.int32).reshape(B)
+    cache = KVCache(kc, vc, index)
     proj = out.reshape(B, S, n_heads * head_dim) @ params["wo"]
     return proj, cache
 
 
 def gqa_decode(params, cache: KVCache, x, *, n_heads, n_kv_heads, head_dim,
-               rope_theta, window: Optional[int] = None):
-    """One decode step. x: (B, 1, d).  Ring-buffer writes for windows."""
+               rope_theta, window: Optional[int] = None, plan=None):
+    """One decode step. x: (B, 1, d).  Ring-buffer writes for windows.
+
+    ``cache.index`` may be a scalar (whole batch in lockstep) or a (B,)
+    vector (continuous batching: every slot at its own position).
+    ``plan`` optionally routes the q/k/v/o projections through the
+    block-sparse kernel (keys "wq"/"wk"/"wv"/"wo" → ``TilePlan``).
+    """
     B, S, _ = x.shape
     assert S == 1
     capacity = cache.k.shape[1]
-    pos = cache.index  # scalar: absolute position of the new token
-    positions = jnp.broadcast_to(pos[None], (B, 1))
+    pos = cache.index        # () or (B,): absolute position of the new token
+    per_slot = pos.ndim == 1
+    positions = pos[:, None] if per_slot else jnp.broadcast_to(pos[None],
+                                                               (B, 1))
     q, k, v = gqa_qkv(params, x, n_heads=n_heads, n_kv_heads=n_kv_heads,
                       head_dim=head_dim, positions=positions,
-                      rope_theta=rope_theta)
+                      rope_theta=rope_theta, plan=plan)
     if window is None:
         slot = jnp.minimum(pos, capacity - 1)
     else:
         slot = pos % capacity
-    kc = jax.lax.dynamic_update_slice(cache.k, k, (0, slot, 0, 0))
-    vc = jax.lax.dynamic_update_slice(cache.v, v, (0, slot, 0, 0))
+    if per_slot:
+        kc = cache.k.at[jnp.arange(B), slot].set(k[:, 0])
+        vc = cache.v.at[jnp.arange(B), slot].set(v[:, 0])
+    else:
+        kc = jax.lax.dynamic_update_slice(cache.k, k, (0, slot, 0, 0))
+        vc = jax.lax.dynamic_update_slice(cache.v, v, (0, slot, 0, 0))
     # valid cache entries: all slots < min(pos+1, capacity)
     valid = jnp.minimum(pos + 1, capacity)
-    out = attend(q, kc, vc, causal=False, q_offset=pos, kv_valid_len=valid)
-    proj = out.reshape(B, 1, n_heads * head_dim) @ params["wo"]
+    out = attend(q, kc, vc, causal=False, q_offset=0, kv_valid_len=valid)
+    proj = bsmm.plan_matmul(out.reshape(B, 1, n_heads * head_dim),
+                            params["wo"], (plan or {}).get("wo"))
     return proj, KVCache(kc, vc, pos + 1)
 
 
@@ -312,35 +351,51 @@ def mla_forward(params, x, *, n_heads, mla, rope_theta, block_q: int = 512):
 
 
 def mla_make_cache(params, x, *, n_heads, mla, rope_theta, capacity: int,
-                   block_q: int = 512):
+                   block_q: int = 512, valid_len=None):
     B, S, _ = x.shape
     positions = jnp.broadcast_to(jnp.arange(S), (B, S))
     _, _, c_kv, k_rope = _mla_qkv_latent(params, x, mla, n_heads, rope_theta,
                                          positions)
     out = mla_forward(params, x, n_heads=n_heads, mla=mla,
                       rope_theta=rope_theta, block_q=block_q)
+    if valid_len is not None and S > capacity:
+        raise ValueError(f"valid_len prefill needs S <= capacity, "
+                         f"got S={S}, capacity={capacity}")
     keep = min(S, capacity)
     cc = jnp.zeros((B, capacity, mla.kv_lora_rank), x.dtype)
     kr = jnp.zeros((B, capacity, mla.qk_rope_head_dim), x.dtype)
     cc = jax.lax.dynamic_update_slice(cc, c_kv[:, S - keep:], (0, 0, 0))
     kr = jax.lax.dynamic_update_slice(kr, k_rope[:, S - keep:], (0, 0, 0))
-    return out, MLACache(cc, kr, jnp.asarray(S, jnp.int32))
+    if valid_len is None:
+        index = jnp.asarray(S, jnp.int32)
+    else:
+        index = jnp.asarray(valid_len, jnp.int32).reshape(B)
+    return out, MLACache(cc, kr, index)
 
 
 def mla_decode(params, cache: MLACache, x, *, n_heads, mla, rope_theta):
-    """Absorbed-form MLA decode: scores/values in the latent space."""
+    """Absorbed-form MLA decode: scores/values in the latent space.
+
+    ``cache.index`` may be scalar or (B,) — see ``gqa_decode``.
+    """
     B, S, _ = x.shape
     assert S == 1
     dn, dr, dv = mla.qk_nope_head_dim, mla.qk_rope_head_dim, mla.v_head_dim
     r = mla.kv_lora_rank
     capacity = cache.c_kv.shape[1]
     pos = cache.index
-    positions = jnp.broadcast_to(pos[None], (B, 1))
+    per_slot = pos.ndim == 1
+    positions = pos[:, None] if per_slot else jnp.broadcast_to(pos[None],
+                                                               (B, 1))
     q_nope, q_rope, c_new, kr_new = _mla_qkv_latent(
         params, x, mla, n_heads, rope_theta, positions)
     slot = jnp.minimum(pos, capacity - 1)
-    cc = jax.lax.dynamic_update_slice(cache.c_kv, c_new, (0, slot, 0))
-    kr = jax.lax.dynamic_update_slice(cache.k_rope, kr_new, (0, slot, 0))
+    if per_slot:
+        cc = cache.c_kv.at[jnp.arange(B), slot].set(c_new[:, 0])
+        kr = cache.k_rope.at[jnp.arange(B), slot].set(kr_new[:, 0])
+    else:
+        cc = jax.lax.dynamic_update_slice(cache.c_kv, c_new, (0, slot, 0))
+        kr = jax.lax.dynamic_update_slice(cache.k_rope, kr_new, (0, slot, 0))
     # absorb W_uk into q:  q_lat[b,h,r] = sum_dn q_nope · W_uk[r, h*dn+dn']
     w_uk = params["w_uk"].reshape(r, n_heads, dn)
     q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0], w_uk,
@@ -349,7 +404,10 @@ def mla_decode(params, cache: MLACache, x, *, n_heads, mla, rope_theta):
     s_rope = jnp.einsum("bhd,bsd->bhs", q_rope[:, 0].astype(jnp.float32),
                         kr.astype(jnp.float32))
     scores = (s_lat + s_rope) / math.sqrt(dn + dr)
-    valid = jnp.arange(capacity)[None, None, :] < jnp.minimum(pos + 1, capacity)
+    n_valid = jnp.minimum(pos + 1, capacity)       # () or (B,)
+    if per_slot:
+        n_valid = n_valid[:, None, None]
+    valid = jnp.arange(capacity)[None, None, :] < n_valid
     scores = jnp.where(valid, scores, -1e30)
     w = jax.nn.softmax(scores, axis=-1)
     ctx_lat = jnp.einsum("bhs,bsr->bhr", w, cc.astype(jnp.float32))

@@ -91,15 +91,19 @@ def _act(name: str, x):
     raise ValueError(name)
 
 
-def mlp(params, x, act: str = "silu"):
-    up = x @ params["up"]
+def mlp(params, x, act: str = "silu", plan=None):
+    """``plan`` optionally routes up/gate/down through the block-sparse
+    kernel (serving a pruned ticket); dense otherwise."""
+    from repro.kernels.bsmm import plan_matmul
+    plan = plan or {}
+    up = plan_matmul(x, params["up"], plan.get("up"))
     if "up_b" in params:
         up = up + params["up_b"]
     if "gate" in params:
-        h = _act(act, x @ params["gate"]) * up
+        h = _act(act, plan_matmul(x, params["gate"], plan.get("gate"))) * up
     else:
         h = _act(act, up)
-    out = h @ params["down"]
+    out = plan_matmul(h, params["down"], plan.get("down"))
     if "down_b" in params:
         out = out + params["down_b"]
     return out

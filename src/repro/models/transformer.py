@@ -191,13 +191,24 @@ def init_params(rng, cfg: ArchConfig):
 # Block application
 # ---------------------------------------------------------------------------
 def _apply_block(cfg: ArchConfig, sig, p, x, mode: str, cache,
-                 capacity: Optional[int]):
-    """Returns (x, new_cache, aux_loss)."""
+                 capacity: Optional[int], valid_len=None, plan=None):
+    """Returns (x, new_cache, aux_loss).
+
+    ``valid_len`` (B,) marks right-padded prefill batches (masked
+    prefill — attention kinds only); ``plan`` routes decode projections
+    through the block-sparse kernel (keys "attn"/"mlp").
+    """
     kind, is_moe = sig
     window = cfg.local_window if kind == LOCAL_ATTN else None
     aux = jnp.zeros((), jnp.float32)
     h = apply_norm(cfg.norm, p["norm1"], x)
     new_cache = cache
+    plan = plan or {}
+    if valid_len is not None and (kind not in (ATTN,) or mode != "prefill"):
+        raise ValueError(
+            f"valid_len is only supported for full-attention prefill, "
+            f"got kind={kind!r} mode={mode!r}; use exact-length prefill "
+            "for windowed/recurrent blocks")
     if kind in (ATTN, LOCAL_ATTN):
         if cfg.mla is not None:
             kw = dict(n_heads=cfg.n_heads, mla=cfg.mla,
@@ -206,7 +217,8 @@ def _apply_block(cfg: ArchConfig, sig, p, x, mode: str, cache,
                 out = attn_lib.mla_forward(p["attn"], h, **kw)
             elif mode == "prefill":
                 out, new_cache = attn_lib.mla_make_cache(
-                    p["attn"], h, capacity=capacity, **kw)
+                    p["attn"], h, capacity=capacity, valid_len=valid_len,
+                    **kw)
             else:
                 out, new_cache = attn_lib.mla_decode(p["attn"], cache, h, **kw)
         else:
@@ -216,10 +228,12 @@ def _apply_block(cfg: ArchConfig, sig, p, x, mode: str, cache,
                 out = attn_lib.gqa_forward(p["attn"], h, window=window, **kw)
             elif mode == "prefill":
                 out, new_cache = attn_lib.gqa_make_cache(
-                    p["attn"], h, capacity=capacity, window=window, **kw)
+                    p["attn"], h, capacity=capacity, window=window,
+                    valid_len=valid_len, **kw)
             else:
                 out, new_cache = attn_lib.gqa_decode(
-                    p["attn"], cache, h, window=window, **kw)
+                    p["attn"], cache, h, window=window,
+                    plan=plan.get("attn"), **kw)
     elif kind == RGLRU:
         if mode == "forward":
             out = rec_lib.rglru_forward(p["rnn"], h)
@@ -261,7 +275,8 @@ def _apply_block(cfg: ArchConfig, sig, p, x, mode: str, cache,
             x = x + mo.y
             aux = mo.aux_loss
         else:
-            x = x + mlp(p["mlp"], h2, cfg.act)
+            x = x + mlp(p["mlp"], h2, cfg.act,
+                        plan=plan.get("mlp") if mode == "decode" else None)
         x = constrain(x, ("dp", None, None))
     return x, new_cache, aux
 
@@ -269,22 +284,33 @@ def _apply_block(cfg: ArchConfig, sig, p, x, mode: str, cache,
 # ---------------------------------------------------------------------------
 # Segment runners (scan when reps > 1)
 # ---------------------------------------------------------------------------
-def _run_segments(cfg, params, x, mode, caches, capacity):
-    """caches: None or same structure as params['segments'] holding states."""
+def _run_segments(cfg, params, x, mode, caches, capacity, valid_len=None,
+                  plan=None):
+    """caches: None or same structure as params['segments'] holding states.
+
+    ``plan``: None or a nested list mirroring params['segments'] — one
+    (static) per-position dict of tile plans, shared across a segment's
+    scanned repeats (the bitmaps are unioned over the scan axis, so a
+    tile is skipped only when it is dead in *every* layer of the
+    segment — skipping is sound because pruned weights are exact zeros).
+    """
     new_caches = []
     total_aux = jnp.zeros((), jnp.float32)
     remat = _REMAT_TRAIN and mode == "forward"
     for s_idx, (seg, pos_trees) in enumerate(zip(segments_of(cfg),
                                                  params["segments"])):
         seg_caches = caches[s_idx] if caches is not None else None
+        seg_plan = plan[s_idx] if plan is not None else None
 
-        def super_block(xc, aux_acc, ptrees, cs, seg=seg):
+        def super_block(xc, aux_acc, ptrees, cs, seg=seg, seg_plan=seg_plan):
             c_outs = []
             for pos in range(len(seg.sigs)):
                 c = cs[pos] if cs is not None else None
+                pe = seg_plan[pos] if seg_plan is not None else None
                 xc, c_new, aux = _apply_block(cfg, seg.sigs[pos],
                                               ptrees[pos], xc, mode, c,
-                                              capacity)
+                                              capacity, valid_len=valid_len,
+                                              plan=pe)
                 aux_acc = aux_acc + aux
                 c_outs.append(c_new)
             return xc, aux_acc, c_outs
@@ -386,13 +412,61 @@ def cache_spec(cfg: ArchConfig, batch: int, capacity: int):
     return out
 
 
-def prefill(params, cfg: ArchConfig, batch, capacity: int):
-    """Full-sequence prefill → (last-position logits, caches)."""
+def supports_masked_prefill(cfg: ArchConfig) -> bool:
+    """True when ``prefill`` accepts a per-row ``valid_len`` for this
+    architecture: every block is full (global) attention, dense FFN, and
+    no patch-token prefix.  Windowed/recurrent blocks carry state
+    through the padded tail, and MoE routing computes expert capacity
+    over *all* positions (pad tokens shift which real tokens are
+    dropped), so those need exact-length prefill instead."""
+    try:
+        kinds = set(cfg.blocks)
+    except Exception:
+        return False
+    return (kinds == {ATTN} and not cfg.num_patch_tokens
+            and cfg.moe is None)
+
+
+def cache_batch_axes(cfg: ArchConfig, caches):
+    """Pytree of ints matching ``caches``: the batch axis of each leaf.
+
+    Scan-stacked segments carry the layer (repeat) axis first, so their
+    cache leaves are (reps, B, ...) — batch axis 1; single-layer
+    segments are (B, ...) — axis 0.  Scalar cache indices have *no*
+    batch axis yet (leaf.ndim == axis); consumers append one.
+    ``serve.ServeEngine`` uses this to splice one request's prefill
+    caches into the right slot lane of the decode batch.
+    """
+    out = []
+    segs = segments_of(cfg)
+    if len(segs) != len(caches):
+        raise ValueError(f"cache structure has {len(caches)} segments, "
+                         f"config implies {len(segs)}")
+    for seg, seg_c in zip(segs, caches):
+        a = 1 if seg.reps > 1 else 0
+        out.append(jax.tree.map(lambda leaf, a=a: a, seg_c))
+    return out
+
+
+def prefill(params, cfg: ArchConfig, batch, capacity: int, valid_len=None):
+    """Full-sequence prefill → (last-position logits, caches).
+
+    With ``valid_len`` (B,), batch['tokens'] is right-padded and the
+    logits are taken at each row's last *valid* position; cache indices
+    start at ``valid_len`` so per-request decode is batch-invariant
+    (no request ever attends to a batch-mate's padding).
+    """
     x = _embed_inputs(cfg, params, batch)
     x = constrain(x, ("dp", None, None))
     x, caches, _ = _run_segments(cfg, params, x, "prefill",
-                                 _none_caches(cfg), capacity)
-    x_last = x[:, -1:]
+                                 _none_caches(cfg), capacity,
+                                 valid_len=valid_len)
+    if valid_len is None:
+        x_last = x[:, -1:]
+    else:
+        last = (jnp.asarray(valid_len, jnp.int32) - 1)[:, None, None]
+        last = jnp.broadcast_to(last, (x.shape[0], 1, x.shape[2]))
+        x_last = jnp.take_along_axis(x, last, axis=1)
     x_last = apply_norm(cfg.norm, params["final_norm"], x_last)
     head = params.get("unembed", params["embed"])
     logits = unembed(head, x_last)
@@ -403,11 +477,17 @@ def _none_caches(cfg):
     return [[None for _ in seg.sigs] for seg in segments_of(cfg)]
 
 
-def decode_step(params, cfg: ArchConfig, caches, token):
-    """token: (B, 1) int32 → (logits (B,1,V), new caches)."""
+def decode_step(params, cfg: ArchConfig, caches, token, plan=None):
+    """token: (B, 1) int32 → (logits (B,1,V), new caches).
+
+    ``plan`` (from ``repro.serve.ticket.build_decode_plan``) routes the
+    dense attention/MLP projections through the block-sparse Pallas
+    kernel so decode cost scales with the pruned ticket's live tiles.
+    """
     x = embed(params["embed"], token)
     x = constrain(x, ("dp", None, None))
-    x, caches, _ = _run_segments(cfg, params, x, "decode", caches, None)
+    x, caches, _ = _run_segments(cfg, params, x, "decode", caches, None,
+                                 plan=plan)
     x = apply_norm(cfg.norm, params["final_norm"], x)
     head = params.get("unembed", params["embed"])
     logits = unembed(head, x)

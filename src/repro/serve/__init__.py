@@ -1,1 +1,3 @@
-from repro.serve.engine import ServeEngine, Request  # noqa: F401
+from repro.serve.engine import (Request, ServeEngine,  # noqa: F401
+                                ServeReport)
+from repro.serve.ticket import PlanStats, build_decode_plan  # noqa: F401

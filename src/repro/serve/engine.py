@@ -1,24 +1,33 @@
-"""Batched serving engine: prefill/decode with a fixed-slot batch.
+"""Continuous-batching serving engine: slot refill mid-decode.
 
-A minimal continuous-batching scheduler over the pure ``prefill`` /
-``decode_step`` functions: requests are queued, packed into the next
-free slots of the running decode batch, and emitted as they hit EOS or
-their token budget.  Jitted steps; cache lives on device between calls.
+The scheduler keeps a fixed array of decode *slots*.  Each request is
+prefilled on its own (padded to a length bucket, masked via
+``valid_len`` so padding never leaks into attention) and its caches are
+spliced into a free slot's cache lanes; all slots then advance through
+ONE jitted decode step per token, each at its own sequence position
+(per-slot cache indices).  The moment a slot's request finishes — EOS
+or token budget — the next queued request is prefilled and spliced in
+while the other slots keep decoding.  No request ever waits for a
+batch-mate, and no request's output depends on its batch-mates.
 
 This is the LM-serving analogue of the paper's "train the pruned model"
-story: the pruned (ticket) weights drop straight in — serving benefits
-from the same tile sparsity via the bsmm kernel.
+story: hand the engine the ticket's masks and the decode projections are
+routed through the block-sparse Pallas kernel (``kernels.bsmm``), so
+decode compute/bandwidth scales with the live-tile count exactly as the
+paper's crossbar count scales with surviving 128×128 blocks.
 """
 from __future__ import annotations
 
-import dataclasses
+import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Callable, Deque, Dict, List, Optional
+from typing import Deque, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.serve.ticket import PlanStats, build_decode_plan
 
 
 @dataclass
@@ -31,11 +40,56 @@ class Request:
     done: bool = False
 
 
+@dataclass
+class ServeReport:
+    """Per-``run()`` throughput accounting."""
+    requests: int = 0
+    prefills: int = 0
+    decode_steps: int = 0
+    tokens_generated: int = 0
+    slot_occupancy: float = 0.0     # mean busy-slot fraction per decode step
+    wall_s: float = 0.0
+    tokens_per_s: float = 0.0
+    bsmm_enabled: bool = False
+    routed_matmuls: int = 0
+    live_tiles: int = 0
+    total_tiles: int = 0
+    skipped_tile_fraction: float = 0.0
+
+
+def _default_buckets(capacity: int) -> List[int]:
+    out, b = [], 8
+    while b < capacity:
+        out.append(b)
+        b *= 2
+    out.append(capacity)
+    return out
+
+
 class ServeEngine:
+    """Continuous-batching scheduler over pure prefill/decode functions.
+
+    ``masks`` (optional): the pruned ticket's mask pytree — turns on
+    block-sparse decode (``use_bsmm`` can force it off; it is never
+    forced on without masks).  ``decode_fn`` must then accept a
+    ``plan=`` kwarg (``models.transformer.decode_step`` does).
+
+    Oversized requests — ``len(prompt) + max_new_tokens > capacity`` —
+    are rejected at ``submit`` with ``ValueError`` rather than silently
+    decoding past the KV-cache capacity.
+    """
+
     def __init__(self, *, params, cfg, prefill_fn, decode_fn,
                  batch_slots: int = 8, capacity: int = 512,
                  greedy: Optional[bool] = None, temperature: float = 0.0,
-                 sample_seed: int = 0):
+                 sample_seed: int = 0, masks=None,
+                 use_bsmm: Optional[bool] = None,
+                 interpret: Optional[bool] = None,
+                 prefill_buckets: Optional[Sequence[int]] = None):
+        if batch_slots < 1:
+            raise ValueError(f"batch_slots must be >= 1, got {batch_slots}")
+        if capacity < 2:
+            raise ValueError(f"capacity must be >= 2, got {capacity}")
         self.params = params
         self.cfg = cfg
         self.capacity = capacity
@@ -45,71 +99,229 @@ class ServeEngine:
         # wins over temperature
         self.greedy = (temperature <= 0.0) if greedy is None else greedy
         self.temperature = temperature
-        self._rng = np.random.default_rng(sample_seed)
-        self._prefill = jax.jit(
-            lambda p, batch: prefill_fn(p, cfg, batch, capacity))
-        self._decode = jax.jit(
-            lambda p, caches, tok: decode_fn(p, cfg, caches, tok))
-        self.queue: Deque[Request] = deque()
-        self.active: Dict[int, Request] = {}
+        self.sample_seed = sample_seed
 
+        # -- pruned-ticket decode plan (static, baked into the jit) ----
+        # interpret=None → emulate the Pallas kernel everywhere except
+        # on a real TPU backend (interpret mode is a correctness path,
+        # not a fast path)
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        self._plan, self._plan_stats = (build_decode_plan(
+            masks, interpret=interpret) if masks is not None
+            else (None, PlanStats()))
+        if use_bsmm is False:
+            self._plan, self._plan_stats = None, PlanStats()
+        elif use_bsmm and self._plan is None:
+            raise ValueError("use_bsmm=True needs masks with routable "
+                             "dense projections")
+
+        # -- masked (bucketed) vs exact-length prefill ------------------
+        try:
+            from repro.models.transformer import supports_masked_prefill
+            self._masked_prefill = supports_masked_prefill(cfg)
+        except Exception:
+            self._masked_prefill = False
+        self._buckets = sorted(prefill_buckets) if prefill_buckets \
+            else _default_buckets(capacity)
+
+        self._prefill_exact = jax.jit(
+            lambda p, toks: prefill_fn(p, cfg, {"tokens": toks}, capacity))
+        self._prefill_masked = jax.jit(
+            lambda p, toks, vl: prefill_fn(p, cfg, {"tokens": toks},
+                                           capacity, valid_len=vl))
+        if self._plan is not None:
+            plan = self._plan
+            self._decode = jax.jit(
+                lambda p, caches, tok: decode_fn(p, cfg, caches, tok,
+                                                 plan=plan))
+        else:
+            self._decode = jax.jit(
+                lambda p, caches, tok: decode_fn(p, cfg, caches, tok))
+        self._axes = None
+        self._splice = None              # built lazily from the first prefill
+
+        self.queue: Deque[Request] = deque()
+        self.report = ServeReport()
+
+    # -- request intake ----------------------------------------------------
     def submit(self, req: Request):
+        n = len(req.prompt)
+        if n < 1:
+            raise ValueError(f"request {req.uid}: empty prompt")
+        if req.max_new_tokens < 1:
+            raise ValueError(f"request {req.uid}: max_new_tokens must be "
+                             f">= 1, got {req.max_new_tokens}")
+        if n + req.max_new_tokens > self.capacity:
+            raise ValueError(
+                f"request {req.uid}: prompt ({n}) + max_new_tokens "
+                f"({req.max_new_tokens}) exceeds KV-cache capacity "
+                f"({self.capacity}); shorten the request or raise capacity")
         self.queue.append(req)
 
-    def _sample(self, logits: np.ndarray) -> np.ndarray:
+    # -- sampling ----------------------------------------------------------
+    def _gen_for(self, req: Request):
+        # per-request stream: sampling stays batch-invariant too
+        return np.random.default_rng((self.sample_seed, req.uid))
+
+    def _sample_row(self, logits_row: np.ndarray, gen) -> int:
         """Greedy argmax, or temperature sampling via the Gumbel trick.
 
         ``temperature <= 0`` degrades to argmax so callers can sweep a
         temperature schedule down to deterministic decoding.
         """
         if self.greedy or self.temperature <= 0.0:
-            return np.argmax(logits, axis=-1)
-        z = logits.astype(np.float64) / self.temperature
-        g = self._rng.gumbel(size=z.shape)
-        return np.argmax(z + g, axis=-1)
+            return int(np.argmax(logits_row))
+        z = logits_row.astype(np.float64) / self.temperature
+        g = gen.gumbel(size=z.shape)
+        return int(np.argmax(z + g))
 
-    def run(self) -> List[Request]:
-        """Serve everything in the queue to completion (batch at a time).
+    # -- cache plumbing ----------------------------------------------------
+    # Cache leaves are NOT uniformly batch-leading: scan-stacked segments
+    # are (reps, B, ...) with the batch axis second.  The model reports
+    # each leaf's batch axis (``transformer.cache_batch_axes``); leaves
+    # whose ndim equals their axis (scalar cache indices) get a slot
+    # axis appended.
+    def _cache_axes(self, proto):
+        if self._axes is None:
+            try:
+                from repro.models.transformer import cache_batch_axes
+                self._axes = cache_batch_axes(self.cfg, proto)
+            except Exception:
+                self._axes = jax.tree.map(lambda _: 0, proto)
+        return self._axes
 
-        Requests are grouped into fixed-size decode batches; each group
-        is prefilled together (prompts padded to a common length).
+    def _empty_slot_caches(self, proto):
+        """Zeros shaped like ``proto`` with the batch axis = slot count."""
+        def mk(leaf, a):
+            leaf = jnp.asarray(leaf)
+            if leaf.ndim <= a:           # scalar index: append slot axis
+                return jnp.zeros((*leaf.shape, self.slots), leaf.dtype)
+            shape = list(leaf.shape)
+            shape[a] = self.slots
+            return jnp.zeros(tuple(shape), leaf.dtype)
+        return jax.tree.map(mk, proto, self._cache_axes(proto))
+
+    def _make_splice(self, proto):
+        """Jitted: copy a single-request prefill cache into slot lanes."""
+        axes = self._cache_axes(proto)
+
+        def impl(slot_caches, new_caches, slot):
+            def sp(dst, src, a):
+                src = jnp.asarray(src)
+                lane = (slice(None),) * a + (slot,)
+                if src.ndim <= a:        # scalar index leaf
+                    return dst.at[lane].set(src)
+                return dst.at[lane].set(jnp.take(src, 0, axis=a))
+            return jax.tree.map(sp, slot_caches, new_caches, axes)
+
+        return jax.jit(impl)
+
+    def _bucket(self, n: int) -> int:
+        for b in self._buckets:
+            if b >= n:
+                return b
+        return self.capacity
+
+    def _prefill_request(self, req: Request, gen):
+        """Single-request prefill → (first sampled token, caches).
+
+        ``gen`` is the request's sampling stream — shared with the
+        decode loop so prefill and decode draws never reuse noise.
         """
+        prompt = np.asarray(req.prompt, np.int32)
+        n = len(prompt)
+        if self._masked_prefill:
+            S = self._bucket(n)
+            toks = np.zeros((1, S), np.int32)
+            toks[0, :n] = prompt                       # right-pad
+            logits, caches = self._prefill_masked(
+                self.params, jnp.asarray(toks),
+                jnp.asarray([n], jnp.int32))
+        else:
+            logits, caches = self._prefill_exact(
+                self.params, jnp.asarray(prompt[None]))
+        tok = self._sample_row(np.asarray(logits[0, -1]), gen)
+        return tok, caches
+
+    # -- the scheduler -----------------------------------------------------
+    def run(self) -> List[Request]:
+        """Serve everything in the queue to completion (continuous).
+
+        Returns finished requests; ``self.report`` holds the run's
+        throughput accounting.
+        """
+        t0 = time.perf_counter()
         finished: List[Request] = []
-        while self.queue:
-            group = [self.queue.popleft()
-                     for _ in range(min(self.slots, len(self.queue)))]
-            max_prompt = max(len(r.prompt) for r in group)
-            toks = np.zeros((len(group), max_prompt), np.int32)
-            for i, r in enumerate(group):
-                toks[i, max_prompt - len(r.prompt):] = r.prompt  # left-pad
-            logits, caches = self._prefill(self.params,
-                                           {"tokens": jnp.asarray(toks)})
-            last = self._sample(np.asarray(logits[:, -1]))
-            for i, r in enumerate(group):
-                t = int(last[i])
-                r.tokens.append(t)
-                if r.eos_id is not None and t == r.eos_id:
-                    r.done = True
-            budget = max(r.max_new_tokens for r in group)
-            cur = last.astype(np.int32)
-            for _ in range(budget - 1):
-                logits, caches = self._decode(self.params, caches,
-                                              jnp.asarray(cur[:, None]))
-                cur = self._sample(np.asarray(logits[:, 0]))
-                alive = False
-                for i, r in enumerate(group):
-                    if r.done or len(r.tokens) >= r.max_new_tokens:
-                        r.done = True
+        slot_reqs: List[Optional[Request]] = [None] * self.slots
+        slot_gens: List[Optional[object]] = [None] * self.slots
+        cur = np.zeros((self.slots,), np.int32)
+        slot_caches = None
+        decode_steps = prefills = tokens = busy_acc = 0
+
+        def finish(req: Request):
+            req.done = True
+            finished.append(req)
+
+        while True:
+            # refill every free slot before the next decode step
+            for s in range(self.slots):
+                while slot_reqs[s] is None and self.queue:
+                    req = self.queue.popleft()
+                    gen = self._gen_for(req)
+                    tok, caches = self._prefill_request(req, gen)
+                    prefills += 1
+                    tokens += 1
+                    req.tokens.append(tok)
+                    if ((req.eos_id is not None and tok == req.eos_id)
+                            or req.max_new_tokens <= 1):
+                        finish(req)      # done at prefill; slot stays free
                         continue
-                    t = int(cur[i])
-                    r.tokens.append(t)
-                    if r.eos_id is not None and t == r.eos_id:
-                        r.done = True
-                    else:
-                        alive = True
-                if not alive:
-                    break
-            for r in group:
-                r.done = True
-                finished.append(r)
+                    if slot_caches is None:
+                        slot_caches = self._empty_slot_caches(caches)
+                        if self._splice is None:
+                            self._splice = self._make_splice(caches)
+                    slot_caches = self._splice(slot_caches, caches,
+                                               jnp.asarray(s, jnp.int32))
+                    slot_reqs[s] = req
+                    slot_gens[s] = gen
+                    cur[s] = tok
+            active = [s for s in range(self.slots)
+                      if slot_reqs[s] is not None]
+            if not active:
+                break
+            logits, slot_caches = self._decode(self.params, slot_caches,
+                                               jnp.asarray(cur[:, None]))
+            decode_steps += 1
+            busy_acc += len(active)
+            logits_h = np.asarray(logits[:, 0])
+            for s in active:
+                req = slot_reqs[s]
+                tok = self._sample_row(logits_h[s], slot_gens[s])
+                req.tokens.append(tok)
+                tokens += 1
+                cur[s] = tok
+                if ((req.eos_id is not None and tok == req.eos_id)
+                        or len(req.tokens) >= req.max_new_tokens):
+                    finish(req)
+                    slot_reqs[s] = None  # freed: refilled next loop turn
+                    slot_gens[s] = None
+
+        wall = time.perf_counter() - t0
+        st = self._plan_stats
+        self.report = ServeReport(
+            requests=len(finished),
+            prefills=prefills,
+            decode_steps=decode_steps,
+            tokens_generated=tokens,
+            slot_occupancy=(busy_acc / (decode_steps * self.slots)
+                            if decode_steps else 0.0),
+            wall_s=wall,
+            tokens_per_s=tokens / wall if wall > 0 else 0.0,
+            bsmm_enabled=self._plan is not None,
+            routed_matmuls=st.routed,
+            live_tiles=st.live_tiles,
+            total_tiles=st.total_tiles,
+            skipped_tile_fraction=st.skipped_tile_fraction,
+        )
         return finished

@@ -85,6 +85,29 @@ def test_interrupted_session_resumes_to_identical_result(tmp_path):
                                np.asarray(resumed.params["b"]))
 
 
+def test_resume_preserves_float64_baseline(tmp_path):
+    """The accept gate compares against the saved baseline; a float32
+    restore template used to downcast it, which can flip
+    ``acc >= baseline - tol`` after resume."""
+    from repro.core.masks import make_masks
+
+    params = _params()
+    base = 0.75 + 2.0 ** -40            # representable only in float64
+    assert float(np.float32(base)) != base
+    sess = PruningSession(_scripted_adapter(params),
+                          PruneConfig(max_iters=1),
+                          baseline_accuracy=base, ckpt_dir=str(tmp_path))
+    masks = make_masks(params, sess.adapter.prunable)
+    sess._save(1, 0, masks, base, [])
+
+    resumed = PruningSession(_scripted_adapter(params),
+                             PruneConfig(max_iters=1),
+                             ckpt_dir=str(tmp_path))
+    step, g_idx, _, baseline, hist = resumed._restore(masks)
+    assert step == 1 and g_idx == 0 and hist == []
+    assert baseline == base             # bit-exact float64 round-trip
+
+
 def test_session_geometry_64_changes_crossbar_accounting(tmp_path):
     """PruneConfig(xbar_rows=64, xbar_cols=64) flows through prune_step
     and the hardware report — same masks semantics, different tiling."""

@@ -67,6 +67,41 @@ def test_gqa_prefill_decode_continuity():
                                rtol=2e-4, atol=2e-4)
 
 
+def test_gqa_valid_len_prefill_and_per_slot_decode():
+    """Right-padded batched prefill (valid_len) + vector-index decode ==
+    each request prefilled/decoded alone (continuous-batching math)."""
+    rng = jax.random.PRNGKey(2)
+    p = A.gqa_init(rng, d, Hq, Hkv, hd)
+    kw = dict(n_heads=Hq, n_kv_heads=Hkv, head_dim=hd, rope_theta=1e4)
+    lens = [5, 9]
+    Smax, cap = 9, 16
+    x = jax.random.normal(jax.random.PRNGKey(6), (2, Smax, d)) * 0.1
+    x = x * (jnp.arange(Smax)[None, :, None]
+             < jnp.asarray(lens)[:, None, None])      # zero the padding
+    x_new = jax.random.normal(jax.random.PRNGKey(7), (2, 1, d)) * 0.1
+
+    _, cache = A.gqa_make_cache(p, x, capacity=cap,
+                                valid_len=jnp.asarray(lens), **kw)
+    assert cache.index.shape == (2,)
+    db, cache2 = A.gqa_decode(p, cache, x_new, **kw)
+    assert cache2.index.tolist() == [6, 10]
+
+    for i, n in enumerate(lens):
+        _, ci = A.gqa_make_cache(p, x[i:i + 1, :n], capacity=cap, **kw)
+        di, _ = A.gqa_decode(p, ci, x_new[i:i + 1], **kw)
+        np.testing.assert_allclose(np.asarray(db[i]), np.asarray(di[0]),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_gqa_valid_len_rejects_windowed_prefill():
+    p = A.gqa_init(jax.random.PRNGKey(0), d, Hq, Hkv, hd)
+    x = jnp.zeros((1, 8, d))
+    with pytest.raises(ValueError, match="valid_len"):
+        A.gqa_make_cache(p, x, capacity=16, window=4,
+                         valid_len=jnp.asarray([4]), n_heads=Hq,
+                         n_kv_heads=Hkv, head_dim=hd, rope_theta=1e4)
+
+
 def test_local_ring_buffer_decode():
     """Decode with a window-sized ring cache matches full local attention.
 

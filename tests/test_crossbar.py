@@ -71,6 +71,21 @@ def test_leaf_matrices_tags():
     np.testing.assert_array_equal(back, stacked)
 
 
+def test_merge_rejects_mismatched_geometry():
+    """Stats from different crossbar geometries must not be summed —
+    the packed count is recomputed under one geometry and would lie."""
+    m = np.ones((256, 256), bool)
+    a = xb.xbar_stats(m, xr=128, xc=128)
+    b = xb.xbar_stats(m, xr=64, xc=64)
+    with pytest.raises(ValueError, match="geometr"):
+        a.merge(b)
+    # same geometry still merges and re-packs
+    c = xb.xbar_stats(m, xr=128, xc=128)
+    a.merge(c)
+    assert a.n_xbars == 8
+    assert a.xbars_needed_packed == 8
+
+
 def test_edge_crossbars_actual_extent():
     """Non-multiple dims: savings counted over actual extents only."""
     m = np.ones((130, 100), bool)

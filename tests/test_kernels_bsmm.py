@@ -5,7 +5,8 @@ import numpy as np
 import pytest
 
 from repro.kernels.bsmm import (bsmm_pallas, compact_tile_indices,
-                                masked_matmul_pallas)
+                                make_tile_plan, masked_matmul_pallas,
+                                plan_matmul)
 from repro.kernels.ops import sparse_dense, tile_bitmap, tile_density
 from repro.kernels.ref import bsmm_ref, expand_tile_mask, masked_matmul_ref
 
@@ -90,6 +91,73 @@ def test_tile_density_accounting():
     assert tile_density(mask) == 0.75
     bm = tile_bitmap(mask)
     assert bm.shape == (2, 2) and bm[0, 0] == 0 and bm.sum() == 3
+
+
+def test_compact_indices_all_dead_column():
+    """A fully-dead output column gets count 0 and placeholder indices
+    that still point at a valid DMA target (tile 0)."""
+    tm = np.ones((4, 3), np.int32)
+    tm[:, 1] = 0
+    idx, counts, kmax = compact_tile_indices(tm)
+    assert counts.tolist() == [4, 0, 4]
+    assert kmax == 4
+    assert idx[1].tolist() == [0, 0, 0, 0]      # masked in-kernel
+
+
+def test_compact_indices_all_dead_mask_still_one_pass():
+    idx, counts, kmax = compact_tile_indices(np.zeros((5, 4), np.int32))
+    assert kmax == 1                    # grid dim must stay >= 1
+    assert counts.tolist() == [0, 0, 0, 0]
+
+
+def test_compact_indices_empty_mask():
+    idx, counts, kmax = compact_tile_indices(np.zeros((0, 0), np.int32))
+    assert counts.shape == (0,) and kmax == 1 and idx.shape == (0, 1)
+    idx, counts, kmax = compact_tile_indices(np.zeros((3, 0), np.int32))
+    assert counts.shape == (0,) and idx.shape == (0, 1)
+
+
+def test_bsmm_rejects_non_tiling_last_tile():
+    """K/N that leave a ragged (non-128-multiple) last tile must be
+    rejected, not silently mis-indexed."""
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(128, 200), jnp.float32)     # K = 200
+    w = jnp.asarray(rng.randn(200, 128), jnp.float32)
+    with pytest.raises(AssertionError, match="tile"):
+        bsmm_pallas(x, w, np.ones((2, 1), np.int32), interpret=True)
+    with pytest.raises(AssertionError):
+        bsmm_pallas(jnp.asarray(rng.randn(100, 128), jnp.float32),
+                    jnp.asarray(rng.randn(128, 128), jnp.float32),
+                    np.ones((1, 1), np.int32), interpret=True)
+
+
+def test_make_tile_plan_eligibility():
+    assert make_tile_plan(np.ones((128, 200))) is None    # ragged N
+    assert make_tile_plan(np.ones((100, 128))) is None    # ragged K
+    assert make_tile_plan(np.ones((2, 128, 128))) is None  # not 2-D
+    plan = make_tile_plan(np.ones((256, 128)))
+    assert plan is not None
+    assert (plan.live_tiles, plan.total_tiles) == (2, 2)
+
+
+def test_plan_matmul_matches_dense_with_row_padding():
+    """Tiny-M decode batches (padded to a sublane multiple) and dead
+    tiles: plan_matmul == dense on pre-masked weights."""
+    rng = np.random.RandomState(1)
+    mask = np.ones((256, 128), np.float32)
+    mask[:128] = 0.0                    # kill the first K tile
+    w = jnp.asarray(rng.randn(256, 128) * mask, jnp.float32)
+    plan = make_tile_plan(mask)
+    assert plan.live_tiles == 1
+    for lead in [(4,), (3, 1), (2, 64)]:
+        x = jnp.asarray(rng.randn(*lead, 256), jnp.float32)
+        np.testing.assert_allclose(np.asarray(plan_matmul(x, w, plan)),
+                                   np.asarray(x @ w),
+                                   rtol=1e-5, atol=1e-4)
+    # plan=None is the dense path
+    x = jnp.asarray(rng.randn(4, 256), jnp.float32)
+    np.testing.assert_allclose(np.asarray(plan_matmul(x, w, None)),
+                               np.asarray(x @ w), rtol=1e-6, atol=1e-5)
 
 
 def test_grid_skips_match_savings():

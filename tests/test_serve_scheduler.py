@@ -1,0 +1,226 @@
+"""Continuous-batching scheduler: pad-correct prefill (batch
+invariance), mid-decode slot refill vs static grouping, capacity guard,
+bsmm-backed decode, and the throughput report."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import structured_prune
+from repro.configs import PruneConfig, get_arch, scaled_down
+from repro.core.masks import apply_masks, lm_prunable
+from repro.models import transformer as tfm
+from repro.serve import Request, ServeEngine
+
+CAP = 96
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = scaled_down(get_arch("llama3.2-3b"), dtype="float32")
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _engine(cfg, params, slots=4, **kw):
+    return ServeEngine(params=params, cfg=cfg, prefill_fn=tfm.prefill,
+                       decode_fn=tfm.decode_step, batch_slots=slots,
+                       capacity=CAP, **kw)
+
+
+def _run(cfg, params, reqs, slots=4, **kw):
+    eng = _engine(cfg, params, slots=slots, **kw)
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run()
+    assert all(r.done for r in done)
+    return {r.uid: r.tokens for r in done}, eng
+
+
+# ---------------------------------------------------------------------------
+# pad correctness / batch invariance (the left-pad contamination bugfix)
+# ---------------------------------------------------------------------------
+def test_request_tokens_are_batch_invariant(setup):
+    """A request decoded alone and decoded alongside a longer prompt
+    emits identical tokens — padding must never act as real context."""
+    cfg, params = setup
+    short = np.arange(1, 7, dtype=np.int32)
+    long = np.arange(3, 27, dtype=np.int32)
+    alone, _ = _run(cfg, params,
+                    [Request(uid=1, prompt=short.copy(), max_new_tokens=8)])
+    mixed, _ = _run(cfg, params,
+                    [Request(uid=0, prompt=long.copy(), max_new_tokens=8),
+                     Request(uid=1, prompt=short.copy(), max_new_tokens=8)])
+    assert alone[1] == mixed[1]
+
+
+def test_batched_greedy_matches_autoregressive_forward(setup):
+    """Greedy decode in a mixed batch == token-by-token full forward."""
+    cfg, params = setup
+    prompts = [np.arange(1, 7, dtype=np.int32),
+               np.arange(3, 27, dtype=np.int32)]
+    got, _ = _run(cfg, params,
+                  [Request(uid=i, prompt=p.copy(), max_new_tokens=5)
+                   for i, p in enumerate(prompts)])
+
+    for i, p in enumerate(prompts):
+        toks, ctx = [], list(p)
+        for _ in range(5):
+            lg, _ = tfm.forward(
+                params, cfg,
+                {"tokens": jnp.asarray(np.asarray(ctx, np.int32)[None])})
+            nxt = int(jnp.argmax(lg[0, -1]))
+            toks.append(nxt)
+            ctx.append(nxt)
+        assert got[i] == toks
+
+
+def test_masked_prefill_matches_exact_prefill(setup):
+    """Right-padded prefill with valid_len reproduces the unpadded
+    last-position logits (the model-level half of the pad fix)."""
+    cfg, params = setup
+    prompt = np.arange(1, 8, dtype=np.int32)
+    padded = np.zeros((1, 16), np.int32)
+    padded[0, :7] = prompt
+    lg_m, caches = tfm.prefill(params, cfg, {"tokens": jnp.asarray(padded)},
+                               32, valid_len=jnp.asarray([7]))
+    lg_e, _ = tfm.prefill(params, cfg,
+                          {"tokens": jnp.asarray(prompt[None])}, 32)
+    np.testing.assert_allclose(np.asarray(lg_m), np.asarray(lg_e),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_supports_masked_prefill_flags():
+    assert tfm.supports_masked_prefill(
+        scaled_down(get_arch("llama3.2-3b")))
+    # recurrent blocks carry state through padding → exact-length only
+    assert not tfm.supports_masked_prefill(
+        scaled_down(get_arch("recurrentgemma-2b")))
+    # MoE expert capacity is computed over padded positions too
+    assert not tfm.supports_masked_prefill(
+        scaled_down(get_arch("deepseek-v3-671b")))
+
+
+# ---------------------------------------------------------------------------
+# slot refill vs static group-at-a-time batching
+# ---------------------------------------------------------------------------
+def test_refill_beats_static_grouping_with_identical_outputs(setup):
+    """Mixed budgets: the refilling scheduler finishes in strictly fewer
+    decode steps than static grouping (each group stalls on its slowest
+    member: sum of per-group max budgets), with identical tokens."""
+    cfg, params = setup
+    budgets = [9, 2, 9, 2]
+    slots = 2
+    mk = lambda: [Request(uid=i, prompt=np.arange(1 + i, 9 + i,
+                                                  dtype=np.int32),
+                          max_new_tokens=b)
+                  for i, b in enumerate(budgets)]
+    got, eng = _run(cfg, params, mk(), slots=slots)
+    # static grouping: groups [9,2],[9,2] → (9-1) + (9-1) decode steps
+    static_steps = sum(
+        max(budgets[i:i + slots]) - 1
+        for i in range(0, len(budgets), slots))
+    assert eng.report.decode_steps < static_steps
+    assert all(len(got[i]) == b for i, b in enumerate(budgets))
+
+    # identical per-request outputs vs serving each request by itself
+    for req in mk():
+        solo, _ = _run(cfg, params, [req], slots=slots)
+        assert solo[req.uid] == got[req.uid]
+
+
+def test_more_requests_than_slots_all_complete(setup):
+    cfg, params = setup
+    got, eng = _run(cfg, params,
+                    [Request(uid=i,
+                             prompt=np.arange(1, 5 + i % 7, dtype=np.int32),
+                             max_new_tokens=2 + i % 5)
+                     for i in range(9)], slots=3)
+    assert len(got) == 9
+    assert all(len(got[i]) == 2 + i % 5 for i in range(9))
+
+
+# ---------------------------------------------------------------------------
+# capacity guard
+# ---------------------------------------------------------------------------
+def test_oversized_request_rejected(setup):
+    cfg, params = setup
+    eng = _engine(cfg, params)
+    with pytest.raises(ValueError, match="capacity"):
+        eng.submit(Request(uid=0,
+                           prompt=np.arange(CAP - 3, dtype=np.int32),
+                           max_new_tokens=4))
+    # right at the boundary is fine
+    eng.submit(Request(uid=1, prompt=np.arange(CAP - 4, dtype=np.int32),
+                       max_new_tokens=4))
+
+
+def test_degenerate_requests_rejected(setup):
+    cfg, params = setup
+    eng = _engine(cfg, params)
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.submit(Request(uid=0, prompt=np.zeros((0,), np.int32)))
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        eng.submit(Request(uid=1, prompt=np.arange(4, dtype=np.int32),
+                           max_new_tokens=0))
+
+
+# ---------------------------------------------------------------------------
+# throughput report
+# ---------------------------------------------------------------------------
+def test_throughput_report_fields(setup):
+    cfg, params = setup
+    got, eng = _run(cfg, params,
+                    [Request(uid=i, prompt=np.arange(1, 9, dtype=np.int32),
+                             max_new_tokens=4) for i in range(5)], slots=2)
+    rep = eng.report
+    assert rep.requests == 5
+    assert rep.prefills == 5
+    assert rep.tokens_generated == sum(len(t) for t in got.values()) == 20
+    assert rep.decode_steps > 0
+    assert 0.0 < rep.slot_occupancy <= 1.0
+    assert rep.wall_s > 0 and rep.tokens_per_s > 0
+    assert not rep.bsmm_enabled
+    assert rep.skipped_tile_fraction == 0.0
+
+
+def test_empty_run_reports_zero(setup):
+    cfg, params = setup
+    eng = _engine(cfg, params)
+    assert eng.run() == []
+    assert eng.report.requests == 0
+    assert eng.report.decode_steps == 0
+
+
+# ---------------------------------------------------------------------------
+# bsmm-backed decode for pruned tickets
+# ---------------------------------------------------------------------------
+def test_bsmm_decode_matches_dense_and_reports_tiles(setup):
+    cfg, params = setup
+    masks = structured_prune(params, [("filter", 0.3)],
+                             prunable=lm_prunable, cfg=PruneConfig())
+    pm = apply_masks(params, masks)
+    mk = lambda: [Request(uid=i,
+                          prompt=np.arange(1 + i, 9 + i, dtype=np.int32),
+                          max_new_tokens=5) for i in range(3)]
+    dense, _ = _run(cfg, pm, mk(), slots=2)
+    sparse, eng = _run(cfg, pm, mk(), slots=2, masks=masks)
+    assert dense == sparse
+    rep = eng.report
+    assert rep.bsmm_enabled
+    assert rep.routed_matmuls > 0
+    assert rep.total_tiles >= rep.live_tiles > 0
+    assert 0.0 <= rep.skipped_tile_fraction < 1.0
+
+
+def test_use_bsmm_flags(setup):
+    cfg, params = setup
+    with pytest.raises(ValueError, match="use_bsmm"):
+        _engine(cfg, params, use_bsmm=True)          # no masks
+    masks = structured_prune(params, [("filter", 0.2)],
+                             prunable=lm_prunable, cfg=PruneConfig())
+    eng = _engine(cfg, params, masks=masks, use_bsmm=False)  # forced off
+    eng.submit(Request(uid=0, prompt=np.arange(1, 7, dtype=np.int32),
+                       max_new_tokens=3))
+    eng.run()
+    assert not eng.report.bsmm_enabled
