@@ -6,17 +6,31 @@ Prints ``name,us_per_call,derived`` CSV (one line per measurement).
   fig6_crossbars  — paper Fig. 6 (crossbar savings, iso-performance)
   fig7_speedup    — paper Fig. 7 (training speedup, iso-area)
   fig8_layerwise  — paper Fig. 8 (ResNet-18 per-layer xbars/time)
-  kernels_bench   — block-sparse matmul tile-skip scaling
+  kernels_bench   — block-sparse train-step (fwd+bwd) tile-skip scaling
   roofline        — corrected roofline table from the dry-run cache
 
 Run all: ``PYTHONPATH=src python -m benchmarks.run``
 One:     ``PYTHONPATH=src python -m benchmarks.run fig6``
+JSON:    ``PYTHONPATH=src python -m benchmarks.run kernels --json``
+         writes ``BENCH_kernels.json`` (machine-readable kernel records:
+         measured step-time saving vs the tile-density/kmax prediction).
 """
-import sys
+import argparse
+import json
+import platform
 
 
 def main() -> None:
-    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("which", nargs="?", default="all",
+                    choices=["all", "fig5", "fig6", "fig7", "fig8",
+                             "kernels", "roofline"])
+    ap.add_argument("--json", nargs="?", const="BENCH_kernels.json",
+                    default=None, metavar="PATH",
+                    help="write the kernel-bench records to PATH "
+                         "(default BENCH_kernels.json)")
+    opts = ap.parse_args()
+    which, json_path = opts.which, opts.json
     print("name,us_per_call,derived")
     mods = []
     if which in ("all", "fig8"):
@@ -37,8 +51,27 @@ def main() -> None:
     if which in ("all", "fig5"):
         from benchmarks import fig5_sparsity
         mods.append(fig5_sparsity)
+    kernel_records = None
     for m in mods:
-        m.run()
+        out = m.run()
+        if m.__name__.endswith("kernels_bench"):
+            kernel_records = out
+    if json_path is not None:
+        if kernel_records is None:
+            raise SystemExit("--json needs the kernels bench in the run "
+                             "(use `kernels` or `all`)")
+        import jax
+        payload = {
+            "bench": "kernels",
+            "backend": jax.default_backend(),
+            "python": platform.python_version(),
+            "jax": jax.__version__,
+            "records": kernel_records,
+        }
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+        print(f"# wrote {json_path} ({len(kernel_records)} records)")
 
 
 if __name__ == '__main__':

@@ -25,7 +25,9 @@ from repro.core.masks import (apply_masks, cnn_prunable, lm_prunable,
 from repro.data import DataPipeline, SyntheticImages, SyntheticLM
 from repro.optim import (adamw, constant, exponential_epoch_decay, masked,
                          sgd, warmup_cosine)
-from repro.train import Trainer
+from repro.kernels.bsmm import default_interpret
+from repro.models.plans import PlanStats
+from repro.train import Trainer, cnn_train_plan, lm_train_plan
 
 
 class ModelAdapter:
@@ -87,13 +89,24 @@ class CNNAdapter(ModelAdapter):
     BatchNorm statistics thread through the Trainer's aux-state channel;
     each ``train`` call restarts them from initialisation (every prune
     iteration retrains the rewound ticket from scratch, paper line 3).
+
+    ``use_bsmm``: when retraining under masks, the FC/head matmuls are
+    routed through the block-sparse kernel — the plan is rebuilt from
+    the CURRENT masks on every ``train`` call, so each deeper prune
+    round retrains with proportionally fewer tile passes.  ``None``
+    (default) auto-enables on real TPU backends only: under CPU
+    interpret emulation the kernels are a correctness path, not a fast
+    path, so big CPU runs stay on XLA dense unless you pass ``True``.
+    Shapes that don't tile 128 stay dense automatically.
     """
 
     def __init__(self, cfg, *, data=None, steps: int = 80,
                  batch_size: int = 64, lr: float = 0.05,
                  lr_decay: float = 0.95, decay_every: Optional[int] = None,
                  eval_batches: int = 3, eval_batch_size: int = 128,
-                 momentum: float = 0.9, log_every: int = 0):
+                 momentum: float = 0.9, log_every: int = 0,
+                 use_bsmm: Optional[bool] = None,
+                 bsmm_interpret: Optional[bool] = None):
         from repro.models import cnn as cnn_lib
         self._cnn = cnn_lib
         self.cfg = cfg
@@ -107,6 +120,10 @@ class CNNAdapter(ModelAdapter):
         self.eval_batch_size = eval_batch_size
         self.momentum = momentum
         self.log_every = log_every
+        self.use_bsmm = (not default_interpret() if use_bsmm is None
+                         else use_bsmm)
+        self.bsmm_interpret = bsmm_interpret
+        self.last_plan_stats = PlanStats()
         self._bn0 = None
         self._bn = None
 
@@ -138,10 +155,13 @@ class CNNAdapter(ModelAdapter):
         if masks is not None:
             opt = masked(opt, masks)
             params = apply_masks(params, masks)
+        plans, self.last_plan_stats = (
+            cnn_train_plan(masks, interpret=self.bsmm_interpret)
+            if masks is not None and self.use_bsmm else (None, PlanStats()))
 
         def loss(p, state, batch):
             l, (new_state, _) = self._cnn.loss_fn(p, state, self.cfg, batch,
-                                                  train=True)
+                                                  train=True, plans=plans)
             return l, (new_state, {})
 
         # donate=False: the session re-applies masks to the same w_init
@@ -170,6 +190,10 @@ class LMAdapter(ModelAdapter):
     ``evaluate`` returns NEGATIVE mean cross-entropy on held-out batches
     (higher is better, so the session's accuracy gate applies
     unchanged; set ``PruneConfig.accuracy_tolerance`` in nats).
+
+    ``use_bsmm``: retrain under masks through the block-sparse kernels
+    (attention q/k/v/o + MLP, fwd and bwd); ``None`` auto-enables on
+    real TPU backends only — see ``CNNAdapter``.
     """
 
     def __init__(self, cfg, *, data=None, steps: int = 100,
@@ -177,7 +201,9 @@ class LMAdapter(ModelAdapter):
                  peak_lr: float = 3e-4, warmup: int = 20,
                  eval_batches: int = 2, microbatch: Optional[int] = None,
                  remat: bool = False, log_every: int = 0,
-                 step_deadline_s: Optional[float] = None):
+                 step_deadline_s: Optional[float] = None,
+                 use_bsmm: Optional[bool] = None,
+                 bsmm_interpret: Optional[bool] = None):
         from repro.models import transformer as tfm
         self._tfm = tfm
         self.cfg = cfg
@@ -191,6 +217,12 @@ class LMAdapter(ModelAdapter):
         self.microbatch, self.remat = microbatch, remat
         self.log_every = log_every
         self.step_deadline_s = step_deadline_s
+        # None → auto: block-sparse retraining on real TPU backends only
+        # (interpret-mode emulation is for correctness, not speed)
+        self.use_bsmm = (not default_interpret() if use_bsmm is None
+                         else use_bsmm)
+        self.bsmm_interpret = bsmm_interpret
+        self.last_plan_stats = PlanStats()
         self.last_metrics: Dict[str, float] = {}
 
     # -- protocol ----------------------------------------------------------
@@ -216,7 +248,14 @@ class LMAdapter(ModelAdapter):
                      ckpt_every: int = 50, async_ckpt: bool = True,
                      learning_rate: Optional[float] = None) -> Trainer:
         """A fully-wired Trainer for these weights — the session/ticket
-        handoff point for long runs that need their own checkpoints."""
+        handoff point for long runs that need their own checkpoints.
+
+        With ``masks`` (and ``use_bsmm``), the train step closes over a
+        block-sparse plan derived from the CURRENT masks: forward and
+        both backward matmuls of every routed projection skip dead
+        128×128 tiles, so retraining a sparser ticket costs fewer MXU
+        passes.  The plan is static — re-jitted per prune round.
+        """
         steps = steps or self.steps
         sched = (constant(learning_rate) if learning_rate is not None
                  else warmup_cosine(self.peak_lr,
@@ -226,8 +265,14 @@ class LMAdapter(ModelAdapter):
         if masks is not None:
             opt = masked(opt, masks)
             params = apply_masks(params, masks)
+        plan, self.last_plan_stats = (
+            lm_train_plan(masks, interpret=self.bsmm_interpret)
+            if masks is not None and self.use_bsmm else (None, PlanStats()))
+        loss = (self._loss if plan is None else
+                lambda p, batch: self._tfm.loss_fn(p, self.cfg, batch,
+                                                   plan=plan))
         return Trainer(
-            loss_fn=self._loss, optimizer=opt, params=params,
+            loss_fn=loss, optimizer=opt, params=params,
             data_iter=DataPipeline(self._batch, start_step=start_step,
                                    prefetch=0),
             ckpt_dir=ckpt_dir, ckpt_every=ckpt_every, async_ckpt=async_ckpt,

@@ -153,6 +153,14 @@ class PruningSession:
         while itr < cfg.max_iters and g_idx < len(self.grans):
             itr += 1
             trained = adapter.train(params, masks)              # line 3
+            # adapters that retrain through the block-sparse kernel
+            # rebuild their plan from the current masks each round, so
+            # each deeper prune round retrains with fewer tile passes
+            pstats = getattr(adapter, "last_plan_stats", None)
+            if pstats is not None and pstats.routed:
+                log.info("iter %d retrain: %d matmuls block-sparse, "
+                         "%.1f%% tiles skipped", itr, pstats.routed,
+                         100.0 * pstats.skipped_tile_fraction)
             cand = prune_step(trained, masks, self.grans[g_idx],  # line 4
                               cfg.prune_fraction, adapter.conv_pred,
                               block=self.block, geometry=self.geometry)

@@ -22,7 +22,6 @@ paper §V.C), so the compacted indices are baked in as constants.
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple, Optional, Tuple
 
 import jax
@@ -32,6 +31,23 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.compat import CompilerParams
+
+
+def default_interpret() -> bool:
+    """Emulate the Pallas kernels everywhere except on a real TPU
+    backend (interpret mode is a correctness path, not a fast path)."""
+    return jax.default_backend() != "tpu"
+
+
+def tile_bitmap(mask: np.ndarray, bk: int = 128, bn: int = 128) -> np.ndarray:
+    """Elementwise {0,1} mask (K, N) → tile liveness (⌈K/bk⌉, ⌈N/bn⌉)."""
+    m = np.asarray(mask) != 0
+    K, N = m.shape
+    pk, pn = (-K) % bk, (-N) % bn
+    if pk or pn:
+        m = np.pad(m, ((0, pk), (0, pn)))
+    return m.reshape(m.shape[0] // bk, bk, m.shape[1] // bn, bn) \
+            .any(axis=(1, 3)).astype(np.int32)
 
 
 def compact_tile_indices(tile_mask: np.ndarray) -> Tuple[np.ndarray,
@@ -125,9 +141,16 @@ class TilePlan(NamedTuple):
     """Static bsmm dispatch data for one pruned (K, N) weight.
 
     Built once offline from the pruning masks (``make_tile_plan``);
-    closed over by the jitted decode step so the compacted indices are
-    compile-time constants, exactly like the crossbar bitstream the
+    closed over by the jitted decode/train step so the compacted indices
+    are compile-time constants, exactly like the crossbar bitstream the
     paper bakes into the ReRAM controller.
+
+    The forward plan (``idx``/``counts``/``kmax``) steers ``out = x @ w``
+    skipping dead K tiles.  The *transposed* plan (``idx_t``/``counts_t``
+    /``nmax``) steers the backward ``dx = g @ wᵀ`` the same way along N,
+    and the flat live-tile coordinates (``kk``/``nn``) let the ``dw``
+    kernel materialise only live (bk, bn) tiles — dead-tile weight grads
+    are identically zero because the mask is static.
     """
     idx: np.ndarray         # (Nt, KMAX) int32 — live K-tile ids per column
     counts: np.ndarray      # (Nt,) int32
@@ -136,6 +159,11 @@ class TilePlan(NamedTuple):
     live_tiles: int
     total_tiles: int
     interpret: bool = True
+    idx_t: Optional[np.ndarray] = None    # (Kt, NMAX) live N-tile ids per row
+    counts_t: Optional[np.ndarray] = None  # (Kt,)
+    nmax: int = 1
+    kk: Optional[np.ndarray] = None       # (L,) K-tile id of each live tile
+    nn: Optional[np.ndarray] = None       # (L,) N-tile id of each live tile
 
 
 def make_tile_plan(mask: np.ndarray, *, tile: int = 128,
@@ -148,20 +176,176 @@ def make_tile_plan(mask: np.ndarray, *, tile: int = 128,
     K, N = m.shape
     if K == 0 or N == 0 or K % tile or N % tile:
         return None
-    bitmap = (m != 0).reshape(K // tile, tile, N // tile, tile).any((1, 3))
-    idx, counts, kmax = compact_tile_indices(bitmap.astype(np.int32))
+    bitmap = tile_bitmap(m, tile, tile)
+    idx, counts, kmax = compact_tile_indices(bitmap)
+    idx_t, counts_t, nmax = compact_tile_indices(bitmap.T)
+    kk, nn = np.nonzero(bitmap)
     return TilePlan(idx=idx, counts=counts, kmax=kmax, tile=tile,
                     live_tiles=int(bitmap.sum()),
-                    total_tiles=int(bitmap.size), interpret=interpret)
+                    total_tiles=int(bitmap.size), interpret=interpret,
+                    idx_t=idx_t, counts_t=counts_t, nmax=nmax,
+                    kk=kk.astype(np.int32), nn=nn.astype(np.int32))
+
+
+# ---------------------------------------------------------------------------
+# Backward kernels: dx via the transposed plan, dw over live tiles only
+# ---------------------------------------------------------------------------
+def _bsmm_dx_kernel(count_ref, idx_ref, g_ref, w_ref, o_ref, acc_ref):
+    """dx[i, k] = Σ_n g[i, n] @ w[k, n]ᵀ over live N tiles of K-row k."""
+    k = pl.program_id(1)
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(t < count_ref[k])
+    def _accum():
+        acc_ref[...] += jax.lax.dot_general(
+            g_ref[...], w_ref[...], (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(t == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _bsmm_dx(g, w, plan: TilePlan, *, bm: int):
+    """g (M, N) @ (w ⊙ bitmap)ᵀ → (M, K), skipping dead N tiles.
+
+    The grid's last dimension is ``nmax`` = max live N-tiles per K-row
+    (the transposed analogue of the forward ``kmax``), so backward
+    input-grad compute scales with live tiles exactly like the forward.
+    """
+    M, N = g.shape
+    K = w.shape[0]
+    bk = bn = plan.tile
+    grid = (M // bm, K // bk, plan.nmax)
+    kernel = pl.pallas_call(
+        _bsmm_dx_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bm, bn),
+                             lambda i, k, t, cnt, idx: (i, idx[k, t])),
+                pl.BlockSpec((bk, bn),
+                             lambda i, k, t, cnt, idx: (k, idx[k, t])),
+            ],
+            out_specs=pl.BlockSpec((bm, bk),
+                                   lambda i, k, t, cnt, idx: (i, k)),
+            scratch_shapes=[pltpu.VMEM((bm, bk), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((M, K), g.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=plan.interpret,
+    )
+    return kernel(jnp.asarray(plan.counts_t), jnp.asarray(plan.idx_t), g, w)
+
+
+def _bsmm_dw_kernel(kk_ref, nn_ref, x_ref, g_ref, o_ref, acc_ref):
+    """dw tile l = Σ_m x[m, kk[l]]ᵀ @ g[m, nn[l]] — live tiles only."""
+    m = pl.program_id(1)
+
+    @pl.when(m == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], g_ref[...], (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(m == pl.num_programs(1) - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)[None]
+
+
+def _bsmm_dw(x2, g, plan: TilePlan, *, bm: int, out_dtype):
+    """xᵀ (K, M) @ g (M, N) → (K, N), materialising ONLY live tiles.
+
+    The grid is (L, M/bm) with L = live-tile count: dead tiles are never
+    DMA'd and never issued to the MXU (their grads are identically zero
+    under a static mask).  The compacted (L, bk, bn) tile stack is then
+    scattered into the dense (K, N) grad — live-tile bandwidth only.
+    """
+    M, K = x2.shape
+    N = g.shape[1]
+    bk = bn = plan.tile
+    Kt, Nt = K // bk, N // bn
+    L = int(plan.kk.shape[0])
+    if L == 0:
+        return jnp.zeros((K, N), out_dtype)
+    grid = (L, M // bm)
+    kernel = pl.pallas_call(
+        _bsmm_dw_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bm, bk),
+                             lambda l, m, kk, nn: (m, kk[l])),
+                pl.BlockSpec((bm, bn),
+                             lambda l, m, kk, nn: (m, nn[l])),
+            ],
+            out_specs=pl.BlockSpec((1, bk, bn),
+                                   lambda l, m, kk, nn: (l, 0, 0)),
+            scratch_shapes=[pltpu.VMEM((bk, bn), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((L, bk, bn), out_dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=plan.interpret,
+    )
+    tiles = kernel(jnp.asarray(plan.kk), jnp.asarray(plan.nn), x2, g)
+    dw = jnp.zeros((Kt, Nt, bk, bn), out_dtype)
+    dw = dw.at[jnp.asarray(plan.kk), jnp.asarray(plan.nn)].set(tiles)
+    return dw.transpose(0, 2, 1, 3).reshape(K, N)
+
+
+def bsmm_apply(x2, w, plan: TilePlan, *, bm: int):
+    """Differentiable ``x2 (M, K) @ (w ⊙ tile-bitmap) (K, N)``.
+
+    Forward AND both backward matmuls run through block-sparse Pallas
+    kernels, so a retrain step's cost scales with the live-tile count in
+    every pass — the paper's "pruning makes training faster" claim on
+    the MXU.  The VJP is exact for the tile-masked product: ``dw`` is
+    zero on dead tiles (never computed); callers that also carry an
+    elementwise mask (``ops.sparse_dense``) recover the elementwise
+    gradient through the chain rule of ``w * mask``.
+    """
+    if plan.idx_t is None or plan.kk is None:
+        raise ValueError("TilePlan lacks backward metadata — rebuild it "
+                         "with make_tile_plan()")
+
+    @jax.custom_vjp
+    def f(x2, w):
+        return _bsmm_compact(x2, w, plan.idx, plan.counts, plan.kmax,
+                             bm=bm, bk=plan.tile, bn=plan.tile,
+                             interpret=plan.interpret)
+
+    def f_fwd(x2, w):
+        return f(x2, w), (x2, w)
+
+    def f_bwd(res, g):
+        x2, w = res
+        dx = _bsmm_dx(g, w, plan, bm=bm).astype(x2.dtype)
+        dw = _bsmm_dw(x2, g, plan, bm=bm, out_dtype=w.dtype)
+        return dx, dw
+
+    f.defvjp(f_fwd, f_bwd)
+    return f(x2, w)
 
 
 def plan_matmul(x, w, plan: Optional[TilePlan]):
     """x (..., K) @ w (K, N) routed through the block-sparse kernel.
 
     ``plan=None`` is the dense path.  Rows are zero-padded up to a
-    sublane multiple (decode batches are tiny: a handful of slots), so
-    decode-time compute/bandwidth still scales with the live-tile count
-    along K — the dimension pruning actually thins.
+    sublane multiple (decode batches are tiny: a handful of slots;
+    retrain microbatches are ragged), so compute/bandwidth still scales
+    with the live-tile count along K — the dimension pruning actually
+    thins.  Differentiable: gradients flow through the custom-VJP
+    block-sparse backward kernels (``bsmm_apply``).
     """
     if plan is None:
         return x @ w
@@ -181,9 +365,7 @@ def plan_matmul(x, w, plan: Optional[TilePlan]):
         bm = Mp
     if mp:
         x2 = jnp.pad(x2, ((0, mp), (0, 0)))
-    out = _bsmm_compact(x2, w, plan.idx, plan.counts, plan.kmax,
-                        bm=bm, bk=plan.tile, bn=plan.tile,
-                        interpret=plan.interpret)
+    out = bsmm_apply(x2, w, plan, bm=bm)
     if mp:
         out = out[:M]
     return out.reshape(*lead, N)

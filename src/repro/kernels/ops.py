@@ -8,27 +8,13 @@ configs) and on platforms without Pallas TPU support.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
-
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ref
-from repro.kernels.bsmm import bsmm_pallas, compact_tile_indices
+from repro.kernels.bsmm import (make_tile_plan, plan_matmul,
+                                tile_bitmap)  # noqa: F401  (re-export)
 from repro.kernels.tile_stats import tile_stats_pallas
-
-
-def tile_bitmap(mask: np.ndarray, bk: int = 128, bn: int = 128) -> np.ndarray:
-    """Elementwise {0,1} mask (K, N) → tile liveness (⌈K/bk⌉, ⌈N/bn⌉)."""
-    m = np.asarray(mask) != 0
-    K, N = m.shape
-    pk, pn = (-K) % bk, (-N) % bn
-    if pk or pn:
-        m = np.pad(m, ((0, pk), (0, pn)))
-    return m.reshape(m.shape[0] // bk, bk, m.shape[1] // bn, bn) \
-            .any(axis=(1, 3)).astype(np.int32)
 
 
 def tile_density(mask: np.ndarray, bk: int = 128, bn: int = 128) -> float:
@@ -37,23 +23,28 @@ def tile_density(mask: np.ndarray, bk: int = 128, bn: int = 128) -> float:
     return float(bm.mean())
 
 
-def sparse_dense(x, w, mask: np.ndarray, *, bm: int = 128, bk: int = 128,
+def sparse_dense(x, w, mask: np.ndarray, *, bk: int = 128,
                  bn: int = 128, interpret: bool = True):
     """x (..., K) @ pruned w (K, N) skipping dead 128×128 tiles.
 
     mask: host numpy elementwise {0,1} (static — pruning is offline).
+    Differentiable: forward and both backward matmuls run block-sparse
+    (``bsmm.bsmm_apply``); the explicit ``w * mask`` keeps the weight
+    gradient elementwise-exact vs the dense masked oracle.  Ragged M
+    (small retrain batches) is zero-padded to a sublane multiple inside
+    ``plan_matmul``, which also picks the row blocking — only ragged
+    K/N (or rectangular bk≠bn tiles) fall back to the dense oracle.
     """
     K, N = w.shape
     lead = x.shape[:-1]
-    M = int(np.prod(lead)) if lead else 1
-    x2 = x.reshape(M, K)
-    if M % bm or K % bk or N % bn:
-        out = ref.masked_matmul_ref(x2, w, jnp.asarray(mask, w.dtype))
+    plan = (make_tile_plan(mask, tile=bk, interpret=interpret)
+            if bk == bn else None)
+    if plan is None:
+        M = int(np.prod(lead)) if lead else 1
+        out = ref.masked_matmul_ref(x.reshape(M, K), w,
+                                    jnp.asarray(mask, w.dtype))
         return out.reshape(*lead, N)
-    bmx = tile_bitmap(mask, bk, bn)
-    out = bsmm_pallas(x2, w * jnp.asarray(mask, w.dtype), bmx,
-                      bm=bm, bk=bk, bn=bn, interpret=interpret)
-    return out.reshape(*lead, N)
+    return plan_matmul(x, w * jnp.asarray(mask, w.dtype), plan)
 
 
 def tile_stats(w, *, bk: int = 128, bn: int = 128, interpret: bool = True):

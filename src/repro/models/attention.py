@@ -209,18 +209,26 @@ def gqa_qkv(params, x, *, n_heads, n_kv_heads, head_dim, positions,
 
 
 def gqa_forward(params, x, *, n_heads, n_kv_heads, head_dim, rope_theta,
-                window: Optional[int] = None, block_q: int = 512):
-    """Training / prefill self-attention over a full sequence."""
+                window: Optional[int] = None, block_q: int = 512,
+                plan=None):
+    """Training / prefill self-attention over a full sequence.
+
+    ``plan`` routes the q/k/v/o projections through the block-sparse
+    kernel during *retraining* of a pruned ticket (keys "wq"/"wk"/"wv"/
+    "wo" → ``TilePlan``); the custom VJP keeps gradients block-sparse
+    too, so every retrain epoch gets cheaper as tiles die.
+    """
     B, S, _ = x.shape
     positions = jnp.broadcast_to(jnp.arange(S), (B, S))
     q, k, v = gqa_qkv(params, x, n_heads=n_heads, n_kv_heads=n_kv_heads,
                       head_dim=head_dim, positions=positions,
-                      rope_theta=rope_theta)
+                      rope_theta=rope_theta, plan=plan)
     if window is not None:
         out = sliding_window_attention(q, k, v, window=window)
     else:
         out = causal_attention(q, k, v, block_q=block_q)
-    return out.reshape(B, S, n_heads * head_dim) @ params["wo"]
+    return bsmm.plan_matmul(out.reshape(B, S, n_heads * head_dim),
+                            params["wo"], (plan or {}).get("wo"))
 
 
 def gqa_make_cache(params, x, *, n_heads, n_kv_heads, head_dim, rope_theta,

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import CNNConfig, ConvSpec
+from repro.kernels.bsmm import plan_matmul
 from repro.models.layers import softmax_cross_entropy, xavier
 
 
@@ -96,12 +97,22 @@ def init_params(rng, cfg: CNNConfig, dtype=jnp.float32):
     return params, state
 
 
-def forward(params, state, cfg: CNNConfig, images, train: bool = False):
+def forward(params, state, cfg: CNNConfig, images, train: bool = False,
+            plans=None):
     """images: (B, H, W, C) → logits (B, num_classes), new_state.
 
     ``ConvSpec.residual`` marks the FIRST conv of a 2-conv basic block
     (ResNet-18); plain convs (VGG) apply conv→BN→ReLU→(pool).
+
+    ``plans`` (from ``repro.train.plans.cnn_train_plan``) routes the FC
+    and head matmuls of a pruned ticket through the block-sparse kernel
+    — fwd and bwd — during retraining: {"fc": [TilePlan|None, ...],
+    "head": TilePlan|None}.  Conv layers stay on XLA's conv path (their
+    crossbar accounting lives in ``core.crossbar``).
     """
+    plans = plans or {}
+    fc_plans = list(plans.get("fc") or ())
+    fc_plans += [None] * (len(params["fc"]) - len(fc_plans))
     x = images.astype(params["head"]["w"].dtype)
     new_state = {"bns": [dict(s) for s in state["bns"]],
                  "shortcut_bns": dict(state["shortcut_bns"])}
@@ -137,14 +148,17 @@ def forward(params, state, cfg: CNNConfig, images, train: bool = False):
             i += 1
     # global average pool (CIFAR ResNet/VGG-small convention)
     x = jnp.mean(x, axis=(1, 2))
-    for fc in params["fc"]:
-        x = jax.nn.relu(x @ fc["w"] + fc["b"])
-    logits = x @ params["head"]["w"] + params["head"]["b"]
+    for fc, fp in zip(params["fc"], fc_plans):
+        x = jax.nn.relu(plan_matmul(x, fc["w"], fp) + fc["b"])
+    logits = plan_matmul(x, params["head"]["w"], plans.get("head")) \
+        + params["head"]["b"]
     return logits, new_state
 
 
-def loss_fn(params, state, cfg: CNNConfig, batch, train: bool = True):
-    logits, new_state = forward(params, state, cfg, batch["images"], train)
+def loss_fn(params, state, cfg: CNNConfig, batch, train: bool = True,
+            plans=None):
+    logits, new_state = forward(params, state, cfg, batch["images"], train,
+                                plans=plans)
     ce = softmax_cross_entropy(logits, batch["labels"])
     return ce, (new_state, logits)
 

@@ -12,6 +12,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.bsmm import plan_matmul
+
 
 def _dtype(name: str):
     return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
@@ -93,8 +95,8 @@ def _act(name: str, x):
 
 def mlp(params, x, act: str = "silu", plan=None):
     """``plan`` optionally routes up/gate/down through the block-sparse
-    kernel (serving a pruned ticket); dense otherwise."""
-    from repro.kernels.bsmm import plan_matmul
+    kernel (serving OR retraining a pruned ticket); dense otherwise.
+    The kernel's custom VJP keeps the routed path differentiable."""
     plan = plan or {}
     up = plan_matmul(x, params["up"], plan.get("up"))
     if "up_b" in params:

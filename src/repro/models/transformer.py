@@ -204,6 +204,9 @@ def _apply_block(cfg: ArchConfig, sig, p, x, mode: str, cache,
     h = apply_norm(cfg.norm, p["norm1"], x)
     new_cache = cache
     plan = plan or {}
+    # plans apply on the training forward AND decode paths; prefill is a
+    # one-shot cost per request and stays dense
+    planned = mode in ("forward", "decode")
     if valid_len is not None and (kind not in (ATTN,) or mode != "prefill"):
         raise ValueError(
             f"valid_len is only supported for full-attention prefill, "
@@ -225,7 +228,8 @@ def _apply_block(cfg: ArchConfig, sig, p, x, mode: str, cache,
             kw = dict(n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
                       head_dim=cfg.head_dim_, rope_theta=cfg.rope_theta)
             if mode == "forward":
-                out = attn_lib.gqa_forward(p["attn"], h, window=window, **kw)
+                out = attn_lib.gqa_forward(p["attn"], h, window=window,
+                                           plan=plan.get("attn"), **kw)
             elif mode == "prefill":
                 out, new_cache = attn_lib.gqa_make_cache(
                     p["attn"], h, capacity=capacity, window=window,
@@ -276,7 +280,7 @@ def _apply_block(cfg: ArchConfig, sig, p, x, mode: str, cache,
             aux = mo.aux_loss
         else:
             x = x + mlp(p["mlp"], h2, cfg.act,
-                        plan=plan.get("mlp") if mode == "decode" else None)
+                        plan=plan.get("mlp") if planned else None)
         x = constrain(x, ("dp", None, None))
     return x, new_cache, aux
 
@@ -349,11 +353,18 @@ def _embed_inputs(cfg, params, batch):
     return x
 
 
-def forward(params, cfg: ArchConfig, batch):
-    """Training forward: full-sequence logits. batch['tokens']: (B, S)."""
+def forward(params, cfg: ArchConfig, batch, plan=None):
+    """Training forward: full-sequence logits. batch['tokens']: (B, S).
+
+    ``plan`` (from ``repro.train.plans.lm_train_plan``) routes the
+    attention/MLP projections through the block-sparse Pallas kernel —
+    forward and backward — so the Algorithm-1 retrain loop's cost
+    scales with the pruned ticket's live tiles.
+    """
     x = _embed_inputs(cfg, params, batch)
     x = constrain(x, ("dp", None, None))
-    x, _, aux = _run_segments(cfg, params, x, "forward", None, None)
+    x, _, aux = _run_segments(cfg, params, x, "forward", None, None,
+                              plan=plan)
     x = apply_norm(cfg.norm, params["final_norm"], x)
     head = params.get("unembed", params["embed"])
     logits = unembed(head, x)
@@ -361,8 +372,9 @@ def forward(params, cfg: ArchConfig, batch):
     return logits, aux
 
 
-def loss_fn(params, cfg: ArchConfig, batch, aux_weight: float = 0.01):
-    logits, aux = forward(params, cfg, batch)
+def loss_fn(params, cfg: ArchConfig, batch, aux_weight: float = 0.01,
+            plan=None):
+    logits, aux = forward(params, cfg, batch, plan=plan)
     labels = batch["labels"]
     if cfg.num_patch_tokens and "patches" in batch:
         # loss only over text positions (the tail of the sequence)
@@ -480,7 +492,7 @@ def _none_caches(cfg):
 def decode_step(params, cfg: ArchConfig, caches, token, plan=None):
     """token: (B, 1) int32 → (logits (B,1,V), new caches).
 
-    ``plan`` (from ``repro.serve.ticket.build_decode_plan``) routes the
+    ``plan`` (from ``repro.models.plans.build_decode_plan``) routes the
     dense attention/MLP projections through the block-sparse Pallas
     kernel so decode cost scales with the pruned ticket's live tiles.
     """

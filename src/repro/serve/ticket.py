@@ -1,121 +1,9 @@
-"""Pruned-ticket → decode-kernel handoff.
+"""Pruned-ticket → decode-kernel handoff (re-export shim).
 
-``build_decode_plan`` walks a mask pytree (same structure as the
-parameter pytree, ``None`` on non-prunable leaves) and derives, for
-every dense projection the decode step executes, the static 128×128
-tile bitmap — the TPU analogue of the paper's power-gated crossbar map
-(Fig. 2).  The resulting plan mirrors ``params["segments"]`` so
-``models.transformer.decode_step`` can thread it layer-by-layer.
-
-Scanned segments share one traced block body, so per-repeat bitmaps are
-**unioned over the scan axis**: a tile is skipped only when it is dead
-in every layer of the segment.  That is conservative but exact —
-pruned weights are exact zeros, so computing a tile that is dead in
-*this* layer (but live in a sibling) only adds zeros.
-
-Geometry is fixed at the MXU's 128×128 here regardless of the pruning
-config's crossbar shape: the plan describes what the TPU kernel can
-skip, while ``core.crossbar`` keeps accounting in the paper's geometry.
+The mask→``TilePlan`` walker lives in ``repro.models.plans``: it
+describes the *model's* parameter structure (segments → positions →
+attn/mlp projections) and is shared by the serving decode path (here)
+and the training retrain path (``repro.train.plans``), so neither layer
+has to import the other.
 """
-from __future__ import annotations
-
-from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
-
-import numpy as np
-
-from repro.kernels.bsmm import TilePlan, make_tile_plan
-
-# projection keys the decode step routes through the bsmm kernel
-_ATTN_KEYS = ("wq", "wk", "wv", "wo")
-_MLP_KEYS = ("up", "gate", "down")
-
-
-@dataclass
-class PlanStats:
-    """Aggregate tile accounting across every routed projection."""
-    routed: int = 0             # projections with a bsmm plan
-    dense_fallback: int = 0     # prunable projections left dense
-    live_tiles: int = 0
-    total_tiles: int = 0
-    by_layer: List[Tuple[str, int, int]] = field(default_factory=list)
-
-    @property
-    def skipped_tile_fraction(self) -> float:
-        if self.total_tiles == 0:
-            return 0.0
-        return 1.0 - self.live_tiles / self.total_tiles
-
-
-def _union_mask(mask) -> Optional[np.ndarray]:
-    """Mask leaf → 2-D union bitmap source ((reps, K, N) → (K, N))."""
-    if mask is None:
-        return None
-    m = np.asarray(mask)
-    if m.ndim == 3:                       # stacked scan axis
-        m = (m != 0).any(axis=0)
-    if m.ndim != 2:
-        return None
-    return m
-
-
-def _plan_group(masks: Dict[str, Any], keys, label: str, stats: PlanStats,
-                *, tile: int, interpret: bool) -> Optional[Dict[str, TilePlan]]:
-    group: Dict[str, TilePlan] = {}
-    for key in keys:
-        m2 = _union_mask(masks.get(key))
-        if m2 is None:
-            continue
-        plan = make_tile_plan(m2, tile=tile, interpret=interpret)
-        if plan is None:                  # shape does not tile — stay dense
-            stats.dense_fallback += 1
-            continue
-        group[key] = plan
-        stats.routed += 1
-        stats.live_tiles += plan.live_tiles
-        stats.total_tiles += plan.total_tiles
-        stats.by_layer.append((f"{label}.{key}", plan.live_tiles,
-                               plan.total_tiles))
-    return group or None
-
-
-def build_decode_plan(masks, *, tile: int = 128, interpret: bool = True
-                      ) -> Tuple[Optional[list], PlanStats]:
-    """Mask pytree → (plan mirroring params['segments'], PlanStats).
-
-    Returns ``(None, empty stats)`` when the masks carry no routable
-    structure (non-transformer params, MLA attention, MoE-only FFNs —
-    those decode dense).
-    """
-    stats = PlanStats()
-    if not isinstance(masks, dict) or "segments" not in masks:
-        return None, stats
-    plan: list = []
-    any_entry = False
-    for s_idx, pos_trees in enumerate(masks["segments"]):
-        seg_plan = []
-        for pos, ptree in enumerate(pos_trees):
-            entry: Dict[str, Any] = {}
-            if not isinstance(ptree, dict):
-                seg_plan.append(None)
-                continue
-            attn = ptree.get("attn")
-            # MLA (absorbed decode is einsum-shaped, not a K×N matmul)
-            # is skipped: its dict carries w_dq/w_uq instead of wq.
-            if isinstance(attn, dict) and "wq" in attn:
-                g = _plan_group(attn, _ATTN_KEYS, f"seg{s_idx}.{pos}.attn",
-                                stats, tile=tile, interpret=interpret)
-                if g:
-                    entry["attn"] = g
-            ffn = ptree.get("mlp")
-            if isinstance(ffn, dict):
-                g = _plan_group(ffn, _MLP_KEYS, f"seg{s_idx}.{pos}.mlp",
-                                stats, tile=tile, interpret=interpret)
-                if g:
-                    entry["mlp"] = g
-            any_entry = any_entry or bool(entry)
-            seg_plan.append(entry or None)
-        plan.append(seg_plan)
-    if not any_entry:
-        return None, stats
-    return plan, stats
+from repro.models.plans import PlanStats, build_decode_plan  # noqa: F401

@@ -1,1 +1,2 @@
 from repro.train.loop import TrainState, Trainer, make_train_step  # noqa: F401
+from repro.train.plans import cnn_train_plan, lm_train_plan  # noqa: F401

@@ -7,6 +7,9 @@ import pytest
 from repro.models import recurrent as R
 
 B, S, w, H, d = 2, 64, 32, 4, 16
+# eager per-token step loops are dispatch-bound: a shorter window still
+# proves step==scan while keeping the default suite fast
+S_STEP = 24
 
 
 @pytest.fixture(scope="module")
@@ -39,11 +42,11 @@ def test_mlstm_state_carries_across_calls(rngs):
 
 def test_rglru_parallel_equals_stepwise(rngs):
     p = R.rglru_init(rngs[0], d, w, H, 4)
-    x = jax.random.normal(rngs[2], (B, S, d)) * 0.5
+    x = jax.random.normal(rngs[2], (B, S_STEP, d)) * 0.5
     y_full, st = R.rglru_make_cache(p, x)
     st2 = R.rglru_init_state(p, B)
     ys = []
-    for t in range(S):
+    for t in range(S_STEP):
         yt, st2 = R.rglru_step(p, st2, x[:, t:t + 1])
         ys.append(yt)
     np.testing.assert_allclose(np.asarray(jnp.concatenate(ys, 1)),
@@ -54,7 +57,7 @@ def test_rglru_parallel_equals_stepwise(rngs):
 
 def test_rglru_stability_long_sequence(rngs):
     p = R.rglru_init(rngs[0], d, w, H, 4)
-    x = jax.random.normal(rngs[2], (1, 2048, d)) * 3.0
+    x = jax.random.normal(rngs[2], (1, 1024, d)) * 3.0
     y = R.rglru_forward(p, x)
     assert not np.any(np.isnan(np.asarray(y)))
     assert np.abs(np.asarray(y)).max() < 1e3    # decay keeps state bounded
@@ -62,11 +65,11 @@ def test_rglru_stability_long_sequence(rngs):
 
 def test_slstm_step_equals_scan(rngs):
     p = R.slstm_cell_init(rngs[0], d, w, H)
-    x = jax.random.normal(rngs[3], (B, S, d)) * 0.5
+    x = jax.random.normal(rngs[3], (B, S_STEP, d)) * 0.5
     h_full, st_full = R.slstm_forward(p, x)
     st = R.slstm_init_state(B, w)
     hs = []
-    for t in range(S):
+    for t in range(S_STEP):
         ht, st = R.slstm_step(p, st, x[:, t:t + 1])
         hs.append(ht)
     np.testing.assert_allclose(np.asarray(jnp.concatenate(hs, 1)),

@@ -16,7 +16,14 @@ from repro.models import transformer as tfm
 from repro.optim import adamw, constant
 
 B, S = 2, 32
-ARCHS = list_archs()
+# the heaviest reduced configs (deep scans / MoE / enc-dec) go to CI's
+# slow job; two fast representatives stay in the default tier-1 run
+_HEAVY = {"deepseek-v3-671b", "whisper-tiny", "recurrentgemma-2b",
+          "llama4-maverick-400b-a17b", "command-r-35b", "phi-3-vision-4.2b",
+          "qwen2-72b", "xlstm-125m"}
+_ALL = list_archs()
+ARCHS = [pytest.param(a, marks=pytest.mark.slow) if a in _HEAVY else a
+         for a in _ALL]
 
 
 def _batch(cfg, rng):
@@ -86,4 +93,4 @@ def test_all_ten_assigned_archs_present():
         "llama3.2-3b", "qwen2-72b", "deepseek-v3-671b",
         "llama4-maverick-400b-a17b", "whisper-tiny", "xlstm-125m",
     }
-    assert expected.issubset(set(ARCHS))
+    assert expected.issubset(set(_ALL))

@@ -20,6 +20,10 @@ from repro.data import SyntheticImages
 from repro.models import cnn as cnn_lib
 from repro.optim import exponential_epoch_decay, masked, sgd
 
+# the module fixture trains a real (small) CNN through Algorithm 1 —
+# ~85s of the default suite; CI's slow job keeps the coverage
+pytestmark = pytest.mark.slow
+
 CFG = CNNConfig(name="sys-cnn", family="cnn",
                 convs=(ConvSpec(32, pool=True), ConvSpec(64, pool=True),
                        ConvSpec(64)),
