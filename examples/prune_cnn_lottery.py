@@ -5,46 +5,45 @@ through the ``repro.api`` session layer.
 
     PYTHONPATH=src python examples/prune_cnn_lottery.py [--full]
 
-Default: a reduced ResNet (same block structure) for CPU minutes.
-``--full``: the real resnet18 config (hours on CPU; the masks/savings
-pipeline is identical).
+Default: the resnet18 config scaled down by the family registry
+(``make_adapter(..., scale="tiny")`` — same block structure, capped
+channels) for CPU minutes.  ``--full``: the real resnet18 config
+(hours on CPU; the masks/savings pipeline is identical).
+
+CLI parity — the same run from the shell:
+
+    python -m repro.api prune --arch resnet18 --scale tiny \
+        --rounds 10 --ticket /tmp/realprune_ticket
 """
 import argparse
 import sys
 sys.path.insert(0, "src")
 
-from repro.api import CNNAdapter, PruningSession
-from repro.configs import CNNConfig, ConvSpec, PruneConfig, get_cnn
+from repro.api import PruningSession, make_adapter
+from repro.configs import PruneConfig
 from repro.core import lottery
 from repro.core.hardware import cnn_activation_volumes
-from repro.data import SyntheticImages
-
-MINI_RESNET = CNNConfig(
-    name="mini-resnet", family="cnn",
-    convs=(
-        ConvSpec(16),
-        ConvSpec(16, residual=True), ConvSpec(16),
-        ConvSpec(32, stride=2, residual=True), ConvSpec(32),
-        ConvSpec(64, stride=2, residual=True), ConvSpec(64),
-    ),
-    fc=(), num_classes=10, image_size=32)
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--arch", default="resnet18")
     ap.add_argument("--steps", type=int, default=120)
     ap.add_argument("--ticket-dir", default="/tmp/realprune_ticket")
     ap.add_argument("--ckpt", default=None,
                     help="session checkpoint dir (resume a killed run)")
     args = ap.parse_args()
 
-    cfg = get_cnn("resnet18") if args.full else MINI_RESNET
-    adapter = CNNAdapter(
-        cfg, data=SyntheticImages(image_size=cfg.image_size, noise=0.25),
+    # the family registry picks the adapter class, prunability
+    # predicates, and granularity schedule for us — this script works
+    # for ANY registered CNN (and, family aside, any arch at all)
+    adapter = make_adapter(
+        args.arch, scale="full" if args.full else "tiny",
         steps=args.steps, batch_size=128,            # paper: batch size 128
         lr=0.1, lr_decay=0.95,                       # paper: LR .1, -5%/epoch
         eval_batches=4, eval_batch_size=256)
+    cfg = adapter.cfg
 
     print(f"== ReaLPrune lottery pipeline: {cfg.name} ==")
     session = PruningSession(

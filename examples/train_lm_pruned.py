@@ -1,14 +1,16 @@
 """End-to-end driver: train a ~100M-parameter LM for a few hundred
-steps with the full production stack — ``LMAdapter`` over ``Trainer``
-(checkpoint/resume/straggler policy), sharded-ready model code, masked
-optimizer — then apply crossbar-aware (tile) pruning via
-``repro.api.structured_prune`` and continue training the ticket.
+steps with the full production stack — a registry-built adapter
+(``repro.api.make_adapter``) over ``Trainer`` (checkpoint/resume/
+straggler policy), sharded-ready model code, masked optimizer — then
+apply crossbar-aware (tile) pruning via ``repro.api.structured_prune``
+and continue training the ticket.
 
     PYTHONPATH=src python examples/train_lm_pruned.py \
         [--steps 200] [--prune-steps 100] [--ckpt /tmp/lm_ckpt]
 
 The model is the xlstm-125m architecture scaled to ~100M params with a
-small vocab (CPU-friendly); the same script runs any --arch.
+small vocab (CPU-friendly); the same script runs any --arch.  CLI
+parity: ``python -m repro.api prune --arch xlstm-125m --scale tiny``.
 """
 import argparse
 import sys
@@ -16,10 +18,10 @@ sys.path.insert(0, "src")
 
 import jax
 
-from repro.api import LMAdapter, structured_prune
+from repro.api import make_adapter, structured_prune
 from repro.configs import PruneConfig, get_arch, scaled_down
 from repro.core.hardware import analyze_masks
-from repro.core.masks import apply_masks, lm_prunable, sparsity_fraction
+from repro.core.masks import apply_masks, sparsity_fraction
 from repro.data import SyntheticLM
 
 
@@ -45,11 +47,15 @@ def main():
     args = ap.parse_args()
 
     cfg = build(args.arch)
-    adapter = LMAdapter(cfg, data=SyntheticLM(vocab_size=256,
-                                              seq_len=args.seq, seed=0),
-                        steps=args.steps, batch_size=args.batch,
-                        peak_lr=3e-4, warmup=20, log_every=25,
-                        step_deadline_s=30.0)
+    # make_adapter accepts a pre-scaled config instance: the family
+    # registry still picks the adapter class and prunability data, so
+    # this script needs no per-family branching (works for --arch
+    # yi-6b, deepseek-v3-671b, recurrentgemma-2b, ...)
+    adapter = make_adapter(cfg, data=SyntheticLM(vocab_size=256,
+                                                 seq_len=args.seq, seed=0),
+                           steps=args.steps, batch_size=args.batch,
+                           peak_lr=3e-4, warmup=20, log_every=25,
+                           step_deadline_s=30.0)
     params = adapter.init_params(jax.random.PRNGKey(0))
     n = sum(x.size for x in jax.tree.leaves(params))
     print(f"== {cfg.name}: {n / 1e6:.1f}M params, "
@@ -63,7 +69,7 @@ def main():
     prune_cfg = PruneConfig()
     masks = structured_prune(
         trained, [("filter", 0.2), ("channel", 0.2), ("index", 0.2)],
-        prunable=lm_prunable, cfg=prune_cfg)
+        prunable=adapter.prunable, cfg=prune_cfg)
     print(f"tile-pruned to sparsity {sparsity_fraction(masks):.1%} "
           f"(filter→channel→index, crossbar-aware)")
 
@@ -74,7 +80,7 @@ def main():
     print(f"pruned fine-tune: loss {adapter.last_metrics['loss']:.4f}")
 
     # hardware view of the pruned LM at the config's crossbar geometry
-    rep = analyze_masks(masks, lambda p: False,
+    rep = analyze_masks(masks, adapter.conv_pred,
                         xbar_rows=prune_cfg.xbar_rows,
                         xbar_cols=prune_cfg.xbar_cols)
     print(f"crossbars: {rep.xbars_needed}/{rep.xbars_unpruned} "

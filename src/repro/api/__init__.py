@@ -1,23 +1,37 @@
 """``repro.api`` — the single entry point for pruning, training, and
 serving pruned models.
 
-    from repro.api import CNNAdapter, PruningSession
-    session = PruningSession(CNNAdapter(cfg), PruneConfig())
+    from repro.api import PruningSession, make_adapter
+    adapter = make_adapter("vgg16", scale="tiny")   # ANY registered arch
+    session = PruningSession(adapter, PruneConfig())
     result = session.run()                       # resumable Algorithm 1
     session.export_ticket("/tickets/vgg16")      # winning ticket out
     engine = session.serve_engine()              # LMs: straight to serving
 
+Or from the shell (same machinery):
+
+    python -m repro.api prune --arch vgg16 --scale tiny --rounds 3
+
 Layering:
 
-    adapters.py — ModelAdapter protocol + CNN/LM adapters on Trainer
+    adapters.py — ModelAdapter protocol + CNN/LM/EncDec adapters on
+                  Trainer (family specifics injected as data)
+    registry.py — family-keyed registry: make_adapter() for every
+                  name in configs.list_archs() + list_cnns()
     session.py  — PruningSession (events, checkpoint/resume, handoff)
+    cli.py      — prune / finetune / report / serve subcommands
 
 plus ``structured_prune`` for one-shot (no accuracy gate) schedules.
 Strategy registration for custom granularities lives in
 ``repro.core.strategies``; re-exported here for convenience.
 """
 from repro.api.adapters import (  # noqa: F401
-    CNNAdapter, FunctionAdapter, LMAdapter, ModelAdapter,
+    CNNAdapter, EncDecAdapter, FunctionAdapter, LMAdapter, ModelAdapter,
+    ServeUnsupported,
+)
+from repro.api.registry import (  # noqa: F401
+    FamilySpec, available_families, get_family, list_adaptable,
+    make_adapter, register_family,
 )
 from repro.api.session import PruningSession, structured_prune  # noqa: F401
 from repro.core.algorithm import PruneEvent, PruneResult  # noqa: F401

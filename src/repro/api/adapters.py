@@ -6,28 +6,53 @@ decide which leaves are prunable.  A ``ModelAdapter`` packages those
 four so ``PruningSession`` (and the examples) never hand-roll training
 closures.
 
-``CNNAdapter`` and ``LMAdapter`` are built on ``repro.train.loop.
-Trainer`` — the same operational layer (jitted masked steps, data
-pipeline, checkpoint/resume) used for production training, so a model
-pruned through the session fine-tunes and serves with zero glue code.
+The family-specific pieces — prunability predicate, conv-path
+predicate, granularity schedule — are *data* attached to the adapter
+(``prunable_pred`` / ``conv_path_pred`` / ``granularities``), injected
+by the family registry (``repro.api.registry.make_adapter``) so one
+adapter class covers every architecture of its family.
+
+``CNNAdapter``, ``LMAdapter`` (dense / moe / hybrid / ssm / vlm
+transformers) and ``EncDecAdapter`` (whisper-style) are built on
+``repro.train.loop.Trainer`` — the same operational layer (jitted
+masked steps, data pipeline, checkpoint/resume) used for production
+training, so a model pruned through the session fine-tunes and serves
+with zero glue code.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.masks import (apply_masks, cnn_prunable, lm_prunable,
-                              make_masks)
-from repro.data import DataPipeline, SyntheticImages, SyntheticLM
+from repro.core.masks import (apply_masks, cnn_conv_path, cnn_prunable,
+                              encdec_prunable, lm_prunable, make_masks)
+from repro.data import (DataPipeline, SyntheticAudio, SyntheticImages,
+                        SyntheticLM)
 from repro.optim import (adamw, constant, exponential_epoch_decay, masked,
                          sgd, warmup_cosine)
 from repro.kernels.bsmm import default_interpret
 from repro.models.plans import PlanStats
 from repro.train import Trainer, cnn_train_plan, lm_train_plan
+
+
+class ServeUnsupported(NotImplementedError):
+    """An adapter whose family has no ServeEngine path.
+
+    Structured (arch/family/reason) so callers — the CLI ``serve``
+    subcommand in particular — can report *why* per architecture
+    instead of surfacing a bare traceback.
+    """
+
+    def __init__(self, arch: str, family: str, reason: str):
+        self.arch = arch
+        self.family = family
+        self.reason = reason
+        super().__init__(f"{arch} ({family}): serving unsupported — "
+                         f"{reason}")
 
 
 class ModelAdapter:
@@ -36,9 +61,18 @@ class ModelAdapter:
     ``train``/``evaluate`` take ``masks=None`` for the dense model.
     ``evaluate`` returns a scalar where HIGHER IS BETTER (accuracy for
     classifiers; adapters for likelihood models return negative loss).
+
+    ``prunable_pred`` / ``conv_path_pred`` / ``granularities`` are the
+    per-family registry data; subclasses set defaults and
+    ``make_adapter`` overrides them from the family entry.
     """
 
     cfg: Any = None
+    family: str = "custom"
+    # None → the session falls back to PruneConfig.granularities
+    granularities: Optional[Sequence[str]] = None
+    prunable_pred: Optional[Callable[[str, Any], bool]] = None
+    conv_path_pred: Optional[Callable[[str], bool]] = None
 
     def init_params(self, rng):
         raise NotImplementedError
@@ -50,15 +84,21 @@ class ModelAdapter:
         raise NotImplementedError
 
     def prunable(self, path: str, leaf) -> bool:
-        raise NotImplementedError
+        if self.prunable_pred is None:
+            raise NotImplementedError(
+                f"{type(self).__name__} has no prunable_pred")
+        return self.prunable_pred(path, leaf)
 
     def conv_pred(self, path: str) -> bool:
-        return False
+        return bool(self.conv_path_pred(path)) if self.conv_path_pred \
+            else False
 
     def serve_fns(self) -> Tuple[Callable, Callable]:
-        """(prefill_fn, decode_fn) for ServeEngine handoff (LMs only)."""
-        raise NotImplementedError(
-            f"{type(self).__name__} does not support serving")
+        """(prefill_fn, decode_fn) for ServeEngine handoff."""
+        cfg_name = getattr(self.cfg, "name", "<unknown>")
+        raise ServeUnsupported(
+            cfg_name, self.family,
+            f"{type(self).__name__} exposes no prefill/decode pair")
 
 
 @dataclasses.dataclass
@@ -100,6 +140,8 @@ class CNNAdapter(ModelAdapter):
     Shapes that don't tile 128 stay dense automatically.
     """
 
+    family = "cnn"
+
     def __init__(self, cfg, *, data=None, steps: int = 80,
                  batch_size: int = 64, lr: float = 0.05,
                  lr_decay: float = 0.95, decay_every: Optional[int] = None,
@@ -110,6 +152,8 @@ class CNNAdapter(ModelAdapter):
         from repro.models import cnn as cnn_lib
         self._cnn = cnn_lib
         self.cfg = cfg
+        self.prunable_pred = cnn_prunable
+        self.conv_path_pred = cnn_conv_path
         self.data = data or SyntheticImages(image_size=cfg.image_size,
                                             noise=0.25)
         self.steps = steps
@@ -124,6 +168,7 @@ class CNNAdapter(ModelAdapter):
                          else use_bsmm)
         self.bsmm_interpret = bsmm_interpret
         self.last_plan_stats = PlanStats()
+        self.last_metrics: Dict[str, float] = {}
         self._bn0 = None
         self._bn = None
 
@@ -133,12 +178,6 @@ class CNNAdapter(ModelAdapter):
         self._bn0 = bn
         self._bn = bn
         return params
-
-    def prunable(self, path, leaf):
-        return cnn_prunable(path, leaf)
-
-    def conv_pred(self, path):
-        return "convs" in path or "shortcuts" in path
 
     def _batch(self, step, size):
         b = self.data.batch(step, size)
@@ -171,7 +210,7 @@ class CNNAdapter(ModelAdapter):
             data_iter=DataPipeline(
                 lambda s: self._batch(s, self.batch_size), prefetch=0),
             ckpt_dir=None, aux_state=self._bn0, donate=False)
-        trainer.run(steps, log_every=self.log_every)
+        self.last_metrics = trainer.run(steps, log_every=self.log_every)
         self._bn = trainer.state.aux
         return trainer.state.params
 
@@ -185,16 +224,23 @@ class CNNAdapter(ModelAdapter):
 
 
 class LMAdapter(ModelAdapter):
-    """Transformer-family LM on synthetic token streams via ``Trainer``.
+    """Decoder-only transformer family — dense, MoE, hybrid
+    (attention + RG-LRU), ssm (xLSTM) and vlm (patch-prefix) archs all
+    run through ``models.transformer.forward``, so ONE adapter covers
+    every block kind; the family registry supplies the per-family
+    prunability predicate and granularity schedule as data.
 
     ``evaluate`` returns NEGATIVE mean cross-entropy on held-out batches
     (higher is better, so the session's accuracy gate applies
     unchanged; set ``PruneConfig.accuracy_tolerance`` in nats).
 
     ``use_bsmm``: retrain under masks through the block-sparse kernels
-    (attention q/k/v/o + MLP, fwd and bwd); ``None`` auto-enables on
-    real TPU backends only — see ``CNNAdapter``.
+    (attention q/k/v/o + MLP + stacked MoE experts, fwd and bwd);
+    ``None`` auto-enables on real TPU backends only — see
+    ``CNNAdapter``.
     """
+
+    family = "dense"
 
     def __init__(self, cfg, *, data=None, steps: int = 100,
                  batch_size: int = 8, seq_len: int = 128,
@@ -207,6 +253,8 @@ class LMAdapter(ModelAdapter):
         from repro.models import transformer as tfm
         self._tfm = tfm
         self.cfg = cfg
+        self.family = getattr(cfg, "family", "dense")
+        self.prunable_pred = lm_prunable
         self.data = data or SyntheticLM(
             vocab_size=min(int(cfg.vocab_size), 256), seq_len=seq_len,
             seed=0)
@@ -229,16 +277,21 @@ class LMAdapter(ModelAdapter):
     def init_params(self, rng):
         return self._tfm.init_params(rng, self.cfg)
 
-    def prunable(self, path, leaf):
-        return lm_prunable(path, leaf)
-
-    def conv_pred(self, path):
-        return False
+    def _patches(self, step: int, size: int):
+        """Deterministic patch-prefix embeddings for vlm configs
+        (stateless: f(step), like the synthetic data sources)."""
+        rng = np.random.RandomState((1_000_003 * step + 11) % (2 ** 31 - 1))
+        return jnp.asarray(rng.randn(
+            size, self.cfg.num_patch_tokens,
+            self.cfg.d_model).astype(np.float32))
 
     def _batch(self, step):
         b = self.data.batch(step, self.batch_size)
-        return {"tokens": jnp.asarray(b["tokens"]),
-                "labels": jnp.asarray(b["labels"])}
+        out = {"tokens": jnp.asarray(b["tokens"]),
+               "labels": jnp.asarray(b["labels"])}
+        if getattr(self.cfg, "num_patch_tokens", 0):
+            out["patches"] = self._patches(step, self.batch_size)
+        return out
 
     def _loss(self, params, batch):
         return self._tfm.loss_fn(params, self.cfg, batch)
@@ -292,12 +345,89 @@ class LMAdapter(ModelAdapter):
     def evaluate(self, params, masks=None) -> float:
         losses = []
         for i in range(self.eval_batches):
-            b = self.data.batch(10_000 + i, self.batch_size)
-            batch = {"tokens": jnp.asarray(b["tokens"]),
-                     "labels": jnp.asarray(b["labels"])}
-            loss, _ = self._tfm.loss_fn(params, self.cfg, batch)
+            loss, _ = self._tfm.loss_fn(params, self.cfg,
+                                        self._batch(10_000 + i))
             losses.append(float(loss))
         return -float(np.mean(losses))
 
     def serve_fns(self):
+        # vlm configs serve text-only prompts (no patch prefix): the
+        # engine's prompt protocol is token-only, and the transformer
+        # treats patches as an optional batch key
         return self._tfm.prefill, self._tfm.decode_step
+
+
+class EncDecAdapter(ModelAdapter):
+    """Whisper-style encoder-decoder on synthetic mel-frame/transcript
+    pairs (``SyntheticAudio``), trained via ``Trainer``.
+
+    ``evaluate`` returns NEGATIVE decoder cross-entropy (higher is
+    better).  Prunability covers encoder/decoder self-attention, MLPs,
+    and the decoder cross-attention (``encdec_prunable``).  Serving
+    raises ``ServeUnsupported``: the engine's prompt protocol is
+    token-only and has no frames lane.
+    """
+
+    family = "audio"
+
+    def __init__(self, cfg, *, data=None, steps: int = 60,
+                 batch_size: int = 4, seq_len: int = 32,
+                 peak_lr: float = 3e-4, warmup: int = 10,
+                 eval_batches: int = 2, log_every: int = 0):
+        from repro.models import encdec
+        self._mod = encdec
+        self.cfg = cfg
+        self.family = getattr(cfg, "family", "audio")
+        self.prunable_pred = encdec_prunable
+        self.data = data or SyntheticAudio(
+            vocab_size=min(int(cfg.vocab_size), 256), seq_len=seq_len,
+            n_frames=int(cfg.encoder_seq_len), d_model=int(cfg.d_model),
+            seed=0)
+        self.steps = steps
+        self.batch_size = batch_size
+        self.peak_lr, self.warmup = peak_lr, warmup
+        self.eval_batches = eval_batches
+        self.log_every = log_every
+        self.last_plan_stats = PlanStats()
+        self.last_metrics: Dict[str, float] = {}
+
+    # -- protocol ----------------------------------------------------------
+    def init_params(self, rng):
+        return self._mod.init_params(rng, self.cfg)
+
+    def _batch(self, step):
+        b = self.data.batch(step, self.batch_size)
+        return {k: jnp.asarray(v) for k, v in b.items()}
+
+    def train(self, params, masks=None, steps=None):
+        steps = steps or self.steps
+        sched = warmup_cosine(self.peak_lr,
+                              min(self.warmup, max(steps // 2, 1)), steps)
+        opt = adamw(sched)
+        if masks is not None:
+            opt = masked(opt, masks)
+            params = apply_masks(params, masks)
+
+        def loss(p, batch):
+            return self._mod.loss_fn(p, self.cfg, batch)
+
+        trainer = Trainer(
+            loss_fn=loss, optimizer=opt, params=params,
+            data_iter=DataPipeline(self._batch, prefetch=0),
+            ckpt_dir=None, donate=False)
+        self.last_metrics = trainer.run(steps, log_every=self.log_every)
+        return trainer.state.params
+
+    def evaluate(self, params, masks=None) -> float:
+        losses = []
+        for i in range(self.eval_batches):
+            loss, _ = self._mod.loss_fn(params, self.cfg,
+                                        self._batch(10_000 + i))
+            losses.append(float(loss))
+        return -float(np.mean(losses))
+
+    def serve_fns(self):
+        raise ServeUnsupported(
+            self.cfg.name, self.family,
+            "ServeEngine prompts are token-only; encoder-decoder "
+            "requests need a frames lane")

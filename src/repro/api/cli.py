@@ -1,0 +1,351 @@
+"""``python -m repro.api`` — prune / finetune / report / serve any arch.
+
+One CLI over the session layer: every name in ``configs.list_archs() +
+list_cnns()`` resolves through the family registry to a working
+adapter, so the same four subcommands drive CNNs, dense/MoE/hybrid/ssm
+transformers, vlm and enc-dec configs.
+
+    python -m repro.api archs
+    python -m repro.api prune --arch vgg11 --scale tiny --rounds 1
+    python -m repro.api prune --arch llama3.2-3b --scale tiny --json
+    python -m repro.api report   --arch vgg11 --ticket /tmp/t
+    python -m repro.api finetune --arch vgg11 --ticket /tmp/t --steps 20
+    python -m repro.api serve    --arch yi-6b --requests 4
+
+``--json`` switches event output to one JSON object per line
+(machine-readable: round events carry sparsity, accuracy, and the
+bsmm live-tile fraction) for scripting and bench harnesses.
+
+Exit codes: 0 success; 2 structured refusal (e.g. ``serve`` on a
+family with no serving path — reported, not a traceback).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List, Optional
+
+import numpy as np
+
+EXIT_OK = 0
+EXIT_UNSUPPORTED = 2
+
+
+def _emit(obj: dict, as_json: bool, human: str):
+    if as_json:
+        print(json.dumps(obj), flush=True)
+    else:
+        print(human, flush=True)
+
+
+def _hardware_dict(rep) -> dict:
+    return {
+        "cell_sparsity": rep.sparsity,
+        "cell_savings": rep.cell_savings,
+        "xbars_unpruned": rep.xbars_unpruned,
+        "xbars_needed": rep.xbars_needed,
+        "xbar_savings": rep.xbar_savings,
+    }
+
+
+class TicketMismatch(RuntimeError):
+    """Ticket on disk does not fit the adapter's parameter template
+    (usually pruned at a different --scale or --arch)."""
+
+
+def _load_ticket(adapter, path: str, seed: int):
+    """Ticket dir → (rewound params, masks) shaped like the adapter.
+
+    Validates the stored mask keys/shapes against the adapter's
+    template first: ``import_ticket`` silently skips mismatched keys,
+    which would otherwise surface as a deep traceback much later.
+    """
+    import os
+
+    import jax
+
+    from repro.core import lottery
+    from repro.core.masks import make_masks, path_str
+
+    params = adapter.init_params(jax.random.PRNGKey(seed))
+    masks_tmpl = make_masks(params, adapter.prunable)
+    tmpl_shapes = {}
+
+    def visit(p, leaf):
+        if leaf is not None:
+            tmpl_shapes[f"m:{path_str(p)}"] = tuple(leaf.shape)
+        return leaf
+
+    jax.tree_util.tree_map_with_path(visit, masks_tmpl,
+                                     is_leaf=lambda x: x is None)
+    data = np.load(os.path.join(path, "ticket.npz"))
+    stored = {k: tuple(data[k].shape) for k in data.files
+              if k.startswith("m:")}
+    if stored != tmpl_shapes:
+        missing = sorted(set(tmpl_shapes) - set(stored))
+        extra = sorted(set(stored) - set(tmpl_shapes))
+        wrong = sorted(k for k in set(stored) & set(tmpl_shapes)
+                       if stored[k] != tmpl_shapes[k])
+        raise TicketMismatch(
+            f"ticket at {path} does not match {adapter.cfg.name}: "
+            f"{len(missing)} masks missing, {len(extra)} unexpected, "
+            f"{len(wrong)} wrong-shaped"
+            + (f" (e.g. {wrong[0]}: {stored[wrong[0]]} vs "
+               f"{tmpl_shapes[wrong[0]]})" if wrong else "")
+            + " — was it pruned at a different --scale or --arch?")
+    w, m = lottery.import_ticket(path, params, masks_tmpl)
+    return lottery.rewind(w, m), m
+
+
+def _ticket_mismatch(args, e: TicketMismatch) -> int:
+    _emit({"event": "ticket_mismatch", "arch": args.arch,
+           "ticket": args.ticket, "reason": str(e)},
+          args.json, f"error: {e}")
+    return EXIT_UNSUPPORTED
+
+
+def _add_common(p: argparse.ArgumentParser, ticket_required: bool = False):
+    p.add_argument("--arch", required=True,
+                   help="any name from `python -m repro.api archs`")
+    p.add_argument("--scale", default="tiny", choices=("tiny", "full"),
+                   help="tiny: reduced config + seconds-scale training "
+                        "budget; full: the registered config")
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--json", action="store_true",
+                   help="one JSON object per event line")
+    if ticket_required:
+        p.add_argument("--ticket", required=True,
+                       help="ticket directory from `prune --ticket`")
+
+
+def cmd_archs(args) -> int:
+    from repro.api.registry import list_adaptable, resolve_config
+
+    rows = []
+    for name in list_adaptable():
+        cfg, spec = resolve_config(name)
+        rows.append({"arch": name, "family": spec.family,
+                     "adapter": spec.adapter_factory.__name__,
+                     "granularities": list(spec.granularities or ()),
+                     "serves": spec.serves})
+    if args.json:
+        for r in rows:
+            print(json.dumps(r))
+    else:
+        for r in rows:
+            grans = ",".join(r["granularities"]) or "(paper schedule)"
+            print(f"{r['arch']:28s} {r['family']:7s} {r['adapter']:14s} "
+                  f"grans={grans} serves={r['serves']}")
+    return EXIT_OK
+
+
+def cmd_prune(args) -> int:
+    from repro.api.registry import make_adapter
+    from repro.api.session import PruningSession
+    from repro.configs import PruneConfig
+
+    adapter = make_adapter(args.arch, scale=args.scale,
+                           **({"steps": args.steps} if args.steps else {}))
+    cfg = PruneConfig(prune_fraction=args.fraction, max_iters=args.rounds,
+                      accuracy_tolerance=args.tolerance)
+    grans = args.granularity.split(",") if args.granularity else None
+
+    def on_event(e):
+        stats = getattr(adapter, "last_plan_stats", None)
+        live = (1.0 - stats.skipped_tile_fraction
+                if stats is not None and stats.routed else None)
+        _emit({"event": "round", "arch": args.arch,
+               "iteration": e.iteration, "granularity": e.granularity,
+               "sparsity_before": e.sparsity_before,
+               "sparsity_after": e.sparsity_after,
+               "accuracy": e.accuracy, "accepted": e.accepted,
+               "live_tile_fraction": live},
+              args.json,
+              f"round {e.iteration} [{e.granularity}] sparsity "
+              f"{e.sparsity_before:.3f}->{e.sparsity_after:.3f} "
+              f"acc {e.accuracy:.4f} "
+              f"({'keep' if e.accepted else 'undo'})")
+
+    session = PruningSession(adapter, cfg, granularities=grans,
+                             seed=args.seed, ckpt_dir=args.ckpt,
+                             callbacks=[on_event])
+    res = session.run()
+    if args.ticket:
+        session.export_ticket(args.ticket)
+    rep = session.hardware_report()
+    _emit({"event": "result", "arch": args.arch,
+           "sparsity": res.sparsity, "iterations": len(res.history),
+           "granularities": session.grans,
+           "ticket": args.ticket, **_hardware_dict(rep)},
+          args.json,
+          f"{args.arch}: sparsity {res.sparsity:.1%} after "
+          f"{len(res.history)} rounds | crossbars "
+          f"{rep.xbars_needed}/{rep.xbars_unpruned} "
+          f"(-{rep.xbar_savings:.1%}), cell savings {rep.cell_savings:.1%}"
+          + (f" | ticket -> {args.ticket}" if args.ticket else ""))
+    return EXIT_OK
+
+
+def cmd_finetune(args) -> int:
+    from repro.api.registry import make_adapter
+
+    adapter = make_adapter(args.arch, scale=args.scale,
+                           **({"steps": args.steps} if args.steps else {}))
+    try:
+        params, masks = _load_ticket(adapter, args.ticket, args.seed)
+    except TicketMismatch as e:
+        return _ticket_mismatch(args, e)
+    trained = adapter.train(params, masks, args.steps)
+    score = adapter.evaluate(trained, masks)
+    metrics = getattr(adapter, "last_metrics", {})
+    _emit({"event": "finetune", "arch": args.arch, "ticket": args.ticket,
+           "steps": args.steps, "score": score,
+           "loss": metrics.get("loss")},
+          args.json,
+          f"{args.arch}: ticket fine-tuned {args.steps or 'default'} "
+          f"steps, eval score {score:.4f}"
+          + (f", loss {metrics['loss']:.4f}" if "loss" in metrics else ""))
+    return EXIT_OK
+
+
+def cmd_report(args) -> int:
+    from repro.api.registry import make_adapter
+    from repro.core.hardware import analyze_masks
+    from repro.core.masks import sparsity_fraction
+
+    adapter = make_adapter(args.arch, scale=args.scale)
+    try:
+        _, masks = _load_ticket(adapter, args.ticket, args.seed)
+    except TicketMismatch as e:
+        return _ticket_mismatch(args, e)
+    pc = adapter.cfg.prune
+    rep = analyze_masks(masks, adapter.conv_pred,
+                        xbar_rows=pc.xbar_rows, xbar_cols=pc.xbar_cols)
+    _emit({"event": "report", "arch": args.arch, "ticket": args.ticket,
+           "mask_sparsity": sparsity_fraction(masks),
+           "xbar_rows": pc.xbar_rows, "xbar_cols": pc.xbar_cols,
+           **_hardware_dict(rep)},
+          args.json,
+          f"{args.arch}: ticket sparsity {sparsity_fraction(masks):.1%} | "
+          f"{pc.xbar_rows}x{pc.xbar_cols} crossbars "
+          f"{rep.xbars_needed}/{rep.xbars_unpruned} "
+          f"(-{rep.xbar_savings:.1%}) | cell savings {rep.cell_savings:.1%}")
+    return EXIT_OK
+
+
+def cmd_serve(args) -> int:
+    import jax
+
+    from repro.api.adapters import ServeUnsupported
+    from repro.api.registry import make_adapter
+    from repro.serve import Request, ServeEngine
+
+    adapter = make_adapter(args.arch, scale=args.scale)
+    try:
+        prefill_fn, decode_fn = adapter.serve_fns()
+    except ServeUnsupported as e:
+        _emit({"event": "serve_unsupported", "arch": e.arch,
+               "family": e.family, "reason": e.reason},
+              args.json,
+              f"serve: {e.arch} ({e.family} family) has no serving path "
+              f"— {e.reason}")
+        return EXIT_UNSUPPORTED
+
+    if args.ticket:
+        try:
+            params, masks = _load_ticket(adapter, args.ticket, args.seed)
+        except TicketMismatch as e:
+            return _ticket_mismatch(args, e)
+    else:
+        params = adapter.init_params(jax.random.PRNGKey(args.seed))
+        masks = None
+    engine = ServeEngine(params=params, cfg=adapter.cfg,
+                         prefill_fn=prefill_fn, decode_fn=decode_fn,
+                         batch_slots=args.slots, capacity=args.capacity,
+                         temperature=args.temperature, masks=masks)
+    rng = np.random.RandomState(args.seed)
+    for i in range(args.requests):
+        prompt = rng.randint(0, 200, size=rng.randint(4, 16))
+        engine.submit(Request(uid=i, prompt=prompt.astype(np.int32),
+                              max_new_tokens=args.max_new))
+    engine.run()
+    rep = engine.report
+    _emit({"event": "serve", "arch": args.arch,
+           "requests": rep.requests, "tokens": rep.tokens_generated,
+           "decode_steps": rep.decode_steps,
+           "slot_occupancy": rep.slot_occupancy,
+           "tokens_per_s": rep.tokens_per_s,
+           "bsmm": rep.bsmm_enabled,
+           "skipped_tile_fraction": rep.skipped_tile_fraction},
+          args.json,
+          f"{args.arch}: served {rep.requests} requests, "
+          f"{rep.tokens_generated} tokens in {rep.decode_steps} decode "
+          f"steps | occupancy {rep.slot_occupancy:.0%} | "
+          f"{rep.tokens_per_s:.1f} tok/s | "
+          + (f"bsmm on ({rep.skipped_tile_fraction:.0%} tiles skipped)"
+             if rep.bsmm_enabled else "bsmm off (dense)"))
+    return EXIT_OK
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.api",
+        description="Prune, fine-tune, report, and serve any registered "
+                    "architecture through the repro.api session layer.")
+    sub = ap.add_subparsers(dest="command", required=True)
+
+    p = sub.add_parser("archs", help="list registered archs and families")
+    p.add_argument("--json", action="store_true")
+    p.set_defaults(fn=cmd_archs)
+
+    p = sub.add_parser("prune", help="run Algorithm 1 (PruningSession)")
+    _add_common(p)
+    p.add_argument("--rounds", type=int, default=3,
+                   help="max prune iterations (PruneConfig.max_iters)")
+    p.add_argument("--fraction", type=float, default=0.25,
+                   help="fraction of remaining weights pruned per round")
+    p.add_argument("--tolerance", type=float, default=0.02,
+                   help="allowed accuracy drop vs baseline (nats for LMs)")
+    p.add_argument("--granularity", default=None,
+                   help="comma list overriding the family schedule, "
+                        "e.g. expert,filter,index")
+    p.add_argument("--steps", type=int, default=None,
+                   help="train steps per round (adapter default if unset)")
+    p.add_argument("--ticket", default=None,
+                   help="export the winning ticket to this directory")
+    p.add_argument("--ckpt", default=None,
+                   help="session checkpoint dir (resume a killed run)")
+    p.set_defaults(fn=cmd_prune)
+
+    p = sub.add_parser("finetune",
+                       help="continue training an exported ticket")
+    _add_common(p, ticket_required=True)
+    p.add_argument("--steps", type=int, default=None)
+    p.set_defaults(fn=cmd_finetune)
+
+    p = sub.add_parser("report",
+                       help="crossbar accounting of an exported ticket")
+    _add_common(p, ticket_required=True)
+    p.set_defaults(fn=cmd_report)
+
+    p = sub.add_parser("serve", help="serve an LM through ServeEngine")
+    _add_common(p)
+    p.add_argument("--ticket", default=None,
+                   help="serve this pruned ticket (block-sparse decode)")
+    p.add_argument("--requests", type=int, default=4)
+    p.add_argument("--max-new", type=int, default=8)
+    p.add_argument("--slots", type=int, default=4)
+    p.add_argument("--capacity", type=int, default=128)
+    p.add_argument("--temperature", type=float, default=0.0)
+    p.set_defaults(fn=cmd_serve)
+    return ap
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    args = build_parser().parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,160 @@
+"""Family-keyed adapter registry: ``make_adapter(name)`` for every arch.
+
+Every registered config (``configs.list_archs() + list_cnns()``) maps
+through its ``family`` to ONE entry here; the entry is *data* — which
+adapter class drives the family, which prunability/conv predicates
+apply, which granularity schedule Algorithm 1 should walk, how to
+scale the config down for CPU smoke runs — so covering a new model
+family means registering an entry, not writing a new adapter subclass.
+
+    adapter = make_adapter("deepseek-v3-671b", scale="tiny")
+    result = PruningSession(adapter, PruneConfig(max_iters=1)).run()
+
+Families → adapters:
+  dense / moe / hybrid / ssm / vlm → ``LMAdapter`` (one transformer
+      forward handles every block kind; MoE additionally gets the
+      ``expert`` granularity ahead of the paper's schedule)
+  audio                            → ``EncDecAdapter``
+  cnn                              → ``CNNAdapter``
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Mapping, Optional, Sequence, Tuple
+
+from repro.api.adapters import (CNNAdapter, EncDecAdapter, LMAdapter,
+                                ModelAdapter)
+from repro.configs import (ArchConfig, CNNConfig, get_arch, get_cnn,
+                           list_archs, list_cnns, scaled_down,
+                           scaled_down_cnn)
+from repro.core.masks import cnn_conv_path, family_prunable
+
+SCALES = ("tiny", "full")
+
+
+@dataclasses.dataclass(frozen=True)
+class FamilySpec:
+    """Registry entry: everything family-specific, as data."""
+    family: str
+    adapter_factory: Callable[..., ModelAdapter]
+    prunable: Callable[[str, Any], bool]
+    conv_pred: Optional[Callable[[str], bool]] = None
+    # None → PruneConfig.granularities (the paper's schedule)
+    granularities: Optional[Tuple[str, ...]] = None
+    # cfg → reduced same-family cfg for scale="tiny"
+    scale_tiny: Callable[[Any], Any] = lambda cfg: cfg
+    # adapter kwargs that make scale="tiny" runs CPU-seconds cheap
+    smoke_kwargs: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+    serves: bool = False
+
+
+_FAMILIES: Dict[str, FamilySpec] = {}
+
+
+def register_family(spec: FamilySpec) -> FamilySpec:
+    """Later registrations replace earlier ones (project overrides)."""
+    _FAMILIES[spec.family] = spec
+    return spec
+
+
+def get_family(family: str) -> FamilySpec:
+    if family not in _FAMILIES:
+        raise KeyError(f"no adapter family {family!r}; "
+                       f"registered: {sorted(_FAMILIES)}")
+    return _FAMILIES[family]
+
+
+def available_families() -> Tuple[str, ...]:
+    return tuple(sorted(_FAMILIES))
+
+
+def _tiny_arch(cfg: ArchConfig) -> ArchConfig:
+    return scaled_down(cfg, dtype="float32")
+
+
+_LM_SMOKE = dict(steps=6, batch_size=2, seq_len=16, eval_batches=1,
+                 warmup=2)
+
+for _fam in ("dense", "moe", "hybrid", "ssm", "vlm"):
+    register_family(FamilySpec(
+        family=_fam,
+        adapter_factory=LMAdapter,
+        prunable=family_prunable(_fam),
+        granularities=(("expert", "filter", "channel", "index")
+                       if _fam == "moe" else None),
+        scale_tiny=_tiny_arch,
+        smoke_kwargs=_LM_SMOKE,
+        serves=True,
+    ))
+
+register_family(FamilySpec(
+    family="audio",
+    adapter_factory=EncDecAdapter,
+    prunable=family_prunable("audio"),
+    scale_tiny=_tiny_arch,
+    smoke_kwargs=dict(steps=4, batch_size=2, seq_len=12, eval_batches=1),
+    serves=False,
+))
+
+register_family(FamilySpec(
+    family="cnn",
+    adapter_factory=CNNAdapter,
+    prunable=family_prunable("cnn"),
+    conv_pred=cnn_conv_path,
+    scale_tiny=scaled_down_cnn,
+    smoke_kwargs=dict(steps=6, batch_size=8, eval_batches=1,
+                      eval_batch_size=16),
+    serves=False,
+))
+
+
+def list_adaptable() -> Sequence[str]:
+    """Every registered arch name ``make_adapter`` accepts."""
+    return list(list_archs()) + list(list_cnns())
+
+
+def resolve_config(arch):
+    """Name or config instance → (config, FamilySpec)."""
+    if isinstance(arch, (ArchConfig, CNNConfig)):
+        return arch, get_family(arch.family)
+    try:
+        cfg = get_arch(arch)
+    except KeyError:
+        try:
+            cfg = get_cnn(arch)
+        except KeyError:
+            raise KeyError(f"unknown arch {arch!r}; "
+                           f"known: {list_adaptable()}") from None
+    return cfg, get_family(cfg.family)
+
+
+def make_adapter(arch, *, scale: str = "tiny",
+                 **adapter_kwargs) -> ModelAdapter:
+    """One working ``ModelAdapter`` for ANY registered arch.
+
+    ``arch``: a name from ``list_adaptable()`` or a config instance
+    (instances are used as-is — they are already the scale you want).
+    ``scale``: "tiny" reduces the config for CPU smoke runs and
+    defaults the adapter's training budget to seconds; "full" keeps
+    the registered config and the adapter class defaults.  Explicit
+    ``adapter_kwargs`` always win over the smoke defaults.
+
+    The family entry's prunability predicate, conv predicate, and
+    granularity schedule are attached to the adapter as data;
+    ``PruningSession`` picks the granularities up automatically.
+    """
+    cfg, spec = resolve_config(arch)
+    is_instance = isinstance(arch, (ArchConfig, CNNConfig))
+    kwargs = dict(adapter_kwargs)
+    if not is_instance:
+        if scale not in SCALES:
+            raise ValueError(f"unknown scale {scale!r}; known: {SCALES}")
+        if scale == "tiny":
+            cfg = spec.scale_tiny(cfg)
+            kwargs = {**spec.smoke_kwargs, **kwargs}
+    adapter = spec.adapter_factory(cfg, **kwargs)
+    adapter.family = spec.family
+    adapter.prunable_pred = spec.prunable
+    adapter.conv_path_pred = spec.conv_pred
+    adapter.granularities = spec.granularities
+    return adapter

@@ -69,7 +69,10 @@ class PruningSession:
         self.adapter = adapter
         self.cfg = cfg or PruneConfig()
         self.geometry = TileGeometry.from_config(self.cfg)
-        self.grans = list(granularities or self.cfg.granularities)
+        # explicit arg > family registry data on the adapter > PruneConfig
+        self.grans = list(granularities
+                          or getattr(adapter, "granularities", None)
+                          or self.cfg.granularities)
         self.baseline_accuracy = baseline_accuracy
         self.seed = seed
         self.block = block

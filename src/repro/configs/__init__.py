@@ -3,4 +3,5 @@ from repro.configs.base import (  # noqa: F401
     ArchConfig, CNNConfig, ConvSpec, MLAConfig, MoEConfig, PruneConfig,
     ShapeSpec, TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K,
     get_arch, get_cnn, get_shape, list_archs, list_cnns, register, scaled_down,
+    scaled_down_cnn,
 )

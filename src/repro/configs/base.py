@@ -325,6 +325,20 @@ def _ensure_loaded():
         importlib.import_module(f"repro.configs.{mod}")
 
 
+def scaled_down_cnn(cfg: CNNConfig, *, max_channels: int = 16,
+                    max_fc: int = 64, **overrides) -> CNNConfig:
+    """Reduced same-structure CNN config for CPU smoke tests: the conv
+    stack keeps its depth/stride/pool/residual pattern with channel
+    counts capped, so the crossbar unrolls stay family-shaped."""
+    convs = tuple(dataclasses.replace(c, out_channels=min(c.out_channels,
+                                                          max_channels))
+                  for c in cfg.convs)
+    small = dict(convs=convs, fc=tuple(min(f, max_fc) for f in cfg.fc),
+                 name=cfg.name + "-smoke")
+    small.update(overrides)
+    return dataclasses.replace(cfg, **small)
+
+
 def scaled_down(cfg: ArchConfig, **overrides) -> ArchConfig:
     """Reduced same-family config for CPU smoke tests."""
     moe = cfg.moe

@@ -9,6 +9,14 @@ Prunable (paper + standard LTH conventions):
   * LM: every ≥2-D projection matrix (attention, MLP, MoE experts,
     recurrent in/out projections) — embeddings, unembedding, norms,
     per-channel gate vectors, conv1d kernels and routers excluded.
+
+Per-family predicates (``family_prunable``) are the registry data the
+``repro.api`` adapter layer consumes: each named family (dense / moe /
+hybrid / ssm / vlm / audio / cnn) maps to the predicate that knows its
+family-specific tensors — stacked ``(E, d, d_ff)`` expert weights,
+RG-LRU / xLSTM block-diagonal and recurrent projections, enc-dec
+cross-attention — so new model families plug in as data, not as a new
+adapter subclass.
 """
 from __future__ import annotations
 
@@ -55,6 +63,59 @@ def cnn_prunable(path: str, leaf) -> bool:
 
 def cnn_is_conv(path: str, leaf) -> bool:
     return leaf.ndim == 4
+
+
+def cnn_conv_path(path: str) -> bool:
+    """Path-level conv predicate for CNN params (the ``conv_pred``
+    adapters and the family registry share)."""
+    return "convs" in path or "shortcuts" in path
+
+
+# ---------------------------------------------------------------------------
+# Per-family predicates — the data the api adapter registry hangs off
+# each family entry.  They share the LM exclusion list; each documents
+# (and is unit-tested for) the family-specific tensors it must reach.
+# ---------------------------------------------------------------------------
+def moe_prunable(path: str, leaf) -> bool:
+    """MoE transformers: dense projections plus the stacked per-expert
+    ``up``/``gate``/``down`` tensors ``(E, d, d_ff)`` (and their scanned
+    ``(reps, E, d, d_ff)`` forms).  Routers stay dense — killing router
+    columns would silently disable experts without freeing crossbars."""
+    return lm_prunable(path, leaf)
+
+
+def recurrent_prunable(path: str, leaf) -> bool:
+    """RG-LRU / xLSTM (hybrid + ssm families): in/gate/out projections,
+    the block-diagonal per-head recurrence weights ``(H, bs, bs)``, and
+    sLSTM input/recurrent matrices.  Temporal conv1d kernels, Λ decay
+    vectors, and per-channel gate biases are excluded."""
+    return lm_prunable(path, leaf)
+
+
+def encdec_prunable(path: str, leaf) -> bool:
+    """Encoder-decoder (whisper-style): encoder/decoder self-attention,
+    MLPs, AND the decoder cross-attention ``xattn`` projections.  The
+    frame-adapter stub and embeddings are excluded."""
+    return lm_prunable(path, leaf)
+
+
+_FAMILY_PRUNABLE = {
+    "dense": lm_prunable,
+    "moe": moe_prunable,
+    "hybrid": recurrent_prunable,
+    "ssm": recurrent_prunable,
+    "vlm": lm_prunable,
+    "audio": encdec_prunable,
+    "cnn": cnn_prunable,
+}
+
+
+def family_prunable(family: str):
+    """The prunability predicate for a registered config family."""
+    if family not in _FAMILY_PRUNABLE:
+        raise KeyError(f"no prunable predicate for family {family!r}; "
+                       f"known: {sorted(_FAMILY_PRUNABLE)}")
+    return _FAMILY_PRUNABLE[family]
 
 
 def make_masks(params, prunable: Callable[[str, Any], bool]):

@@ -20,6 +20,8 @@ Registered names:
   filter / channel / index   — the paper's coarse→fine schedule
   ltp / block / cap          — the baselines (unstructured / BLK-REW / CAP)
   xbar                       — whole-crossbar tiles (coarsest structure)
+  expert                     — whole MoE experts (one (d, d_ff) slice of a
+                               stacked expert tensor per group)
 """
 from __future__ import annotations
 
@@ -346,4 +348,54 @@ class XbarStrategy(GranularityStrategy):
         mv = mp.reshape(B, nr, xr, nc, xc)
         mv *= ~kill[:, :, None, :, None]
         mm = mv.reshape(B, nr * xr, nc * xc)[:, :R, :C]
+        return self._to_leaf(mm, gs, tag)
+
+
+@register_strategy
+class ExpertStrategy(GranularityStrategy):
+    """Whole MoE experts: one (d, d_ff) slice of a stacked expert tensor
+    per group (the ROADMAP's MoE expert-level pruning scenario).
+
+    Stacked expert leaves — ``(E, d, d_ff)`` ``up``/``gate``/``down``
+    tensors, or their scanned ``(reps, E, d, d_ff)`` forms — unroll to a
+    batch of B matrices (``leaf_matrices`` tag 'stack'); each matrix is
+    one expert in one layer, and killing a group turns that expert off
+    entirely (every crossbar it occupies powers down, and the bsmm
+    retrain plan drops all its tiles).  Leaves that are not routed
+    expert stacks (attention, dense MLPs, convs, and the always-on
+    shared-expert MLP — which processes EVERY token, so it is never a
+    unit the router can route around) expose NO alive groups, so
+    global percentile selection never touches them — the schedule then
+    falls through to finer granularities for the rest of the network.
+
+    Crossbar geometry does not subdivide the group (an expert is the
+    unit regardless of tile shape); it is still recorded in ``meta`` for
+    the accounting path.
+    """
+    name = "expert"
+
+    @staticmethod
+    def _is_expert_leaf(path: str, tag: str, conv: bool, B: int) -> bool:
+        parts = path.lower().split("/")
+        # scanned shared-expert MLPs are (reps, d, ff) stacks under
+        # .../moe/shared/... — layer repeats, not routed experts
+        return tag == "stack" and not conv and B > 1 and \
+            "moe" in parts and "shared" not in parts
+
+    def score(self, path, w, mask, *, conv, geom=DEFAULT_GEOMETRY, block=32):
+        wm, mm, tag = self._matrices(w, mask, conv)
+        meta = self._base_meta(w, tag, conv, wm, geom)
+        B = wm.shape[0]
+        if not self._is_expert_leaf(path, tag, conv, B):
+            zeros = np.zeros((B,))
+            return GroupSet(path, self.name, zeros,
+                            np.zeros((B,), np.int64),
+                            np.zeros((B,), bool), meta)
+        scores, alive, sizes = _group_reduce(wm, mm, (1, 2))    # (B,)
+        return GroupSet(path, self.name, scores, sizes,
+                        alive.astype(bool), meta)
+
+    def zero(self, mask, gs, kill):
+        mm, tag = self._mask_matrix(mask, gs)
+        mm *= ~kill[:, None, None]
         return self._to_leaf(mm, gs, tag)

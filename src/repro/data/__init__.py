@@ -1,4 +1,4 @@
 from repro.data.synthetic import (  # noqa: F401
-    SyntheticImages, SyntheticLM, cifar_like_batch, lm_batch,
+    SyntheticAudio, SyntheticImages, SyntheticLM, cifar_like_batch, lm_batch,
 )
 from repro.data.pipeline import DataPipeline, ShardedBatcher  # noqa: F401

@@ -16,6 +16,7 @@ SyntheticImages— CIFAR-like 32×32×3 images: class = which of 10 fixed
 from __future__ import annotations
 
 import dataclasses
+import functools
 from dataclasses import dataclass
 from typing import Dict, Optional, Tuple
 
@@ -77,6 +78,49 @@ class SyntheticImages:
             self.channels).astype(np.float32)
         return {"images": imgs.astype(np.float32),
                 "labels": labels.astype(np.int32)}
+
+
+@functools.lru_cache(maxsize=8)
+def _audio_codebook(seed: int, vocab: int, d_model: int) -> np.ndarray:
+    """Token → frame-embedding codebook; pure function of its key, so
+    the per-batch randn is paid once (keyed small so old datasets
+    don't pin memory)."""
+    rng = np.random.RandomState(seed + 17)
+    return rng.randn(vocab, d_model).astype(np.float32)
+
+
+@dataclass(frozen=True)
+class SyntheticAudio:
+    """Mel-frame / transcript pairs for the whisper-style enc-dec stub.
+
+    Frames are deterministic per (seed, step) pseudo-embeddings whose
+    leading rows encode the target token stream through a fixed random
+    codebook, so the decoder's cross-attention has real signal to learn
+    from; the token stream itself is the same Markov source as
+    ``SyntheticLM`` (stateless: batch = f(seed, step)).
+    """
+    vocab_size: int
+    seq_len: int
+    n_frames: int
+    d_model: int
+    seed: int = 0
+    noise: float = 0.1
+
+    def _codebook(self) -> np.ndarray:
+        return _audio_codebook(self.seed, self.vocab_size, self.d_model)
+
+    def batch(self, step: int, batch_size: int) -> Dict[str, np.ndarray]:
+        lm = SyntheticLM(self.vocab_size, self.seq_len, self.seed)
+        b = lm.batch(step, batch_size)
+        rng = np.random.RandomState((self.seed * 999_983 + step + 3)
+                                    % (2 ** 31 - 1))
+        frames = self.noise * rng.randn(
+            batch_size, self.n_frames, self.d_model).astype(np.float32)
+        code = self._codebook()
+        n = min(self.n_frames, self.seq_len)
+        frames[:, :n] += code[b["labels"][:, :n]]
+        return {"frames": frames, "tokens": b["tokens"],
+                "labels": b["labels"]}
 
 
 def lm_batch(vocab: int, seq_len: int, batch: int, step: int = 0,

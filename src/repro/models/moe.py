@@ -24,6 +24,7 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.bsmm import plan_matmul
 from repro.models import hooks
 from repro.models.hooks import constrain
 from repro.models.layers import _act, mlp, mlp_init, xavier
@@ -67,10 +68,34 @@ def _num_groups(T: int, requested: Optional[int]) -> int:
     return g
 
 
+def _expert_matmul(a, w, plan, spec: str):
+    """Per-expert matmul, optionally block-sparse.
+
+    ``a``: (G, E, C, din); ``w``: (E, din, dout); ``plan``: one shared
+    ``TilePlan`` built from the mask unioned over the expert axis
+    (``models.plans``) — a tile is skipped only when it is dead in
+    EVERY expert, which is exact because pruned weights are exact
+    zeros.  The vmap over experts batches the Pallas call; dense
+    einsum when no plan.
+    """
+    if plan is None:
+        return jnp.einsum(spec, a, w)
+    return jax.vmap(lambda ae, we: plan_matmul(ae, we, plan),
+                    in_axes=(1, 0), out_axes=1)(a, w)
+
+
 def moe_forward(params, x, moe, act: str, gated: bool,
                 capacity: Optional[int] = None,
-                num_groups: Optional[int] = None) -> MoEOutput:
-    """x: (B, S, d) -> MoEOutput with y: (B, S, d)."""
+                num_groups: Optional[int] = None,
+                plan=None) -> MoEOutput:
+    """x: (B, S, d) -> MoEOutput with y: (B, S, d).
+
+    ``plan`` (from ``models.plans.build_decode_plan``): per-projection
+    tile plans — keys ``up``/``gate``/``down`` for the stacked expert
+    tensors and ``shared`` for the shared-expert MLP — routing the
+    expert compute through the block-sparse kernel so MoE retrains and
+    decode scale with the ticket's live tiles like every other family.
+    """
     B, S, d = x.shape
     T = B * S
     k, E = moe.top_k, moe.num_experts
@@ -117,12 +142,15 @@ def moe_forward(params, x, moe, act: str, gated: bool,
     buf = constrain(buf.reshape(G, E, C, d), ("dp", "model", None, None))
 
     # ---- batched expert compute (E sharded = expert parallelism) ----
-    up = jnp.einsum("gecd,edf->gecf", buf, params["up"])
+    plan = plan or {}
+    up = _expert_matmul(buf, params["up"], plan.get("up"), "gecd,edf->gecf")
     if gated:
-        h = _act(act, jnp.einsum("gecd,edf->gecf", buf, params["gate"])) * up
+        h = _act(act, _expert_matmul(buf, params["gate"], plan.get("gate"),
+                                     "gecd,edf->gecf")) * up
     else:
         h = _act(act, up)
-    y_buf = jnp.einsum("gecf,efd->gecd", h, params["down"])
+    y_buf = _expert_matmul(h, params["down"], plan.get("down"),
+                           "gecf,efd->gecd")
     y_buf = constrain(y_buf, ("dp", "model", None, None))
 
     # ---- combine: scatter FROM the expert buffer INTO tokens ----
@@ -142,5 +170,5 @@ def moe_forward(params, x, moe, act: str, gated: bool,
     out = constrain(out, ("dp", None, None))
 
     if "shared" in params:
-        out = out + mlp(params["shared"], xt, act)
+        out = out + mlp(params["shared"], xt, act, plan=plan.get("shared"))
     return MoEOutput(out.reshape(B, S, d), aux, drop_fraction)

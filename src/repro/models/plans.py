@@ -32,6 +32,7 @@ from repro.kernels.bsmm import TilePlan, make_tile_plan
 # projection keys routed through the bsmm kernel
 _ATTN_KEYS = ("wq", "wk", "wv", "wo")
 _MLP_KEYS = ("up", "gate", "down")
+_EXPERT_KEYS = ("up", "gate", "down")   # stacked (E, d, d_ff) MoE tensors
 
 
 @dataclass
@@ -51,12 +52,19 @@ class PlanStats:
 
 
 def _union_mask(mask) -> Optional[np.ndarray]:
-    """Mask leaf → 2-D union bitmap source ((reps, K, N) → (K, N))."""
+    """Mask leaf → 2-D union bitmap source.
+
+    Leading axes — the scan-repeat axis of a stacked segment, the
+    expert axis of an MoE tensor, or both ((reps, E, K, N)) — are
+    union-reduced away: a tile is skipped only when it is dead in every
+    layer/expert sharing the traced matmul, which is conservative but
+    exact because pruned weights are exact zeros.
+    """
     if mask is None:
         return None
     m = np.asarray(mask)
-    if m.ndim == 3:                       # stacked scan axis
-        m = (m != 0).any(axis=0)
+    if m.ndim > 2:
+        m = (m != 0).any(axis=tuple(range(m.ndim - 2)))
     if m.ndim != 2:
         return None
     return m
@@ -116,6 +124,23 @@ def build_decode_plan(masks, *, tile: int = 128, interpret: bool = True
                                 stats, tile=tile, interpret=interpret)
                 if g:
                     entry["mlp"] = g
+            moe = ptree.get("moe")
+            if isinstance(moe, dict):
+                # stacked (E, d, d_ff) expert tensors union over the
+                # expert axis (and the scan axis) into ONE shared plan:
+                # the per-expert matmuls vmap over E with that plan
+                g = _plan_group(moe, _EXPERT_KEYS, f"seg{s_idx}.{pos}.moe",
+                                stats, tile=tile, interpret=interpret)
+                moe_entry: Dict[str, Any] = dict(g) if g else {}
+                shared = moe.get("shared")
+                if isinstance(shared, dict):
+                    sg = _plan_group(shared, _MLP_KEYS,
+                                     f"seg{s_idx}.{pos}.moe.shared",
+                                     stats, tile=tile, interpret=interpret)
+                    if sg:
+                        moe_entry["shared"] = sg
+                if moe_entry:
+                    entry["moe"] = moe_entry
             any_entry = any_entry or bool(entry)
             seg_plan.append(entry or None)
         plan.append(seg_plan)

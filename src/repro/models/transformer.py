@@ -275,7 +275,9 @@ def _apply_block(cfg: ArchConfig, sig, p, x, mode: str, cache,
         h2 = apply_norm(cfg.norm, p["norm2"], x)
         if is_moe:
             mo = moe_lib.moe_forward(p["moe"], h2, cfg.moe, cfg.act,
-                                     cfg.gated_mlp)
+                                     cfg.gated_mlp,
+                                     plan=plan.get("moe") if planned
+                                     else None)
             x = x + mo.y
             aux = mo.aux_loss
         else:

@@ -1,0 +1,209 @@
+"""Family-keyed adapter registry: make_adapter resolution, per-family
+prunable predicates as registry data, ServeUnsupported, and the MoE
+block-sparse plan path."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (CNNAdapter, EncDecAdapter, LMAdapter, ServeUnsupported,
+                       available_families, get_family, list_adaptable,
+                       make_adapter)
+from repro.configs import get_arch, get_cnn, list_archs, list_cnns
+from repro.core.masks import (encdec_prunable, family_prunable, make_masks,
+                              moe_prunable, path_str, recurrent_prunable)
+
+
+def test_every_registered_name_is_adaptable():
+    names = list_adaptable()
+    assert set(names) == set(list_archs()) | set(list_cnns())
+    assert len(names) >= 14
+
+
+def test_family_coverage():
+    fams = {get_arch(a).family for a in list_archs()}
+    fams |= {get_cnn(c).family for c in list_cnns()}
+    assert fams <= set(available_families())
+
+
+@pytest.mark.parametrize("name,cls", [
+    ("yi-6b", LMAdapter), ("deepseek-v3-671b", LMAdapter),
+    ("recurrentgemma-2b", LMAdapter), ("xlstm-125m", LMAdapter),
+    ("phi-3-vision-4.2b", LMAdapter),
+    ("whisper-tiny", EncDecAdapter), ("vgg16", CNNAdapter),
+])
+def test_make_adapter_resolves_family_class(name, cls):
+    adapter = make_adapter(name, scale="tiny")
+    assert isinstance(adapter, cls)
+    spec = get_family(adapter.family)
+    assert adapter.prunable_pred is spec.prunable
+    assert adapter.granularities == spec.granularities
+
+
+def test_make_adapter_unknown_name():
+    with pytest.raises(KeyError, match="unknown arch"):
+        make_adapter("no-such-arch")
+
+
+def test_make_adapter_rejects_unknown_scale():
+    with pytest.raises(ValueError, match="unknown scale"):
+        make_adapter("vgg11", scale="medium")
+
+
+def test_make_adapter_accepts_config_instance():
+    """A pre-scaled config instance passes through unscaled but still
+    gets the family data attached (examples rely on this)."""
+    from repro.configs import scaled_down
+    cfg = scaled_down(get_arch("yi-6b"), n_layers=1, d_model=32, n_heads=2,
+                      n_kv_heads=2, d_ff=64, head_dim=16, vocab_size=64,
+                      dtype="float32")
+    adapter = make_adapter(cfg, steps=2, batch_size=2, seq_len=8)
+    assert adapter.cfg is cfg
+    assert adapter.family == "dense"
+    assert adapter.prunable_pred is family_prunable("dense")
+
+
+def test_moe_family_granularities_lead_with_expert():
+    assert get_family("moe").granularities[0] == "expert"
+    assert get_family("dense").granularities is None
+
+
+# ---------------------------------------------------------------------------
+# Per-family prunable predicates: the registry data reaches the
+# family-specific tensors and skips the family-specific exclusions.
+# ---------------------------------------------------------------------------
+def _mask_paths(params, pred):
+    masks = make_masks(params, pred)
+    covered, skipped = set(), set()
+
+    def visit(path, leaf):
+        (covered if leaf is not None else skipped).add(path_str(path))
+        return leaf
+
+    jax.tree_util.tree_map_with_path(visit, masks,
+                                     is_leaf=lambda x: x is None)
+    return covered, skipped
+
+
+def _has(paths, token):
+    return any(token in p for p in paths)
+
+
+def test_moe_prunable_reaches_expert_stacks_not_router():
+    from repro.configs import scaled_down
+    from repro.models import transformer as tfm
+    cfg = scaled_down(get_arch("llama4-maverick-400b-a17b"), n_layers=2,
+                      block_pattern=None, dtype="float32")
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    covered, skipped = _mask_paths(params, moe_prunable)
+    assert _has(covered, "moe/up") and _has(covered, "moe/down")
+    assert _has(covered, "moe/shared/up")
+    assert not _has(covered, "router")
+    assert _has(skipped, "router")
+    assert not _has(covered, "embed")
+
+
+def test_recurrent_prunable_reaches_blockdiag_not_conv_or_lam():
+    from repro.configs import scaled_down
+    from repro.models import transformer as tfm
+    cfg = scaled_down(get_arch("recurrentgemma-2b"), dtype="float32")
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    covered, skipped = _mask_paths(params, recurrent_prunable)
+    assert _has(covered, "rnn/w_in") and _has(covered, "rnn/w_out")
+    assert _has(covered, "rnn/rg/w") and _has(covered, "rnn/ig/w")
+    assert not _has(covered, "rnn/conv")
+    assert not _has(covered, "lam")
+
+
+def test_recurrent_prunable_covers_xlstm_cells():
+    from repro.configs import scaled_down
+    from repro.models import transformer as tfm
+    cfg = scaled_down(get_arch("xlstm-125m"), dtype="float32")
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    covered, _ = _mask_paths(params, recurrent_prunable)
+    assert _has(covered, "cell/wq/w")               # mLSTM block-diag
+    assert _has(covered, "cell/ri/w")               # sLSTM recurrence
+    assert _has(covered, "rnn/up") and _has(covered, "rnn/down")
+    assert not _has(covered, "bi") and not _has(covered, "bf")
+
+
+def test_encdec_prunable_reaches_cross_attention_not_frontend():
+    from repro.configs import scaled_down
+    from repro.models import encdec
+    cfg = scaled_down(get_arch("whisper-tiny"), dtype="float32")
+    params = encdec.init_params(jax.random.PRNGKey(0), cfg)
+    covered, skipped = _mask_paths(params, encdec_prunable)
+    assert _has(covered, "xattn/wq") and _has(covered, "xattn/wo")
+    assert _has(covered, "enc/attn/wq") and _has(covered, "dec/mlp/up")
+    assert not _has(covered, "frame_adapter")
+    assert _has(skipped, "frame_adapter")
+    assert not _has(covered, "embed")
+
+
+def test_family_prunable_unknown_family():
+    with pytest.raises(KeyError):
+        family_prunable("hologram")
+
+
+# ---------------------------------------------------------------------------
+# ServeUnsupported: structured, CLI-catchable
+# ---------------------------------------------------------------------------
+def test_serve_unsupported_is_structured():
+    adapter = make_adapter("vgg11", scale="tiny")
+    with pytest.raises(ServeUnsupported) as ei:
+        adapter.serve_fns()
+    assert ei.value.family == "cnn"
+    assert "vgg11" in ei.value.arch
+    assert ei.value.reason
+    assert isinstance(ei.value, NotImplementedError)  # back-compat
+
+
+def test_encdec_serve_unsupported():
+    adapter = make_adapter("whisper-tiny", scale="tiny")
+    with pytest.raises(ServeUnsupported) as ei:
+        adapter.serve_fns()
+    assert ei.value.family == "audio"
+
+
+def test_lm_adapter_still_serves():
+    adapter = make_adapter("llama3.2-3b", scale="tiny")
+    prefill_fn, decode_fn = adapter.serve_fns()
+    assert callable(prefill_fn) and callable(decode_fn)
+
+
+# ---------------------------------------------------------------------------
+# MoE block-sparse plan path: per-expert matmuls run through ONE plan
+# unioned over the expert axis, matching the dense forward exactly.
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_moe_plan_matches_dense_forward():
+    from repro.configs import scaled_down
+    from repro.core.algorithm import prune_step
+    from repro.core.masks import apply_masks
+    from repro.models import transformer as tfm
+    from repro.models.plans import build_decode_plan
+
+    base = get_arch("llama4-maverick-400b-a17b")
+    cfg = scaled_down(base, dtype="float32")
+    # 128-divisible expert width so the expert tensors tile
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, d_ff_expert=128,
+                                     d_ff_shared=128))
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    masks = make_masks(params, moe_prunable)
+    masks = prune_step(params, masks, "expert", 0.3, lambda p: False)
+    masks = prune_step(params, masks, "xbar", 0.2, lambda p: False)
+    pruned = apply_masks(params, masks)
+    plan, stats = build_decode_plan(masks, interpret=True)
+    moe_routed = [l for l in stats.by_layer if ".moe" in l[0]]
+    assert moe_routed, "expert tensors must be routed"
+    assert any(".moe.shared" in l[0] for l in stats.by_layer)
+    assert stats.live_tiles < stats.total_tiles
+
+    batch = {"tokens": jnp.ones((2, 16), jnp.int32),
+             "labels": jnp.ones((2, 16), jnp.int32)}
+    l_dense, _ = tfm.loss_fn(pruned, cfg, batch)
+    l_plan, _ = tfm.loss_fn(pruned, cfg, batch, plan=plan)
+    np.testing.assert_allclose(float(l_plan), float(l_dense), rtol=1e-5)

@@ -1,0 +1,133 @@
+"""`python -m repro.api` CLI: prune → report → finetune round-trips,
+JSON event streaming, and the structured serve-unsupported path.
+
+Runs the CLI in-process (``cli.main(argv)``) — same code path as
+``python -m repro.api`` without interpreter startup per case.
+"""
+import json
+
+import pytest
+
+from repro.api import cli
+
+
+def _run(capsys, argv):
+    code = cli.main(argv)
+    return code, capsys.readouterr().out
+
+
+def _json_lines(out):
+    return [json.loads(line) for line in out.splitlines() if line.strip()]
+
+
+def test_archs_lists_every_registered_name(capsys):
+    from repro.api import list_adaptable
+    code, out = _run(capsys, ["archs", "--json"])
+    assert code == 0
+    rows = _json_lines(out)
+    assert {r["arch"] for r in rows} == set(list_adaptable())
+    by_arch = {r["arch"]: r for r in rows}
+    assert by_arch["vgg11"]["family"] == "cnn"
+    assert by_arch["deepseek-v3-671b"]["granularities"][0] == "expert"
+    assert by_arch["whisper-tiny"]["serves"] is False
+
+
+def test_cnn_prune_report_finetune_roundtrip(tmp_path, capsys):
+    ticket = str(tmp_path / "ticket")
+    code, out = _run(capsys, [
+        "prune", "--arch", "vgg11", "--scale", "tiny", "--rounds", "1",
+        "--tolerance", "1e9", "--steps", "2", "--ticket", ticket, "--json"])
+    assert code == 0
+    events = _json_lines(out)
+    rounds = [e for e in events if e["event"] == "round"]
+    result = [e for e in events if e["event"] == "result"]
+    assert len(rounds) == 1 and len(result) == 1
+    assert rounds[0]["granularity"] == "filter"
+    assert rounds[0]["accepted"] is True
+    assert 0.1 < rounds[0]["sparsity_after"] < 0.5
+    assert "live_tile_fraction" in rounds[0]
+    assert result[0]["ticket"] == ticket
+    assert result[0]["xbars_needed"] <= result[0]["xbars_unpruned"]
+
+    code, out = _run(capsys, ["report", "--arch", "vgg11",
+                              "--ticket", ticket, "--json"])
+    assert code == 0
+    rep = _json_lines(out)[0]
+    assert rep["event"] == "report"
+    assert rep["mask_sparsity"] == pytest.approx(
+        result[0]["sparsity"], abs=1e-6)
+    assert rep["xbar_rows"] == 128
+
+    code, out = _run(capsys, ["finetune", "--arch", "vgg11",
+                              "--ticket", ticket, "--steps", "2", "--json"])
+    assert code == 0
+    ft = _json_lines(out)[0]
+    assert ft["event"] == "finetune"
+    assert ft["loss"] is not None
+
+
+@pytest.mark.slow
+def test_lm_prune_finetune_serve_roundtrip(tmp_path, capsys):
+    ticket = str(tmp_path / "lm_ticket")
+    code, out = _run(capsys, [
+        "prune", "--arch", "llama3.2-3b", "--scale", "tiny", "--rounds",
+        "1", "--tolerance", "1e9", "--steps", "2", "--ticket", ticket,
+        "--json"])
+    assert code == 0
+    events = _json_lines(out)
+    assert events[-1]["event"] == "result"
+    assert events[0]["accuracy"] < 0                # -CE score
+
+    code, out = _run(capsys, ["finetune", "--arch", "llama3.2-3b",
+                              "--ticket", ticket, "--steps", "2", "--json"])
+    assert code == 0
+    assert _json_lines(out)[0]["event"] == "finetune"
+
+    code, out = _run(capsys, [
+        "serve", "--arch", "llama3.2-3b", "--scale", "tiny",
+        "--ticket", ticket, "--requests", "2", "--max-new", "3", "--json"])
+    assert code == 0
+    rep = _json_lines(out)[0]
+    assert rep["event"] == "serve"
+    assert rep["requests"] == 2
+    assert rep["tokens"] > 0
+    assert rep["bsmm"] is True                      # ticket masks rode along
+
+
+def test_serve_unsupported_family_reports_not_raises(tmp_path, capsys):
+    code, out = _run(capsys, ["serve", "--arch", "vgg11", "--json"])
+    assert code == cli.EXIT_UNSUPPORTED
+    rep = _json_lines(out)[0]
+    assert rep["event"] == "serve_unsupported"
+    assert rep["family"] == "cnn"
+    assert rep["reason"]
+
+    code, out = _run(capsys, ["serve", "--arch", "whisper-tiny", "--json"])
+    assert code == cli.EXIT_UNSUPPORTED
+    assert _json_lines(out)[0]["family"] == "audio"
+
+
+def test_ticket_scale_mismatch_reports_not_tracebacks(tmp_path, capsys):
+    """A ticket pruned for one shape must not crash deep inside the
+    model when loaded at another — structured error, exit 2."""
+    ticket = str(tmp_path / "t")
+    code, _ = _run(capsys, [
+        "prune", "--arch", "vgg11", "--scale", "tiny", "--rounds", "1",
+        "--tolerance", "1e9", "--steps", "2", "--ticket", ticket, "--json"])
+    assert code == 0
+    code, out = _run(capsys, ["report", "--arch", "resnet18",
+                              "--ticket", ticket, "--json"])
+    assert code == cli.EXIT_UNSUPPORTED
+    rep = _json_lines(out)[0]
+    assert rep["event"] == "ticket_mismatch"
+    assert "scale" in rep["reason"] or "arch" in rep["reason"]
+
+
+def test_prune_granularity_override(capsys):
+    code, out = _run(capsys, [
+        "prune", "--arch", "vgg11", "--scale", "tiny", "--rounds", "1",
+        "--tolerance", "1e9", "--steps", "2", "--granularity",
+        "index", "--json"])
+    assert code == 0
+    rounds = [e for e in _json_lines(out) if e["event"] == "round"]
+    assert rounds[0]["granularity"] == "index"

@@ -4,13 +4,19 @@ Each assigned architecture is instantiated at a REDUCED config of the
 same family and runs one forward + one train step + one prefill→decode
 step on CPU, asserting output shapes and no NaNs.  The FULL configs are
 exercised only via the dry-run (ShapeDtypeStruct, no allocation).
+
+``test_make_adapter_session_smoke`` additionally drives EVERY
+registered name — archs AND CNNs — through a one-round scaled-down
+``PruningSession`` via the family registry (``repro.api.
+make_adapter``), the acceptance bar for "one tool that prunes anything
+registered".
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import get_arch, list_archs, scaled_down
+from repro.configs import get_arch, list_archs, list_cnns, scaled_down
 from repro.models import encdec
 from repro.models import transformer as tfm
 from repro.optim import adamw, constant
@@ -24,6 +30,14 @@ _HEAVY = {"deepseek-v3-671b", "whisper-tiny", "recurrentgemma-2b",
 _ALL = list_archs()
 ARCHS = [pytest.param(a, marks=pytest.mark.slow) if a in _HEAVY else a
          for a in _ALL]
+
+# session smoke covers CNNs too; one CNN + one LM stay in tier-1, the
+# rest (every remaining family) go to the slow job
+_SESSION_FAST = {"llama3.2-3b", "vgg11"}
+_ALL_NAMES = list(list_archs()) + list(list_cnns())
+ADAPTABLE = [a if a in _SESSION_FAST
+             else pytest.param(a, marks=pytest.mark.slow)
+             for a in _ALL_NAMES]
 
 
 def _batch(cfg, rng):
@@ -85,6 +99,70 @@ def test_prefill_decode(arch, rng):
     logits3, caches = mod.decode_step(params, cfg, caches, tok)
     for lg in (logits, logits2, logits3):
         assert not np.any(np.isnan(np.asarray(lg, np.float32)))
+
+
+@pytest.mark.parametrize("arch", ADAPTABLE)
+def test_make_adapter_session_smoke(arch):
+    """Every registered name completes a one-round scaled-down
+    PruningSession through the family registry."""
+    from repro.api import PruningSession, make_adapter
+    from repro.configs import PruneConfig
+
+    adapter = make_adapter(arch, scale="tiny")
+    session = PruningSession(
+        adapter, PruneConfig(prune_fraction=0.25, max_iters=1,
+                             accuracy_tolerance=1e9))
+    res = session.run()
+    assert len(res.history) == 1
+    assert res.history[0].accepted
+    assert 0.1 < res.sparsity < 0.5
+    # the family schedule came from the registry (MoE leads with
+    # whole-expert pruning, everything else with the paper's 'filter')
+    cfg = adapter.cfg
+    expected_first = "expert" if cfg.family == "moe" else "filter"
+    assert res.history[0].granularity == expected_first
+    assert np.isfinite(res.history[0].accuracy)
+
+
+def _mask_leaves(tree, prefix=""):
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            yield from _mask_leaves(v, f"{prefix}/{k}")
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            yield from _mask_leaves(v, f"{prefix}/{i}")
+    elif tree is not None:
+        yield prefix, np.asarray(tree)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ["llama4-maverick-400b-a17b",
+                                  "deepseek-v3-671b"])
+def test_moe_session_prunes_whole_experts(arch):
+    """MoE archs lead with the 'expert' granularity: after one accepted
+    round, some expert slices of the stacked (E, d, d_ff) tensors are
+    entirely dead while non-expert leaves are untouched."""
+    from repro.api import PruningSession, make_adapter
+    from repro.configs import PruneConfig
+
+    adapter = make_adapter(arch, scale="tiny")
+    assert adapter.granularities[0] == "expert"
+    res = PruningSession(
+        adapter, PruneConfig(prune_fraction=0.25, max_iters=1,
+                             accuracy_tolerance=1e9)).run()
+    assert res.history[0].granularity == "expert"
+    expert_leaves = [(p, m) for p, m in _mask_leaves(res.masks)
+                     if "/moe/" in p and m.ndim >= 3]
+    assert expert_leaves, "scaled MoE config must have expert masks"
+    dead_sliced = pruned_elsewhere = 0
+    for p, m in expert_leaves:
+        slices = m.reshape(-1, m.shape[-2] * m.shape[-1])
+        dead_sliced += int((slices.sum(axis=1) == 0).sum())
+    for p, m in _mask_leaves(res.masks):
+        if "/moe/" not in p:
+            pruned_elsewhere += int(m.size - m.sum())
+    assert dead_sliced > 0            # whole experts turned off
+    assert pruned_elsewhere == 0      # expert granularity touches only MoE
 
 
 def test_all_ten_assigned_archs_present():

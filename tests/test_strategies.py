@@ -19,7 +19,12 @@ def _leaves():
     ]
 
 
-@pytest.mark.parametrize("name", strat.available_strategies())
+# 'expert' only forms groups on stacked MoE tensors — it gets its own
+# roundtrip below on an expert-shaped leaf
+_TILING = [n for n in strat.available_strategies() if n != "expert"]
+
+
+@pytest.mark.parametrize("name", _TILING)
 def test_registry_roundtrip_score_zero(name):
     """score → kill the lowest quarter of groups → zero: exactly the
     selected groups die, nothing resurrects, sizes account for the
@@ -50,6 +55,89 @@ def test_registry_roundtrip_score_zero(name):
 def test_get_strategy_unknown_name():
     with pytest.raises(KeyError):
         strat.get_strategy("no-such-granularity")
+
+
+# ---------------------------------------------------------------------------
+# 'expert' granularity: whole MoE experts, nothing else
+# ---------------------------------------------------------------------------
+def _expert_leaf(E=6, d=16, ff=8, seed=5):
+    r = np.random.RandomState(seed)
+    return r.randn(E, d, ff).astype(np.float32)
+
+
+def test_expert_strategy_roundtrip_on_expert_stack():
+    w = _expert_leaf()
+    mask = np.ones_like(w)
+    path = "segments/0/1/moe/up"
+    gs = scoring.group_scores(path, w, mask, "expert", conv=False)
+    assert gs.scores.shape == (w.shape[0],)        # one group per expert
+    assert gs.alive.all()
+    assert int(gs.sizes.sum()) == w.size
+    kill = np.zeros(w.shape[0], bool)
+    kill[[1, 4]] = True
+    new = scoring.zero_groups(mask, gs, kill)
+    assert new.shape == mask.shape
+    assert new[1].sum() == 0 and new[4].sum() == 0  # whole experts dead
+    assert new[0].all() and new[2].all() and new[3].all() and new[5].all()
+    gs2 = scoring.group_scores(path, w, new, "expert", conv=False)
+    assert not gs2.alive[kill].any()
+    assert gs2.alive[~kill].all()
+
+
+def test_expert_strategy_handles_scanned_expert_stack():
+    """(reps, E, d, ff) scanned MoE tensors: one group per expert per
+    layer, killed slice-exact."""
+    r = np.random.RandomState(6)
+    w = r.randn(3, 4, 8, 8).astype(np.float32)
+    mask = np.ones_like(w)
+    gs = scoring.group_scores("segments/1/0/moe/gate", w, mask, "expert",
+                              conv=False)
+    assert gs.scores.shape == (12,)
+    kill = np.zeros(12, bool)
+    kill[5] = True                                  # layer 1, expert 1
+    new = scoring.zero_groups(mask, gs, kill)
+    assert new[1, 1].sum() == 0
+    assert new.sum() == mask.size - 8 * 8
+
+
+def test_expert_strategy_ignores_non_expert_leaves():
+    """Attention/conv/dense leaves expose no alive groups, so global
+    selection can never kill them at the 'expert' granularity."""
+    for path, w, conv in _leaves():
+        gs = scoring.group_scores(path, w, mask=np.ones_like(w),
+                                  granularity="expert", conv=conv)
+        assert not gs.alive.any()
+    # a stacked NON-moe leaf (scanned attention) is also ignored
+    w = np.random.RandomState(7).randn(3, 16, 16).astype(np.float32)
+    gs = scoring.group_scores("segments/0/0/attn/wq", w, np.ones_like(w),
+                              "expert", conv=False)
+    assert not gs.alive.any()
+    # ...and so is the scanned SHARED-expert MLP: (reps, d, ff) stacks
+    # under moe/shared are layer repeats of an always-on MLP, not
+    # routed experts the router can route around
+    gs = scoring.group_scores("segments/0/1/moe/shared/up", w,
+                              np.ones_like(w), "expert", conv=False)
+    assert not gs.alive.any()
+
+
+def test_expert_granularity_through_prune_step():
+    import jax.numpy as jnp
+
+    from repro.core.algorithm import prune_step
+    from repro.core.masks import make_masks
+
+    params = {
+        "segments": [[{"attn": {"wq": jnp.asarray(
+            np.random.RandomState(8).randn(32, 32), jnp.float32)},
+            "moe": {"up": jnp.asarray(_expert_leaf(), jnp.float32)}}]],
+    }
+    masks = make_masks(params, lambda p, l: True)
+    new = prune_step(params, masks, "expert", 0.2, lambda p: False)
+    up = np.asarray(new["segments"][0][0]["moe"]["up"])
+    wq = np.asarray(new["segments"][0][0]["attn"]["wq"])
+    dead_experts = int((up.reshape(up.shape[0], -1).sum(axis=1) == 0).sum())
+    assert dead_experts >= 1
+    assert wq.all()                                 # attention untouched
 
 
 def test_register_custom_strategy_plugs_into_prune_step():
