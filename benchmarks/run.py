@@ -7,28 +7,35 @@ Prints ``name,us_per_call,derived`` CSV (one line per measurement).
   fig7_speedup    — paper Fig. 7 (training speedup, iso-area)
   fig8_layerwise  — paper Fig. 8 (ResNet-18 per-layer xbars/time)
   kernels_bench   — block-sparse train-step (fwd+bwd) tile-skip scaling
+  recipes_bench   — staged recipe (paper-quant) per-stage trajectory
   roofline        — corrected roofline table from the dry-run cache
 
 Run all: ``PYTHONPATH=src python -m benchmarks.run``
 One:     ``PYTHONPATH=src python -m benchmarks.run fig6``
 JSON:    ``PYTHONPATH=src python -m benchmarks.run kernels --json``
-         writes ``BENCH_kernels.json`` (machine-readable kernel records:
-         measured step-time saving vs the tile-density/kmax prediction).
+         writes ``BENCH_kernels.json``;
+         ``... recipes --json`` writes ``BENCH_recipes.json`` (per-stage
+         accuracy/sparsity/live-tile records for the tiny CNN recipe).
 """
 import argparse
 import json
 import platform
+
+# benches whose run() returns machine-readable records --json can dump
+_JSON_BENCHES = {"kernels": "BENCH_kernels.json",
+                 "recipes": "BENCH_recipes.json"}
 
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("which", nargs="?", default="all",
                     choices=["all", "fig5", "fig6", "fig7", "fig8",
-                             "kernels", "roofline"])
-    ap.add_argument("--json", nargs="?", const="BENCH_kernels.json",
-                    default=None, metavar="PATH",
-                    help="write the kernel-bench records to PATH "
-                         "(default BENCH_kernels.json)")
+                             "kernels", "recipes", "roofline"])
+    ap.add_argument("--json", nargs="?", const="", default=None,
+                    metavar="PATH",
+                    help="write the bench's records to PATH (default "
+                         "BENCH_<bench>.json; needs `kernels` or "
+                         "`recipes` in the run)")
     opts = ap.parse_args()
     which, json_path = opts.which, opts.json
     print("name,us_per_call,derived")
@@ -45,33 +52,45 @@ def main() -> None:
     if which in ("all", "kernels"):
         from benchmarks import kernels_bench
         mods.append(kernels_bench)
+    if which in ("all", "recipes"):
+        from benchmarks import recipes_bench
+        mods.append(recipes_bench)
     if which in ("all", "roofline"):
         from benchmarks import roofline
         mods.append(roofline)
     if which in ("all", "fig5"):
         from benchmarks import fig5_sparsity
         mods.append(fig5_sparsity)
-    kernel_records = None
+    records = {}
     for m in mods:
         out = m.run()
-        if m.__name__.endswith("kernels_bench"):
-            kernel_records = out
+        for bench in _JSON_BENCHES:
+            if m.__name__.endswith(f"{bench}_bench"):
+                records[bench] = out
     if json_path is not None:
-        if kernel_records is None:
-            raise SystemExit("--json needs the kernels bench in the run "
-                             "(use `kernels` or `all`)")
+        if not records:
+            raise SystemExit("--json needs a record-producing bench in "
+                             "the run (`kernels`, `recipes`, or `all`)")
+        if json_path and len(records) > 1:
+            raise SystemExit(
+                "--json PATH is ambiguous with multiple record benches "
+                "in one run (`all` produces kernels AND recipes); drop "
+                "the PATH to get the default BENCH_<bench>.json names, "
+                "or run one bench at a time")
         import jax
-        payload = {
-            "bench": "kernels",
-            "backend": jax.default_backend(),
-            "python": platform.python_version(),
-            "jax": jax.__version__,
-            "records": kernel_records,
-        }
-        with open(json_path, "w") as f:
-            json.dump(payload, f, indent=2)
-            f.write("\n")
-        print(f"# wrote {json_path} ({len(kernel_records)} records)")
+        for bench, recs in records.items():
+            path = json_path or _JSON_BENCHES[bench]
+            payload = {
+                "bench": bench,
+                "backend": jax.default_backend(),
+                "python": platform.python_version(),
+                "jax": jax.__version__,
+                "records": recs,
+            }
+            with open(path, "w") as f:
+                json.dump(payload, f, indent=2)
+                f.write("\n")
+            print(f"# wrote {path} ({len(recs)} records)")
 
 
 if __name__ == '__main__':

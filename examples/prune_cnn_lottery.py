@@ -8,12 +8,15 @@ through the ``repro.api`` session layer.
 Default: the resnet18 config scaled down by the family registry
 (``make_adapter(..., scale="tiny")`` — same block structure, capped
 channels) for CPU minutes.  ``--full``: the real resnet18 config
-(hours on CPU; the masks/savings pipeline is identical).
+(hours on CPU; the masks/savings pipeline is identical), which also
+picks up the family's TUNED staged recipe (``cnn-full``: paper
+schedule + int8 QAT) from the registry.  ``--recipe`` overrides with
+any registered recipe name or a recipe .json path.
 
 CLI parity — the same run from the shell:
 
     python -m repro.api prune --arch resnet18 --scale tiny \
-        --rounds 10 --ticket /tmp/realprune_ticket
+        --recipe paper-quant --rounds 10 --ticket /tmp/realprune_ticket
 """
 import argparse
 import sys
@@ -29,18 +32,26 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--arch", default="resnet18")
-    ap.add_argument("--steps", type=int, default=120)
+    ap.add_argument("--steps", type=int, default=None,
+                    help="retrain steps per round (default 120; when "
+                         "set explicitly it also overrides the "
+                         "recipe's per-stage budgets)")
+    ap.add_argument("--recipe", default=None,
+                    help="staged prune program (name from `python -m "
+                         "repro.api recipes` or a .json path); default: "
+                         "the family schedule at --scale tiny, the tuned "
+                         "cnn-full recipe at --full")
     ap.add_argument("--ticket-dir", default="/tmp/realprune_ticket")
     ap.add_argument("--ckpt", default=None,
                     help="session checkpoint dir (resume a killed run)")
     args = ap.parse_args()
 
     # the family registry picks the adapter class, prunability
-    # predicates, and granularity schedule for us — this script works
+    # predicates, and prune recipe/schedule for us — this script works
     # for ANY registered CNN (and, family aside, any arch at all)
     adapter = make_adapter(
         args.arch, scale="full" if args.full else "tiny",
-        steps=args.steps, batch_size=128,            # paper: batch size 128
+        steps=args.steps or 120, batch_size=128,     # paper: batch size 128
         lr=0.1, lr_decay=0.95,                       # paper: LR .1, -5%/epoch
         eval_batches=4, eval_batch_size=256)
     cfg = adapter.cfg
@@ -49,9 +60,17 @@ def main():
     session = PruningSession(
         adapter, PruneConfig(prune_fraction=0.25, max_iters=10,
                              accuracy_tolerance=0.02),
-        ckpt_dir=args.ckpt)
+        recipe=args.recipe, ckpt_dir=args.ckpt)
+    if args.steps:
+        # an explicit --steps wins over per-stage retrain budgets,
+        # whether the recipe came from --recipe or the family registry
+        session.recipe = session.recipe.with_retrain_steps(args.steps)
+    print(f"recipe: {session.recipe.name} "
+          f"({' -> '.join(s.name for s in session.recipe.stages)})")
     res = session.run()
-    print(f"winning-ticket sparsity: {res.sparsity:.3f}")
+    print(f"winning-ticket sparsity: {res.sparsity:.3f}"
+          + (f" (int{session.quantize_bits} QAT accepted)"
+             if session.quantize_bits else ""))
 
     # export/import the ticket (paper §V.C: prune once, reuse forever)
     session.export_ticket(args.ticket_dir)

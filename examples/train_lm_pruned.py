@@ -18,7 +18,7 @@ sys.path.insert(0, "src")
 
 import jax
 
-from repro.api import make_adapter, structured_prune
+from repro.api import get_recipe, make_adapter, structured_prune
 from repro.configs import PruneConfig, get_arch, scaled_down
 from repro.core.hardware import analyze_masks
 from repro.core.masks import apply_masks, sparsity_fraction
@@ -66,12 +66,16 @@ def main():
           f"(resumable checkpoints in {args.ckpt})")
 
     # ---- crossbar-aware pruning of the trained LM ----
+    # the one-shot schedule is read off the registered "paper" recipe —
+    # recipes are the single source of truth for prune programs, even
+    # when (as here) the accuracy gate is skipped for a fixed schedule
     prune_cfg = PruneConfig()
-    masks = structured_prune(
-        trained, [("filter", 0.2), ("channel", 0.2), ("index", 0.2)],
-        prunable=adapter.prunable, cfg=prune_cfg)
+    schedule = [(s.granularity, 0.2)
+                for s in get_recipe("paper").stages if s.kind == "prune"]
+    masks = structured_prune(trained, schedule,
+                             prunable=adapter.prunable, cfg=prune_cfg)
     print(f"tile-pruned to sparsity {sparsity_fraction(masks):.1%} "
-          f"(filter→channel→index, crossbar-aware)")
+          f"({'→'.join(g for g, _ in schedule)}, crossbar-aware)")
 
     # lottery rewind to the dense-phase start, retrain the ticket
     pruned = apply_masks(trained, masks)

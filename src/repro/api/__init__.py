@@ -12,14 +12,24 @@ Or from the shell (same machinery):
 
     python -m repro.api prune --arch vgg16 --scale tiny --rounds 3
 
+Pruning runs are *recipes* — staged programs (``prune`` granularity
+stages, a ``quantize`` QAT stage, an ``ablate`` sweep) interpreted by
+the session:
+
+    session = PruningSession(adapter, recipe="paper-quant")
+
 Layering:
 
+    recipes.py  — Stage/Recipe (serializable), named registry,
+                  built-ins, the granularities= shim compiler
     adapters.py — ModelAdapter protocol + CNN/LM/EncDec adapters on
                   Trainer (family specifics injected as data)
     registry.py — family-keyed registry: make_adapter() for every
-                  name in configs.list_archs() + list_cnns()
-    session.py  — PruningSession (events, checkpoint/resume, handoff)
-    cli.py      — prune / finetune / report / serve subcommands
+                  name in configs.list_archs() + list_cnns(), plus the
+                  tuned full-scale per-family recipes
+    session.py  — PruningSession (recipe interpreter: events,
+                  mid-stage checkpoint/resume, ticket handoff)
+    cli.py      — prune / finetune / report / serve / recipes
 
 plus ``structured_prune`` for one-shot (no accuracy gate) schedules.
 Strategy registration for custom granularities lives in
@@ -28,6 +38,11 @@ Strategy registration for custom granularities lives in
 from repro.api.adapters import (  # noqa: F401
     CNNAdapter, EncDecAdapter, FunctionAdapter, LMAdapter, ModelAdapter,
     ServeUnsupported,
+)
+from repro.api.recipes import (  # noqa: F401
+    Recipe, Stage, ablate_stage, available_recipes, from_granularities,
+    get_recipe, prune_stage, quantize_stage, register_recipe,
+    resolve_recipe,
 )
 from repro.api.registry import (  # noqa: F401
     FamilySpec, available_families, get_family, list_adaptable,

@@ -30,6 +30,7 @@ import numpy as np
 
 from repro.core.masks import (apply_masks, cnn_conv_path, cnn_prunable,
                               encdec_prunable, lm_prunable, make_masks)
+from repro.core.quantize import fake_quantize_tree
 from repro.data import (DataPipeline, SyntheticAudio, SyntheticImages,
                         SyntheticLM)
 from repro.optim import (adamw, constant, exponential_epoch_decay, masked,
@@ -62,23 +63,39 @@ class ModelAdapter:
     ``evaluate`` returns a scalar where HIGHER IS BETTER (accuracy for
     classifiers; adapters for likelihood models return negative loss).
 
-    ``prunable_pred`` / ``conv_path_pred`` / ``granularities`` are the
-    per-family registry data; subclasses set defaults and
-    ``make_adapter`` overrides them from the family entry.
+    ``prunable_pred`` / ``conv_path_pred`` / ``granularities`` /
+    ``recipe`` are the per-family registry data; subclasses set
+    defaults and ``make_adapter`` overrides them from the family entry.
+
+    ``train`` accepts ``quantize_bits``: when set, the jitted step
+    fake-quantizes the prunable weights (straight-through, fixed point
+    at that width) so tickets retrain quantization-aware — the
+    ``quantize`` recipe stage.  Adapters without a QAT path may ignore
+    it.
     """
 
     cfg: Any = None
     family: str = "custom"
     # None → the session falls back to PruneConfig.granularities
     granularities: Optional[Sequence[str]] = None
+    # family-tuned Recipe (or registered recipe name); None → schedule
+    recipe: Optional[Any] = None
     prunable_pred: Optional[Callable[[str, Any], bool]] = None
     conv_path_pred: Optional[Callable[[str], bool]] = None
 
     def init_params(self, rng):
         raise NotImplementedError
 
-    def train(self, params, masks=None, steps: Optional[int] = None):
+    def train(self, params, masks=None, steps: Optional[int] = None,
+              *, quantize_bits: Optional[int] = None):
         raise NotImplementedError
+
+    def _qat(self, quantize_bits: Optional[int]):
+        """Loss-input transform for quantization-aware retraining."""
+        if quantize_bits is None:
+            return lambda p: p
+        return lambda p: fake_quantize_tree(p, self.prunable,
+                                            quantize_bits)
 
     def evaluate(self, params, masks=None) -> float:
         raise NotImplementedError
@@ -116,7 +133,8 @@ class FunctionAdapter(ModelAdapter):
     def init_params(self, rng):
         return jax.tree.map(lambda x: x, self.params)
 
-    def train(self, params, masks=None, steps=None):
+    def train(self, params, masks=None, steps=None, *, quantize_bits=None):
+        # scripted closures predate QAT; bits are accepted and ignored
         return self.train_fn(params, masks)
 
     def evaluate(self, params, masks=None) -> float:
@@ -184,7 +202,7 @@ class CNNAdapter(ModelAdapter):
         return {"images": jnp.asarray(b["images"]),
                 "labels": jnp.asarray(b["labels"])}
 
-    def train(self, params, masks=None, steps=None):
+    def train(self, params, masks=None, steps=None, *, quantize_bits=None):
         if self._bn0 is None:
             raise RuntimeError("call init_params before train")
         steps = steps or self.steps
@@ -197,10 +215,12 @@ class CNNAdapter(ModelAdapter):
         plans, self.last_plan_stats = (
             cnn_train_plan(masks, interpret=self.bsmm_interpret)
             if masks is not None and self.use_bsmm else (None, PlanStats()))
+        qat = self._qat(quantize_bits)
 
         def loss(p, state, batch):
-            l, (new_state, _) = self._cnn.loss_fn(p, state, self.cfg, batch,
-                                                  train=True, plans=plans)
+            l, (new_state, _) = self._cnn.loss_fn(qat(p), state, self.cfg,
+                                                  batch, train=True,
+                                                  plans=plans)
             return l, (new_state, {})
 
         # donate=False: the session re-applies masks to the same w_init
@@ -293,13 +313,11 @@ class LMAdapter(ModelAdapter):
             out["patches"] = self._patches(step, self.batch_size)
         return out
 
-    def _loss(self, params, batch):
-        return self._tfm.loss_fn(params, self.cfg, batch)
-
     def make_trainer(self, params, masks=None, *, steps: Optional[int] = None,
                      start_step: int = 0, ckpt_dir: Optional[str] = None,
                      ckpt_every: int = 50, async_ckpt: bool = True,
-                     learning_rate: Optional[float] = None) -> Trainer:
+                     learning_rate: Optional[float] = None,
+                     quantize_bits: Optional[int] = None) -> Trainer:
         """A fully-wired Trainer for these weights — the session/ticket
         handoff point for long runs that need their own checkpoints.
 
@@ -321,9 +339,9 @@ class LMAdapter(ModelAdapter):
         plan, self.last_plan_stats = (
             lm_train_plan(masks, interpret=self.bsmm_interpret)
             if masks is not None and self.use_bsmm else (None, PlanStats()))
-        loss = (self._loss if plan is None else
-                lambda p, batch: self._tfm.loss_fn(p, self.cfg, batch,
-                                                   plan=plan))
+        qat = self._qat(quantize_bits)
+        loss = (lambda p, batch:
+                self._tfm.loss_fn(qat(p), self.cfg, batch, plan=plan))
         return Trainer(
             loss_fn=loss, optimizer=opt, params=params,
             data_iter=DataPipeline(self._batch, start_step=start_step,
@@ -334,10 +352,12 @@ class LMAdapter(ModelAdapter):
 
     def train(self, params, masks=None, steps=None, *, start_step: int = 0,
               ckpt_dir: Optional[str] = None,
-              learning_rate: Optional[float] = None):
+              learning_rate: Optional[float] = None,
+              quantize_bits: Optional[int] = None):
         trainer = self.make_trainer(params, masks, steps=steps,
                                     start_step=start_step, ckpt_dir=ckpt_dir,
-                                    learning_rate=learning_rate)
+                                    learning_rate=learning_rate,
+                                    quantize_bits=quantize_bits)
         self.last_metrics = trainer.run(steps or self.steps,
                                         log_every=self.log_every)
         return trainer.state.params
@@ -399,7 +419,7 @@ class EncDecAdapter(ModelAdapter):
         b = self.data.batch(step, self.batch_size)
         return {k: jnp.asarray(v) for k, v in b.items()}
 
-    def train(self, params, masks=None, steps=None):
+    def train(self, params, masks=None, steps=None, *, quantize_bits=None):
         steps = steps or self.steps
         sched = warmup_cosine(self.peak_lr,
                               min(self.warmup, max(steps // 2, 1)), steps)
@@ -407,9 +427,10 @@ class EncDecAdapter(ModelAdapter):
         if masks is not None:
             opt = masked(opt, masks)
             params = apply_masks(params, masks)
+        qat = self._qat(quantize_bits)
 
         def loss(p, batch):
-            return self._mod.loss_fn(p, self.cfg, batch)
+            return self._mod.loss_fn(qat(p), self.cfg, batch)
 
         trainer = Trainer(
             loss_fn=loss, optimizer=opt, params=params,

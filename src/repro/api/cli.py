@@ -2,19 +2,24 @@
 
 One CLI over the session layer: every name in ``configs.list_archs() +
 list_cnns()`` resolves through the family registry to a working
-adapter, so the same four subcommands drive CNNs, dense/MoE/hybrid/ssm
+adapter, so the same subcommands drive CNNs, dense/MoE/hybrid/ssm
 transformers, vlm and enc-dec configs.
 
     python -m repro.api archs
+    python -m repro.api recipes
     python -m repro.api prune --arch vgg11 --scale tiny --rounds 1
-    python -m repro.api prune --arch llama3.2-3b --scale tiny --json
+    python -m repro.api prune --arch scaled_down_cnn --recipe paper --json
+    python -m repro.api prune --arch llama3.2-3b --recipe paper-quant
     python -m repro.api report   --arch vgg11 --ticket /tmp/t
     python -m repro.api finetune --arch vgg11 --ticket /tmp/t --steps 20
     python -m repro.api serve    --arch yi-6b --requests 4
 
-``--json`` switches event output to one JSON object per line
-(machine-readable: round events carry sparsity, accuracy, and the
-bsmm live-tile fraction) for scripting and bench harnesses.
+``--recipe`` runs a staged prune program (a registered name from
+``recipes`` or a path to a recipe ``.json``); without it the legacy
+flat granularity schedule applies.  ``--json`` switches event output
+to one JSON object per line (machine-readable: round events carry the
+stage name/index and kind, sparsity, accuracy, and the bsmm live-tile
+fraction) for scripting and bench harnesses.
 
 Exit codes: 0 success; 2 structured refusal (e.g. ``serve`` on a
 family with no serving path — reported, not a traceback).
@@ -128,6 +133,7 @@ def cmd_archs(args) -> int:
         rows.append({"arch": name, "family": spec.family,
                      "adapter": spec.adapter_factory.__name__,
                      "granularities": list(spec.granularities or ()),
+                     "recipe": spec.recipe,
                      "serves": spec.serves})
     if args.json:
         for r in rows:
@@ -136,7 +142,8 @@ def cmd_archs(args) -> int:
         for r in rows:
             grans = ",".join(r["granularities"]) or "(paper schedule)"
             print(f"{r['arch']:28s} {r['family']:7s} {r['adapter']:14s} "
-                  f"grans={grans} serves={r['serves']}")
+                  f"grans={grans} recipe={r['recipe']} "
+                  f"serves={r['serves']}")
     return EXIT_OK
 
 
@@ -155,40 +162,79 @@ def cmd_prune(args) -> int:
         stats = getattr(adapter, "last_plan_stats", None)
         live = (1.0 - stats.skipped_tile_fraction
                 if stats is not None and stats.routed else None)
+        verdict = ("keep" if e.accepted else
+                   "scored" if e.kind == "ablate" else "undo")
         _emit({"event": "round", "arch": args.arch,
-               "iteration": e.iteration, "granularity": e.granularity,
+               "iteration": e.iteration, "stage": e.stage,
+               "stage_idx": e.stage_idx, "kind": e.kind,
+               "granularity": e.granularity,
                "sparsity_before": e.sparsity_before,
                "sparsity_after": e.sparsity_after,
                "accuracy": e.accuracy, "accepted": e.accepted,
                "live_tile_fraction": live},
               args.json,
-              f"round {e.iteration} [{e.granularity}] sparsity "
+              f"round {e.iteration} [{e.stage}] sparsity "
               f"{e.sparsity_before:.3f}->{e.sparsity_after:.3f} "
-              f"acc {e.accuracy:.4f} "
-              f"({'keep' if e.accepted else 'undo'})")
+              f"acc {e.accuracy:.4f} ({verdict})")
 
-    session = PruningSession(adapter, cfg, granularities=grans,
+    session = PruningSession(adapter, cfg, recipe=args.recipe,
+                             granularities=grans,
                              seed=args.seed, ckpt_dir=args.ckpt,
                              callbacks=[on_event])
+    if args.steps:
+        # an explicit --steps wins over per-stage retrain budgets no
+        # matter where the recipe came from (--recipe, the family
+        # registry at --scale full, or cfg) — smoke runs stay cheap
+        session.recipe = session.recipe.with_retrain_steps(args.steps)
     res = session.run()
     if args.ticket:
         session.export_ticket(args.ticket)
     rep = session.hardware_report()
     _emit({"event": "result", "arch": args.arch,
            "sparsity": res.sparsity, "iterations": len(res.history),
+           "recipe": session.recipe.name,
+           "stages": [s.name for s in session.recipe.stages],
            "granularities": session.grans,
+           "quantize_bits": session.quantize_bits,
+           "weight_bytes": rep.weight_bytes(),
            "ticket": args.ticket, **_hardware_dict(rep)},
           args.json,
           f"{args.arch}: sparsity {res.sparsity:.1%} after "
-          f"{len(res.history)} rounds | crossbars "
+          f"{len(res.history)} rounds of recipe "
+          f"'{session.recipe.name}' | crossbars "
           f"{rep.xbars_needed}/{rep.xbars_unpruned} "
           f"(-{rep.xbar_savings:.1%}), cell savings {rep.cell_savings:.1%}"
+          + (f" | int{session.quantize_bits} QAT accepted"
+             if session.quantize_bits else "")
           + (f" | ticket -> {args.ticket}" if args.ticket else ""))
+    return EXIT_OK
+
+
+def cmd_recipes(args) -> int:
+    from repro.api.recipes import available_recipes, get_recipe
+    from repro.api.registry import available_families, get_family
+
+    tuned_by = {}
+    for fam in available_families():
+        name = get_family(fam).recipe
+        if name:
+            tuned_by.setdefault(name, []).append(fam)
+    for name in available_recipes():
+        r = get_recipe(name)
+        row = {"recipe": name,
+               "stages": [s.name for s in r.stages],
+               "families": tuned_by.get(name, []),
+               "description": r.description}
+        _emit(row, args.json,
+              f"{name:14s} {' -> '.join(row['stages'])}"
+              + (f"  [tuned: {','.join(row['families'])}]"
+                 if row["families"] else ""))
     return EXIT_OK
 
 
 def cmd_finetune(args) -> int:
     from repro.api.registry import make_adapter
+    from repro.core.lottery import ticket_meta
 
     adapter = make_adapter(args.arch, scale=args.scale,
                            **({"steps": args.steps} if args.steps else {}))
@@ -196,22 +242,28 @@ def cmd_finetune(args) -> int:
         params, masks = _load_ticket(adapter, args.ticket, args.seed)
     except TicketMismatch as e:
         return _ticket_mismatch(args, e)
-    trained = adapter.train(params, masks, args.steps)
+    # tickets from a recipe with an accepted quantize stage fine-tune
+    # quantization-aware — the embedded metadata carries the bits
+    bits = ticket_meta(args.ticket).get("quantize_bits")
+    trained = adapter.train(params, masks, args.steps, quantize_bits=bits)
     score = adapter.evaluate(trained, masks)
     metrics = getattr(adapter, "last_metrics", {})
     _emit({"event": "finetune", "arch": args.arch, "ticket": args.ticket,
            "steps": args.steps, "score": score,
+           "quantize_bits": bits,
            "loss": metrics.get("loss")},
           args.json,
           f"{args.arch}: ticket fine-tuned {args.steps or 'default'} "
           f"steps, eval score {score:.4f}"
-          + (f", loss {metrics['loss']:.4f}" if "loss" in metrics else ""))
+          + (f", loss {metrics['loss']:.4f}" if "loss" in metrics else "")
+          + (f" (int{bits} QAT)" if bits else ""))
     return EXIT_OK
 
 
 def cmd_report(args) -> int:
     from repro.api.registry import make_adapter
     from repro.core.hardware import analyze_masks
+    from repro.core.lottery import ticket_meta
     from repro.core.masks import sparsity_fraction
 
     adapter = make_adapter(args.arch, scale=args.scale)
@@ -220,17 +272,32 @@ def cmd_report(args) -> int:
     except TicketMismatch as e:
         return _ticket_mismatch(args, e)
     pc = adapter.cfg.prune
+    meta = ticket_meta(args.ticket)
+    bits = meta.get("quantize_bits")
     rep = analyze_masks(masks, adapter.conv_pred,
-                        xbar_rows=pc.xbar_rows, xbar_cols=pc.xbar_cols)
+                        xbar_rows=pc.xbar_rows, xbar_cols=pc.xbar_cols,
+                        quant_bits=bits,
+                        dtype=getattr(adapter.cfg, "dtype", None))
+    bytes_d = rep.weight_bytes()
+    recipe = meta.get("recipe") or {}
+    human_bytes = ""
+    if bits:
+        human_bytes = (f" | int{bits} weights "
+                       f"{bytes_d['quantized_bytes'] / 1e6:.2f}MB "
+                       f"(dense {bytes_d['dense_bytes'] / 1e6:.2f}MB)")
     _emit({"event": "report", "arch": args.arch, "ticket": args.ticket,
            "mask_sparsity": sparsity_fraction(masks),
            "xbar_rows": pc.xbar_rows, "xbar_cols": pc.xbar_cols,
+           "recipe": recipe.get("name"),
+           "quantize_bits": bits,
+           "weight_bytes": bytes_d,
            **_hardware_dict(rep)},
           args.json,
           f"{args.arch}: ticket sparsity {sparsity_fraction(masks):.1%} | "
           f"{pc.xbar_rows}x{pc.xbar_cols} crossbars "
           f"{rep.xbars_needed}/{rep.xbars_unpruned} "
-          f"(-{rep.xbar_savings:.1%}) | cell savings {rep.cell_savings:.1%}")
+          f"(-{rep.xbar_savings:.1%}) | cell savings {rep.cell_savings:.1%}"
+          + human_bytes)
     return EXIT_OK
 
 
@@ -299,12 +366,24 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--json", action="store_true")
     p.set_defaults(fn=cmd_archs)
 
-    p = sub.add_parser("prune", help="run Algorithm 1 (PruningSession)")
+    p = sub.add_parser("recipes",
+                       help="list registered prune recipes (staged "
+                            "programs) and which families they tune")
+    p.add_argument("--json", action="store_true")
+    p.set_defaults(fn=cmd_recipes)
+
+    p = sub.add_parser("prune", help="run a prune recipe (PruningSession)")
     _add_common(p)
+    p.add_argument("--recipe", default=None,
+                   help="staged prune program: a name from "
+                        "`python -m repro.api recipes` or a path to a "
+                        "recipe .json (wins over --granularity)")
     p.add_argument("--rounds", type=int, default=3,
-                   help="max prune iterations (PruneConfig.max_iters)")
+                   help="global prune-round budget "
+                        "(PruneConfig.max_iters)")
     p.add_argument("--fraction", type=float, default=0.25,
-                   help="fraction of remaining weights pruned per round")
+                   help="fraction of remaining weights pruned per round "
+                        "(flat schedules; recipes carry per-stage rates)")
     p.add_argument("--tolerance", type=float, default=0.02,
                    help="allowed accuracy drop vs baseline (nats for LMs)")
     p.add_argument("--granularity", default=None,

@@ -24,6 +24,8 @@ from typing import Any, Callable, Dict, Mapping, Optional, Sequence, Tuple
 
 from repro.api.adapters import (CNNAdapter, EncDecAdapter, LMAdapter,
                                 ModelAdapter)
+from repro.api.recipes import (Recipe, prune_stage, quantize_stage,
+                               register_recipe)
 from repro.configs import (ArchConfig, CNNConfig, get_arch, get_cnn,
                            list_archs, list_cnns, scaled_down,
                            scaled_down_cnn)
@@ -41,6 +43,10 @@ class FamilySpec:
     conv_pred: Optional[Callable[[str], bool]] = None
     # None → PruneConfig.granularities (the paper's schedule)
     granularities: Optional[Tuple[str, ...]] = None
+    # tuned full-scale prune program (registered recipe name); applied
+    # at scale="full" only — tiny smoke runs keep the cheap flat
+    # schedule above
+    recipe: Optional[str] = None
     # cfg → reduced same-family cfg for scale="tiny"
     scale_tiny: Callable[[Any], Any] = lambda cfg: cfg
     # adapter kwargs that make scale="tiny" runs CPU-seconds cheap
@@ -75,6 +81,54 @@ def _tiny_arch(cfg: ArchConfig) -> ArchConfig:
 _LM_SMOKE = dict(steps=6, batch_size=2, seq_len=16, eval_batches=1,
                  warmup=2)
 
+# ---------------------------------------------------------------------------
+# Tuned full-scale recipes (FamilySpec.recipe points at these by name).
+# Rates/budgets follow the paper's calibration: coarse stages prune
+# aggressively with long retrains; fine stages mop up with shorter
+# ones; every family finishes with the ReRAM-native int8 QAT stage.
+# ---------------------------------------------------------------------------
+register_recipe(Recipe(
+    name="cnn-full",
+    description="Tuned full-scale CNN program (VGG/ResNet on CIFAR): "
+                "the paper schedule at 25%/round with a mop-up index "
+                "pass, then int8 quantization-aware retrain.",
+    stages=(
+        prune_stage("filter", rate=0.25, retrain_steps=400),
+        prune_stage("channel", rate=0.25, retrain_steps=400),
+        prune_stage("index", rate=0.20, retrain_steps=300,
+                    target_sparsity=0.95),
+        quantize_stage(8, retrain_steps=300),
+    )))
+
+register_recipe(Recipe(
+    name="dense-full",
+    description="Tuned full-scale dense-LM program: coarse filter "
+                "pass, crossbar-aligned channel/index passes at a "
+                "gentler rate (LM loss cliffs are sharper than CNN "
+                "accuracy), then int8 QAT.",
+    stages=(
+        prune_stage("filter", rate=0.20, retrain_steps=300),
+        prune_stage("channel", rate=0.20, retrain_steps=300),
+        prune_stage("index", rate=0.15, retrain_steps=200,
+                    target_sparsity=0.90),
+        quantize_stage(8, retrain_steps=200),
+    )))
+
+register_recipe(Recipe(
+    name="moe-full",
+    description="Tuned full-scale MoE program: whole-expert slices "
+                "first (bounded rounds — the router needs survivors), "
+                "then the dense-LM schedule over what remains, then "
+                "int8 QAT.",
+    stages=(
+        prune_stage("expert", rate=0.25, max_rounds=3, retrain_steps=300),
+        prune_stage("filter", rate=0.20, retrain_steps=300),
+        prune_stage("channel", rate=0.20, retrain_steps=200),
+        prune_stage("index", rate=0.15, retrain_steps=200,
+                    target_sparsity=0.90),
+        quantize_stage(8, retrain_steps=200),
+    )))
+
 for _fam in ("dense", "moe", "hybrid", "ssm", "vlm"):
     register_family(FamilySpec(
         family=_fam,
@@ -82,6 +136,7 @@ for _fam in ("dense", "moe", "hybrid", "ssm", "vlm"):
         prunable=family_prunable(_fam),
         granularities=(("expert", "filter", "channel", "index")
                        if _fam == "moe" else None),
+        recipe="moe-full" if _fam == "moe" else "dense-full",
         scale_tiny=_tiny_arch,
         smoke_kwargs=_LM_SMOKE,
         serves=True,
@@ -91,6 +146,7 @@ register_family(FamilySpec(
     family="audio",
     adapter_factory=EncDecAdapter,
     prunable=family_prunable("audio"),
+    recipe="dense-full",
     scale_tiny=_tiny_arch,
     smoke_kwargs=dict(steps=4, batch_size=2, seq_len=12, eval_batches=1),
     serves=False,
@@ -101,6 +157,7 @@ register_family(FamilySpec(
     adapter_factory=CNNAdapter,
     prunable=family_prunable("cnn"),
     conv_pred=cnn_conv_path,
+    recipe="cnn-full",
     scale_tiny=scaled_down_cnn,
     smoke_kwargs=dict(steps=6, batch_size=8, eval_batches=1,
                       eval_batch_size=16),
@@ -141,20 +198,27 @@ def make_adapter(arch, *, scale: str = "tiny",
 
     The family entry's prunability predicate, conv predicate, and
     granularity schedule are attached to the adapter as data;
-    ``PruningSession`` picks the granularities up automatically.
+    ``PruningSession`` picks the granularities up automatically.  At
+    ``scale="full"`` the family's tuned recipe rides along too
+    (``adapter.recipe``), so a full-scale session runs the tuned
+    staged program unless the caller overrides it.
     """
     cfg, spec = resolve_config(arch)
     is_instance = isinstance(arch, (ArchConfig, CNNConfig))
     kwargs = dict(adapter_kwargs)
+    full_scale = False
     if not is_instance:
         if scale not in SCALES:
             raise ValueError(f"unknown scale {scale!r}; known: {SCALES}")
         if scale == "tiny":
             cfg = spec.scale_tiny(cfg)
             kwargs = {**spec.smoke_kwargs, **kwargs}
+        else:
+            full_scale = True
     adapter = spec.adapter_factory(cfg, **kwargs)
     adapter.family = spec.family
     adapter.prunable_pred = spec.prunable
     adapter.conv_path_pred = spec.conv_pred
     adapter.granularities = spec.granularities
+    adapter.recipe = spec.recipe if full_scale else None
     return adapter

@@ -1,1 +1,3 @@
-from repro.checkpoint.manager import CheckpointManager, load_pytree, save_pytree  # noqa: F401
+from repro.checkpoint.manager import (  # noqa: F401
+    CheckpointManager, load_pytree, pack_json, save_pytree, unpack_json,
+)

@@ -36,6 +36,24 @@ import numpy as np
 from repro.core.masks import path_str
 
 
+def pack_json(obj) -> np.ndarray:
+    """JSON-serializable object → uint8 leaf for checkpoint pytrees.
+
+    Variable-length session state (event histories, resolved recipes)
+    rides through the array-only checkpoint format as UTF-8 bytes; the
+    restore template is any uint8 array (shape is taken from disk).
+    """
+    return np.frombuffer(json.dumps(obj).encode("utf-8"), np.uint8).copy()
+
+
+def unpack_json(arr, default=None):
+    """Inverse of ``pack_json``; ``default`` for empty/absent leaves."""
+    data = np.asarray(arr, np.uint8).tobytes()
+    if not data:
+        return default
+    return json.loads(data.decode("utf-8"))
+
+
 def _flatten_with_paths(tree):
     leaves = []
 

@@ -90,6 +90,9 @@ class PruneConfig:
     xbar_cols: int = 128
     accuracy_tolerance: float = 0.0    # allowed drop vs baseline ("no accuracy drop")
     granularities: Tuple[str, ...] = ("filter", "channel", "index")
+    # named repro.api.recipes recipe; overrides `granularities` when set
+    # (explicit session recipe/granularities args still win)
+    recipe: Optional[str] = None
 
 
 @dataclass(frozen=True)

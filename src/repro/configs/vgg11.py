@@ -3,7 +3,8 @@
 [arXiv:1409.1556 config A; verified] Conv widths 64-128-256x2-512x4,
 classifier 512->10 (CIFAR convention: single FC head, 2x2 maxpools).
 """
-from repro.configs.base import CNNConfig, ConvSpec, register
+from repro.configs.base import (CNNConfig, ConvSpec, register,
+                                scaled_down_cnn)
 
 CONFIG = register(CNNConfig(
     name="vgg11",
@@ -19,3 +20,8 @@ CONFIG = register(CNNConfig(
     num_classes=10,
     source="[arXiv:1409.1556; verified]",
 ))
+
+# the registry's reduced smoke CNN as a first-class arch: CI and the
+# recipe benchmarks address the tiny model by name instead of relying
+# on the --scale tiny reduction of a full config
+register(scaled_down_cnn(CONFIG, name="scaled_down_cnn"))

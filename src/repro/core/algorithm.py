@@ -48,6 +48,11 @@ class PruneEvent:
     sparsity_after: float
     accuracy: float
     accepted: bool
+    # recipe-interpreter provenance: which stage of the prune program
+    # produced this event ("" / 0 / "prune" for legacy flat schedules)
+    stage: str = ""
+    stage_idx: int = 0
+    kind: str = "prune"              # prune | quantize | ablate
 
 
 @dataclass
@@ -55,10 +60,20 @@ class PruneResult:
     masks: dict
     params: dict                     # rewound to w_init ⊙ mask
     history: List[PruneEvent] = field(default_factory=list)
+    # resolved recipe dict the session ran (embedded in exported tickets)
+    recipe: Optional[dict] = None
 
     @property
     def sparsity(self) -> float:
         return sparsity_fraction(self.masks)
+
+    def stage_events(self, stage_idx: int) -> List[PruneEvent]:
+        return [e for e in self.history if e.stage_idx == stage_idx]
+
+    @property
+    def ablation(self) -> List[PruneEvent]:
+        """The schedule-ablation table rows (events from ablate stages)."""
+        return [e for e in self.history if e.kind == "ablate"]
 
 
 def _leaf_items(params, masks, prunable_conv: Callable[[str], bool]):

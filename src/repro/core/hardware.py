@@ -31,11 +31,30 @@ class LayerHW:
     alive_outputs: int
     total_outputs: int
     activation_volume: float = 0.0   # elements per sample (for weighting)
+    # per-out-channel quantization scale entries of the RAW leaf
+    # (``core.quantize`` reduces over axis=-2, so a (kh,kw,cin,cout)
+    # conv carries kh*kw*cout scales, not the cout of its unrolled view)
+    scale_entries: int = 0
+
+
+_DTYPE_BYTES = {"bfloat16": 2, "float16": 2, "float32": 4, "float64": 8}
+
+
+def dtype_bytes(dtype: Optional[str]) -> int:
+    """Stored bytes per weight for a config ``dtype`` string (CNN
+    configs carry no dtype and store float32)."""
+    return _DTYPE_BYTES.get(dtype or "float32", 4)
 
 
 @dataclass
 class HWReport:
     layers: List[LayerHW] = field(default_factory=list)
+    # fixed-point width an accepted quantize stage retrained at (None →
+    # weights stored full precision); drives the byte accounting below
+    quant_bits: Optional[int] = None
+    # bytes per unquantized weight (2 for bfloat16 archs, 4 for the
+    # float32 CNNs) — pass the config's dtype to analyze_masks
+    dtype_bytes: int = 4
 
     # ---- weights ----
     @property
@@ -75,6 +94,40 @@ class HWReport:
     def xbar_savings(self) -> float:
         return 1.0 - self.xbars_needed / max(self.xbars_unpruned, 1)
 
+    # ---- storage bytes (compose with packing, no double-count) ----
+    def weight_bytes(self, bits: Optional[int] = None,
+                     dtype_bytes: Optional[int] = None) -> Dict[str, float]:
+        """Stored weight bytes: dense, pruned+packed, and (when a
+        quantize stage ran) quantized+packed.
+
+        Packing keeps only live cells, so pruned bytes count
+        ``nonzero_cells`` — the quantized figure applies ``bits`` to
+        those SAME live cells (plus one float32 scale per live
+        per-out-channel scale entry), so pruning and quantization
+        savings compose instead of double-counting.  ``bits`` defaults
+        to the report's ``quant_bits``; ``dtype_bytes`` to the report's
+        storage dtype (bfloat16 archs store 2 bytes per weight).
+        """
+        bits = self.quant_bits if bits is None else bits
+        db = self.dtype_bytes if dtype_bytes is None else dtype_bytes
+        out = {
+            "dense_bytes": float(self.total_cells * db),
+            "pruned_bytes": float(self.nonzero_cells * db),
+            "dtype_bytes": db,
+            "quant_bits": bits,
+            "quantized_bytes": None,
+        }
+        if bits is not None:
+            # scales for live output columns only (packing drops dead
+            # ones, and a dead conv channel drops all kh*kw of its
+            # scales with it); scales themselves are float32
+            alive_scales = sum(
+                l.scale_entries * l.alive_outputs / max(l.total_outputs, 1)
+                for l in self.layers)
+            out["quantized_bytes"] = float(
+                self.nonzero_cells * bits / 8 + alive_scales * 4)
+        return out
+
     # ---- activations ----
     @property
     def activation_savings(self) -> float:
@@ -112,21 +165,28 @@ class HWReport:
 def analyze_masks(masks, conv_pred: Callable[[str], bool],
                   activation_volumes: Optional[Dict[str, float]] = None,
                   xbar_rows: int = xb.XBAR_ROWS,
-                  xbar_cols: int = xb.XBAR_COLS) -> HWReport:
+                  xbar_cols: int = xb.XBAR_COLS,
+                  quant_bits: Optional[int] = None,
+                  dtype: Optional[str] = None) -> HWReport:
     """Crossbar accounting for every prunable leaf of a mask pytree.
 
     ``xbar_rows``/``xbar_cols`` set the crossbar geometry for the whole
     stats path (pass ``PruneConfig.xbar_rows/xbar_cols`` to match the
-    geometry the masks were pruned with).
+    geometry the masks were pruned with).  ``quant_bits`` records the
+    fixed-point width of an accepted quantize stage and ``dtype`` the
+    config's storage dtype, so ``HWReport.weight_bytes`` reports real
+    quantized vs stored bytes (a bfloat16 arch stores 2 bytes/weight).
     """
-    report = HWReport()
+    report = HWReport(quant_bits=quant_bits,
+                      dtype_bytes=dtype_bytes(dtype))
     vols = activation_volumes or {}
 
     def visit(path, leaf):
         if leaf is None:
             return leaf
         p = path_str(path)
-        mats, _ = xb.leaf_matrices(np.asarray(leaf), conv_pred(p))
+        raw = np.asarray(leaf)
+        mats, _ = xb.leaf_matrices(raw, conv_pred(p))
         agg = xb.XbarStats(xbar_rows=xbar_rows, xbar_cols=xbar_cols)
         alive_out = total_out = 0
         for b in range(mats.shape[0]):
@@ -134,8 +194,10 @@ def analyze_masks(masks, conv_pred: Callable[[str], bool],
             agg.merge(st)
             alive_out += int(xb.alive_columns(mats[b] != 0).sum())
             total_out += mats[b].shape[1]
+        scales = raw.size // raw.shape[-2] if raw.ndim >= 2 else 0
         report.layers.append(LayerHW(p, agg, alive_out, total_out,
-                                     vols.get(p, 0.0)))
+                                     vols.get(p, 0.0),
+                                     scale_entries=scales))
         return leaf
 
     jax.tree_util.tree_map_with_path(visit, masks,

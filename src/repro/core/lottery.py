@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import json
 import os
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -28,7 +28,13 @@ def rewind(w_init, masks):
     return apply_masks(jax.tree.map(jnp.asarray, w_init), masks)
 
 
-def export_ticket(path: str, w_init, masks):
+def export_ticket(path: str, w_init, masks, meta: Optional[dict] = None):
+    """Serialise (w_init, masks) plus optional JSON metadata.
+
+    ``meta`` (e.g. the resolved prune recipe, quantization bits) is
+    embedded in ``ticket.json`` so a ticket is reproducible from its
+    checkpoint alone — ``ticket_meta`` reads it back.
+    """
     os.makedirs(path, exist_ok=True)
     flat = {}
 
@@ -46,7 +52,16 @@ def export_ticket(path: str, w_init, masks):
     treedef = jax.tree_util.tree_structure(
         masks, is_leaf=lambda x: x is None)
     with open(os.path.join(path, "ticket.json"), "w") as f:
-        json.dump({"treedef": str(treedef)}, f)
+        json.dump({"treedef": str(treedef), "meta": meta or {}}, f)
+
+
+def ticket_meta(path: str) -> dict:
+    """Metadata embedded at export time ({} for pre-metadata tickets)."""
+    fname = os.path.join(path, "ticket.json")
+    if not os.path.exists(fname):
+        return {}
+    with open(fname) as f:
+        return json.load(f).get("meta", {}) or {}
 
 
 def import_ticket(path: str, params_template, masks_template):

@@ -26,7 +26,10 @@ class QTensor(NamedTuple):
 
     @property
     def nbytes(self) -> int:
-        return self.q.size * self.q.dtype.itemsize + 4 * self.scale.size
+        # scale bytes follow the stored scale dtype (a bf16-scale QTensor
+        # used to be over-counted at a hardcoded 4 bytes per entry)
+        return (self.q.size * self.q.dtype.itemsize
+                + self.scale.size * self.scale.dtype.itemsize)
 
 
 _QMAX = {jnp.int8: 127.0, jnp.int16: 32767.0}
@@ -51,6 +54,33 @@ def qmatmul(x, qt: QTensor):
     """x @ dequant(qt) — the convert fuses into the dot on TPU."""
     w = qt.q.astype(x.dtype)
     return (x @ w) * qt.scale[..., 0, :].astype(x.dtype)
+
+
+def fake_quantize(w, bits: int = 8):
+    """Straight-through fake quantization: forward sees the fixed-point
+    value, backward sees identity — the QAT step of a ``quantize``
+    recipe stage, so tickets retrain against the ReRAM-native
+    representation while gradients stay full-precision.  Masked (pruned)
+    weights round-trip to exact 0, so masks survive the fake pass."""
+    wq = dequantize(quantize(w, bits), jnp.float32).astype(w.dtype)
+    return w + jax.lax.stop_gradient(wq - w)
+
+
+def fake_quantize_tree(params, predicate, bits: int = 8):
+    """STE fake-quantize every leaf where predicate(path, leaf) — jit-safe
+    (wraps a training loss: ``loss(fake_quantize_tree(p, pred), batch)``)."""
+    from repro.core.masks import path_str
+
+    def f(path, leaf):
+        # per-out-channel scales need an (in, out) trailing pair; 1-D
+        # leaves (norm gains, biases) stay full precision
+        if (leaf is not None and getattr(leaf, "ndim", 0) >= 2
+                and predicate(path_str(path), leaf)):
+            return fake_quantize(leaf, bits)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(
+        f, params, is_leaf=lambda x: x is None)
 
 
 def quantize_tree(params, predicate, bits: int = 8):

@@ -149,6 +149,22 @@ def available_strategies() -> Tuple[str, ...]:
     return tuple(sorted(_REGISTRY))
 
 
+# The paper's coarse→fine schedule (Algorithm 1 walks these in order);
+# recipes and the legacy ``granularities=`` shims both start from it.
+PAPER_SCHEDULE: Tuple[str, ...] = ("filter", "channel", "index")
+
+
+def require_strategies(names) -> Tuple[str, ...]:
+    """Validate a granularity schedule eagerly (recipe parse time), so a
+    typo fails before any training instead of rounds in."""
+    names = tuple(names)
+    unknown = [n for n in names if n not in _REGISTRY]
+    if unknown:
+        raise KeyError(f"unknown granularities {unknown!r}; "
+                       f"registered: {available_strategies()}")
+    return names
+
+
 # ---------------------------------------------------------------------------
 # The paper's granularities
 # ---------------------------------------------------------------------------

@@ -233,7 +233,7 @@ def gqa_forward(params, x, *, n_heads, n_kv_heads, head_dim, rope_theta,
 
 def gqa_make_cache(params, x, *, n_heads, n_kv_heads, head_dim, rope_theta,
                    capacity: int, window: Optional[int] = None,
-                   block_q: int = 512, valid_len=None):
+                   block_q: int = 512, valid_len=None, plan=None):
     """Prefill: returns (attn_out_projected, KVCache).
 
     ``valid_len`` (B,) marks right-padded batches: tokens at positions
@@ -242,12 +242,16 @@ def gqa_make_cache(params, x, *, n_heads, n_kv_heads, head_dim, rope_theta,
     the per-row index starts at ``valid_len`` instead of S, and decode
     masks (then overwrites) the pad keys above it.  Requires S ≤
     capacity and full (non-windowed) attention.
+
+    ``plan`` routes the q/k/v/o projections through the block-sparse
+    kernel (keys "wq"/"wk"/"wv"/"wo" → ``TilePlan``) — the same plan
+    decode uses, so pruned tickets skip dead tiles in prefill too.
     """
     B, S, _ = x.shape
     positions = jnp.broadcast_to(jnp.arange(S), (B, S))
     q, k, v = gqa_qkv(params, x, n_heads=n_heads, n_kv_heads=n_kv_heads,
                       head_dim=head_dim, positions=positions,
-                      rope_theta=rope_theta)
+                      rope_theta=rope_theta, plan=plan)
     if valid_len is not None and (window is not None or S > capacity):
         raise ValueError("valid_len prefill needs full attention with "
                          f"S <= capacity, got S={S}, capacity={capacity}, "
@@ -267,7 +271,8 @@ def gqa_make_cache(params, x, *, n_heads, n_kv_heads, head_dim, rope_theta,
     else:
         index = jnp.asarray(valid_len, jnp.int32).reshape(B)
     cache = KVCache(kc, vc, index)
-    proj = out.reshape(B, S, n_heads * head_dim) @ params["wo"]
+    proj = bsmm.plan_matmul(out.reshape(B, S, n_heads * head_dim),
+                            params["wo"], (plan or {}).get("wo"))
     return proj, cache
 
 

@@ -6,9 +6,9 @@ every dense projection a transformer step executes, the static 128×128
 tile bitmap — the TPU analogue of the paper's power-gated crossbar map
 (Fig. 2).  The resulting plan mirrors ``params["segments"]`` so
 ``models.transformer`` can thread it layer-by-layer; the SAME structure
-drives both the serving decode step and the training forward (the
-retrain loop), which is why this lives next to the models rather than
-in ``serve`` or ``train``.
+drives the serving decode step, the serving prefill, and the training
+forward (the retrain loop), which is why this lives next to the models
+rather than in ``serve`` or ``train``.
 
 Scanned segments share one traced block body, so per-repeat bitmaps are
 **unioned over the scan axis**: a tile is skipped only when it is dead

@@ -203,10 +203,9 @@ def _apply_block(cfg: ArchConfig, sig, p, x, mode: str, cache,
     aux = jnp.zeros((), jnp.float32)
     h = apply_norm(cfg.norm, p["norm1"], x)
     new_cache = cache
+    # plans apply on every mode — training forward, prefill, decode —
+    # so each projection a pruned ticket executes can skip dead tiles
     plan = plan or {}
-    # plans apply on the training forward AND decode paths; prefill is a
-    # one-shot cost per request and stays dense
-    planned = mode in ("forward", "decode")
     if valid_len is not None and (kind not in (ATTN,) or mode != "prefill"):
         raise ValueError(
             f"valid_len is only supported for full-attention prefill, "
@@ -233,7 +232,7 @@ def _apply_block(cfg: ArchConfig, sig, p, x, mode: str, cache,
             elif mode == "prefill":
                 out, new_cache = attn_lib.gqa_make_cache(
                     p["attn"], h, capacity=capacity, window=window,
-                    valid_len=valid_len, **kw)
+                    valid_len=valid_len, plan=plan.get("attn"), **kw)
             else:
                 out, new_cache = attn_lib.gqa_decode(
                     p["attn"], cache, h, window=window,
@@ -275,14 +274,11 @@ def _apply_block(cfg: ArchConfig, sig, p, x, mode: str, cache,
         h2 = apply_norm(cfg.norm, p["norm2"], x)
         if is_moe:
             mo = moe_lib.moe_forward(p["moe"], h2, cfg.moe, cfg.act,
-                                     cfg.gated_mlp,
-                                     plan=plan.get("moe") if planned
-                                     else None)
+                                     cfg.gated_mlp, plan=plan.get("moe"))
             x = x + mo.y
             aux = mo.aux_loss
         else:
-            x = x + mlp(p["mlp"], h2, cfg.act,
-                        plan=plan.get("mlp") if planned else None)
+            x = x + mlp(p["mlp"], h2, cfg.act, plan=plan.get("mlp"))
         x = constrain(x, ("dp", None, None))
     return x, new_cache, aux
 
@@ -462,19 +458,25 @@ def cache_batch_axes(cfg: ArchConfig, caches):
     return out
 
 
-def prefill(params, cfg: ArchConfig, batch, capacity: int, valid_len=None):
+def prefill(params, cfg: ArchConfig, batch, capacity: int, valid_len=None,
+            plan=None):
     """Full-sequence prefill → (last-position logits, caches).
 
     With ``valid_len`` (B,), batch['tokens'] is right-padded and the
     logits are taken at each row's last *valid* position; cache indices
     start at ``valid_len`` so per-request decode is batch-invariant
     (no request ever attends to a batch-mate's padding).
+
+    ``plan`` (from ``repro.models.plans.build_decode_plan`` — the same
+    structure decode uses) routes the attention/MLP projections through
+    the block-sparse Pallas kernel, so a pruned ticket's prefill cost
+    scales with its live tiles exactly like its decode cost.
     """
     x = _embed_inputs(cfg, params, batch)
     x = constrain(x, ("dp", None, None))
     x, caches, _ = _run_segments(cfg, params, x, "prefill",
                                  _none_caches(cfg), capacity,
-                                 valid_len=valid_len)
+                                 valid_len=valid_len, plan=plan)
     if valid_len is None:
         x_last = x[:, -1:]
     else:

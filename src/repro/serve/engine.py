@@ -125,19 +125,22 @@ class ServeEngine:
         self._buckets = sorted(prefill_buckets) if prefill_buckets \
             else _default_buckets(capacity)
 
+        # the ticket's TilePlans drive BOTH serving paths: prefill
+        # projections skip the same dead tiles decode skips.  The
+        # plan= kwarg is passed only when a plan exists, so unpruned
+        # engines keep working with prefill/decode fns that never
+        # learned to accept it (``models.transformer``'s do).
+        plankw = {} if self._plan is None else {"plan": self._plan}
         self._prefill_exact = jax.jit(
-            lambda p, toks: prefill_fn(p, cfg, {"tokens": toks}, capacity))
+            lambda p, toks: prefill_fn(p, cfg, {"tokens": toks},
+                                       capacity, **plankw))
         self._prefill_masked = jax.jit(
             lambda p, toks, vl: prefill_fn(p, cfg, {"tokens": toks},
-                                           capacity, valid_len=vl))
-        if self._plan is not None:
-            plan = self._plan
-            self._decode = jax.jit(
-                lambda p, caches, tok: decode_fn(p, cfg, caches, tok,
-                                                 plan=plan))
-        else:
-            self._decode = jax.jit(
-                lambda p, caches, tok: decode_fn(p, cfg, caches, tok))
+                                           capacity, valid_len=vl,
+                                           **plankw))
+        self._decode = jax.jit(
+            lambda p, caches, tok: decode_fn(p, cfg, caches, tok,
+                                             **plankw))
         self._axes = None
         self._splice = None              # built lazily from the first prefill
 

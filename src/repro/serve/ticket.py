@@ -1,9 +1,10 @@
-"""Pruned-ticket → decode-kernel handoff (re-export shim).
+"""Pruned-ticket → serving-kernel handoff (re-export shim).
 
 The mask→``TilePlan`` walker lives in ``repro.models.plans``: it
 describes the *model's* parameter structure (segments → positions →
-attn/mlp projections) and is shared by the serving decode path (here)
-and the training retrain path (``repro.train.plans``), so neither layer
-has to import the other.
+attn/mlp projections) and is shared by the serving paths (here — ONE
+plan drives both prefill and decode in ``ServeEngine``) and the
+training retrain path (``repro.train.plans``), so neither layer has to
+import the other.
 """
 from repro.models.plans import PlanStats, build_decode_plan  # noqa: F401

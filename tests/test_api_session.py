@@ -98,13 +98,14 @@ def test_resume_preserves_float64_baseline(tmp_path):
                           PruneConfig(max_iters=1),
                           baseline_accuracy=base, ckpt_dir=str(tmp_path))
     masks = make_masks(params, sess.adapter.prunable)
-    sess._save(1, 0, masks, base, [])
+    sess._save({"stage_idx": 0, "step": 0, "itr": 1, "prune_rounds": 1},
+               masks, base, [])
 
     resumed = PruningSession(_scripted_adapter(params),
                              PruneConfig(max_iters=1),
                              ckpt_dir=str(tmp_path))
-    step, g_idx, _, baseline, hist = resumed._restore(masks)
-    assert step == 1 and g_idx == 0 and hist == []
+    state, _, baseline, hist = resumed._restore(masks)
+    assert state["itr"] == 1 and state["stage_idx"] == 0 and hist == []
     assert baseline == base             # bit-exact float64 round-trip
 
 

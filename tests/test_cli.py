@@ -131,3 +131,69 @@ def test_prune_granularity_override(capsys):
     assert code == 0
     rounds = [e for e in _json_lines(out) if e["event"] == "round"]
     assert rounds[0]["granularity"] == "index"
+
+
+def test_recipes_subcommand_lists_builtins_and_tuned(capsys):
+    code, out = _run(capsys, ["recipes", "--json"])
+    assert code == 0
+    rows = {r["recipe"]: r for r in _json_lines(out)}
+    assert {"paper", "paper-quant", "paper-xbar", "ablation",
+            "cnn-full", "dense-full", "moe-full"} <= set(rows)
+    assert rows["paper"]["stages"] == ["prune:filter", "prune:channel",
+                                       "prune:index"]
+    assert rows["cnn-full"]["families"] == ["cnn"]
+    assert "quantize:int8" in rows["moe-full"]["stages"]
+
+
+def test_prune_with_recipe_streams_stage_events(tmp_path, capsys):
+    """`prune --recipe` runs a multi-stage program (incl. a quantize
+    stage); every --json event carries stage name/index, the ticket
+    embeds the recipe, and report/finetune pick the metadata up."""
+    ticket = str(tmp_path / "rt")
+    code, out = _run(capsys, [
+        "prune", "--arch", "scaled_down_cnn", "--recipe", "paper-quant",
+        "--rounds", "1", "--tolerance", "1e9", "--steps", "2",
+        "--ticket", ticket, "--json"])
+    assert code == 0
+    events = _json_lines(out)
+    rounds = [e for e in events if e["event"] == "round"]
+    assert all("stage" in e and "stage_idx" in e and "kind" in e
+               for e in rounds)
+    assert rounds[0]["stage"] == "prune:filter"
+    assert rounds[-1]["kind"] == "quantize"
+    result = events[-1]
+    assert result["recipe"] == "paper-quant"
+    assert result["quantize_bits"] == 8
+    assert result["weight_bytes"]["quantized_bytes"] is not None
+    assert (result["weight_bytes"]["quantized_bytes"]
+            < result["weight_bytes"]["pruned_bytes"])
+
+    code, out = _run(capsys, ["report", "--arch", "scaled_down_cnn",
+                              "--ticket", ticket, "--json"])
+    assert code == 0
+    rep = _json_lines(out)[0]
+    assert rep["recipe"] == "paper-quant"
+    assert rep["quantize_bits"] == 8
+    assert rep["weight_bytes"]["quantized_bytes"] is not None
+
+    code, out = _run(capsys, ["finetune", "--arch", "scaled_down_cnn",
+                              "--ticket", ticket, "--steps", "2",
+                              "--json"])
+    assert code == 0
+    ft = _json_lines(out)[0]
+    assert ft["quantize_bits"] == 8          # QAT fine-tune
+
+
+def test_prune_with_recipe_file(tmp_path, capsys):
+    from repro.api.recipes import Recipe, prune_stage
+
+    path = str(tmp_path / "custom.json")
+    Recipe(name="custom", stages=(prune_stage("xbar", rate=0.3),)
+           ).save(path)
+    code, out = _run(capsys, [
+        "prune", "--arch", "scaled_down_cnn", "--recipe", path,
+        "--rounds", "1", "--tolerance", "1e9", "--steps", "2", "--json"])
+    assert code == 0
+    events = _json_lines(out)
+    assert events[0]["granularity"] == "xbar"
+    assert events[-1]["recipe"] == "custom"

@@ -66,7 +66,10 @@ def test_moe_active_params():
 
 
 def test_cnn_configs():
-    assert set(list_cnns()) == {"vgg11", "vgg16", "vgg19", "resnet18"}
+    # scaled_down_cnn: the registered tiny smoke CNN (vgg11 structure,
+    # capped channels) CI addresses by name
+    assert set(list_cnns()) == {"vgg11", "vgg16", "vgg19", "resnet18",
+                                "scaled_down_cnn"}
     r18 = get_cnn("resnet18")
     assert len(r18.convs) == 17                          # C1-C17 (Fig. 8)
     n = r18.param_count()

@@ -1,0 +1,386 @@
+"""Declarative PruneRecipe API: serialization round-trips, the session
+recipe interpreter (mid-stage resume, stage budgets, quantize/ablate
+stages), legacy ``granularities=`` shim equivalence, and ticket
+metadata embedding."""
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (FunctionAdapter, PruningSession, Recipe, Stage,
+                       ablate_stage, available_recipes, from_granularities,
+                       get_recipe, prune_stage, quantize_stage,
+                       resolve_recipe)
+from repro.configs import PruneConfig
+from repro.core import lottery
+from repro.core.masks import sparsity_fraction
+from repro.core.quantize import fake_quantize, fake_quantize_tree
+
+
+def _params(seed=0):
+    r = np.random.RandomState(seed)
+    return {"a": jnp.asarray(r.randn(3, 3, 4, 8), jnp.float32),
+            "b": jnp.asarray(r.randn(256, 128), jnp.float32)}
+
+
+def _scripted_adapter(params, cliff=0.45):
+    """Deterministic adapter: accuracy collapses past ``cliff`` sparsity."""
+    return FunctionAdapter(
+        params=params,
+        train_fn=lambda p, m: p,
+        eval_fn=lambda p, m: 1.0 if sparsity_fraction(m) < cliff else 0.5,
+        prunable=lambda p, l: l.ndim >= 2,
+        conv_pred=lambda p: p == "a")
+
+
+def _hist_tuple(history):
+    return [(e.iteration, e.stage_idx, e.stage, e.kind, e.granularity,
+             e.accepted, round(e.sparsity_after, 9)) for e in history]
+
+
+# ---------------------------------------------------------------------------
+# Stage / Recipe construction + serialization
+# ---------------------------------------------------------------------------
+def test_stage_validation():
+    with pytest.raises(ValueError):
+        Stage(kind="nope")
+    with pytest.raises(ValueError):
+        prune_stage(None)                      # granularity required
+    with pytest.raises(KeyError):
+        prune_stage("not-a-granularity")
+    with pytest.raises(ValueError):
+        prune_stage("filter", rate=1.5)
+    with pytest.raises(ValueError):
+        quantize_stage(7)                      # only 8/16 fixed point
+    with pytest.raises(KeyError):
+        ablate_stage(["filter", "bogus"])
+    with pytest.raises(ValueError):
+        Recipe(name="empty", stages=())
+
+
+def test_stage_default_names_and_ablate_default_sweep():
+    assert prune_stage("filter").name == "prune:filter"
+    assert quantize_stage(16).name == "quantize:int16"
+    ab = ablate_stage()
+    assert ab.granularities[0] == "xbar"       # coarsest first
+    assert set(("filter", "channel", "index")) <= set(ab.granularities)
+
+
+def test_recipe_dict_json_roundtrip(tmp_path):
+    for name in available_recipes():
+        r = get_recipe(name)
+        assert Recipe.from_dict(r.to_dict()) == r
+        assert Recipe.from_json(r.to_json()) == r
+    r = get_recipe("paper-quant")
+    path = str(tmp_path / "r.json")
+    r.save(path)
+    assert Recipe.load(path) == r
+    assert resolve_recipe(path) == r
+    assert resolve_recipe(r.to_dict()) == r
+    assert resolve_recipe("paper-quant") is r
+
+
+def test_resolve_recipe_errors(tmp_path):
+    with pytest.raises(KeyError):
+        resolve_recipe("never-registered")
+    with pytest.raises(FileNotFoundError):
+        resolve_recipe(str(tmp_path / "missing.json"))
+    with pytest.raises(TypeError):
+        resolve_recipe(42)
+
+
+def test_loaded_recipe_runs_identically(tmp_path):
+    """Serialize → load → the loaded recipe reproduces the original
+    run history exactly."""
+    params = _params()
+    rec = Recipe(name="rt", stages=(
+        prune_stage("filter", rate=0.25),
+        prune_stage("index", rate=0.2, max_rounds=2)))
+    path = str(tmp_path / "rt.json")
+    rec.save(path)
+    cfg = PruneConfig(max_iters=10)
+    h1 = PruningSession(_scripted_adapter(params), cfg, recipe=rec,
+                        baseline_accuracy=1.0).run().history
+    h2 = PruningSession(_scripted_adapter(params), cfg, recipe=path,
+                        baseline_accuracy=1.0).run().history
+    assert _hist_tuple(h1) == _hist_tuple(h2)
+
+
+# ---------------------------------------------------------------------------
+# Legacy shim equivalence
+# ---------------------------------------------------------------------------
+def test_granularities_shim_compiles_to_equivalent_recipe():
+    """``granularities=`` and the compiled single-stage-per-granularity
+    recipe run the exact same program (and inherit
+    ``cfg.prune_fraction`` as the stage rate)."""
+    params = _params()
+    cfg = PruneConfig(prune_fraction=0.2, max_iters=20)
+    legacy = PruningSession(_scripted_adapter(params), cfg,
+                            granularities=["filter", "channel", "index"],
+                            baseline_accuracy=1.0)
+    assert [s.rate for s in legacy.recipe.stages] == [0.2] * 3
+    h1 = legacy.run().history
+    h2 = PruningSession(
+        _scripted_adapter(params), cfg,
+        recipe=from_granularities(["filter", "channel", "index"],
+                                  rate=0.2),
+        baseline_accuracy=1.0).run().history
+    assert _hist_tuple(h1) == _hist_tuple(h2)
+
+
+def test_config_recipe_field_resolves():
+    params = _params()
+    sess = PruningSession(_scripted_adapter(params),
+                          PruneConfig(max_iters=2, recipe="paper-xbar"),
+                          baseline_accuracy=1.0)
+    assert sess.recipe.name == "paper-xbar"
+    # explicit granularities still win over cfg.recipe
+    sess2 = PruningSession(_scripted_adapter(params),
+                           PruneConfig(max_iters=2, recipe="paper-xbar"),
+                           granularities=["index"],
+                           baseline_accuracy=1.0)
+    assert sess2.recipe.prune_granularities == ("index",)
+    # cfg.recipe (caller intent) outranks the family registry's
+    # schedule data on the adapter
+    adapter = _scripted_adapter(params)
+    adapter.granularities = ("expert", "filter")     # registry default
+    sess3 = PruningSession(adapter,
+                           PruneConfig(max_iters=2, recipe="paper-quant"),
+                           baseline_accuracy=1.0)
+    assert sess3.recipe.name == "paper-quant"
+
+
+# ---------------------------------------------------------------------------
+# Interpreter semantics: budgets, quantize, ablate
+# ---------------------------------------------------------------------------
+def test_stage_max_rounds_and_target_sparsity():
+    params = _params()
+    res = PruningSession(
+        _scripted_adapter(params, cliff=2.0),         # accept everything
+        PruneConfig(max_iters=20),
+        recipe=Recipe(name="b", stages=(
+            prune_stage("filter", rate=0.25, max_rounds=2),
+            prune_stage("index", rate=0.25, target_sparsity=0.5))),
+        baseline_accuracy=1.0).run()
+    by_stage = {}
+    for e in res.history:
+        by_stage.setdefault(e.stage_idx, []).append(e)
+    assert len(by_stage[0]) == 2                      # max_rounds honoured
+    assert by_stage[1][-1].sparsity_after >= 0.5      # target reached
+    assert res.history[-1].sparsity_after == pytest.approx(res.sparsity)
+
+
+def test_global_prune_budget_skips_prune_not_quantize():
+    """cfg.max_iters caps prune rounds; a trailing quantize stage still
+    runs after the budget is spent."""
+    params = _params()
+    res = PruningSession(
+        _scripted_adapter(params, cliff=2.0),
+        PruneConfig(max_iters=2),
+        recipe=Recipe(name="q", stages=(
+            prune_stage("filter"), prune_stage("index"),
+            quantize_stage(8))),
+        baseline_accuracy=1.0).run()
+    kinds = [e.kind for e in res.history]
+    assert kinds.count("prune") == 2
+    assert kinds[-1] == "quantize"
+
+
+def test_quantize_stage_gates_and_records_bits():
+    params = _params()
+    sess = PruningSession(
+        _scripted_adapter(params, cliff=2.0),
+        PruneConfig(max_iters=1),
+        recipe=Recipe(name="q8", stages=(prune_stage("filter"),
+                                         quantize_stage(8))),
+        baseline_accuracy=1.0)
+    res = sess.run()
+    q = [e for e in res.history if e.kind == "quantize"]
+    assert len(q) == 1 and q[0].accepted and q[0].granularity == "int8"
+    assert sess.quantize_bits == 8
+    # a rejected quantize stage records nothing
+    sess2 = PruningSession(
+        FunctionAdapter(params=params, train_fn=lambda p, m: p,
+                        eval_fn=lambda p, m: 0.0,   # always fails the gate
+                        prunable=lambda p, l: True,
+                        conv_pred=lambda p: False),
+        PruneConfig(max_iters=0),
+        recipe=Recipe(name="q", stages=(quantize_stage(8),)),
+        baseline_accuracy=1.0)
+    sess2.run()
+    assert sess2.quantize_bits is None
+
+
+def test_ablate_stage_commits_nothing_and_reports_table():
+    params = _params()
+    res = PruningSession(_scripted_adapter(params),
+                         PruneConfig(max_iters=20), recipe="ablation",
+                         baseline_accuracy=1.0).run()
+    assert res.sparsity == 0.0                        # nothing committed
+    rows = res.ablation
+    assert [e.granularity for e in rows] == \
+        ["xbar", "filter", "channel", "index"]
+    assert all(e.kind == "ablate" and not e.accepted for e in rows)
+    assert all(e.sparsity_after > 0 for e in rows)    # each was scored
+
+
+# ---------------------------------------------------------------------------
+# Mid-stage resume
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("preempt_at", [2, 4])
+def test_resume_mid_stage_equals_uninterrupted(tmp_path, preempt_at):
+    params = _params()
+    cfg = PruneConfig(max_iters=20)
+    rec = Recipe(name="multi", stages=(
+        prune_stage("filter", rate=0.25),
+        prune_stage("index", rate=0.25, max_rounds=2),
+        quantize_stage(8),
+        ablate_stage(["xbar", "filter"])))
+    full = PruningSession(_scripted_adapter(params), cfg, recipe=rec,
+                          baseline_accuracy=1.0).run()
+
+    class Preempted(Exception):
+        pass
+
+    def preempt(event):
+        if event.iteration == preempt_at:
+            raise Preempted()
+
+    ckpt = str(tmp_path / f"ck{preempt_at}")
+    with pytest.raises(Preempted):
+        PruningSession(_scripted_adapter(params), cfg, recipe=rec,
+                       baseline_accuracy=1.0, ckpt_dir=ckpt,
+                       callbacks=[preempt]).run()
+    resumed_sess = PruningSession(_scripted_adapter(params), cfg,
+                                  recipe=rec, baseline_accuracy=1.0,
+                                  ckpt_dir=ckpt)
+    resumed = resumed_sess.run()
+    assert _hist_tuple(resumed.history) == _hist_tuple(full.history)
+    for x, y in zip(jax.tree.leaves(full.masks),
+                    jax.tree.leaves(resumed.masks)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    assert resumed_sess.quantize_bits == 8            # re-derived
+    assert resumed.recipe == rec.to_dict()
+
+
+def test_resume_refuses_pre_recipe_checkpoint_layout(tmp_path):
+    """A checkpoint from the pre-recipe session (no fmt marker) must be
+    refused loudly — missing template keys restore as zeros, so without
+    the marker the session would silently re-prune pruned masks."""
+    from repro.checkpoint import CheckpointManager
+    from repro.core.masks import make_masks
+
+    params = _params()
+    adapter = _scripted_adapter(params)
+    masks = make_masks(params, adapter.prunable)
+    # old layout: masks/g_idx/baseline/hist, no fmt/state/recipe
+    CheckpointManager(str(tmp_path), async_save=False).save(3, {
+        "masks": masks,
+        "g_idx": np.asarray(1, np.int32),
+        "baseline": np.asarray(0.9, np.float64),
+        "hist": np.zeros((2, 6), np.float64)}, blocking=True)
+    sess = PruningSession(adapter, PruneConfig(max_iters=2),
+                          baseline_accuracy=1.0, ckpt_dir=str(tmp_path))
+    with pytest.raises(ValueError, match="older"):
+        sess.run()
+
+
+def test_resume_under_different_recipe_refuses(tmp_path):
+    params = _params()
+    cfg = PruneConfig(max_iters=20)
+
+    class Preempted(Exception):
+        pass
+
+    def preempt(event):
+        raise Preempted()
+
+    with pytest.raises(Preempted):
+        PruningSession(_scripted_adapter(params), cfg, recipe="paper",
+                       baseline_accuracy=1.0, ckpt_dir=str(tmp_path),
+                       callbacks=[preempt]).run()
+    with pytest.raises(ValueError, match="different program"):
+        PruningSession(_scripted_adapter(params), cfg,
+                       recipe="paper-xbar", baseline_accuracy=1.0,
+                       ckpt_dir=str(tmp_path)).run()
+
+
+# ---------------------------------------------------------------------------
+# QAT machinery + ticket embedding
+# ---------------------------------------------------------------------------
+def test_fake_quantize_straight_through_gradient():
+    w = jnp.asarray(np.random.RandomState(0).randn(16, 8), jnp.float32)
+    g = jax.grad(lambda x: jnp.sum(fake_quantize(x, 8) ** 2))(w)
+    # STE: d/dw sum(q(w)^2) == 2*q(w) with identity pass-through
+    np.testing.assert_allclose(np.asarray(g),
+                               2 * np.asarray(fake_quantize(w, 8)),
+                               rtol=1e-6)
+    # masked zeros survive the fake pass exactly
+    wm = w.at[:, 0].set(0.0)
+    assert (np.asarray(fake_quantize(wm, 8))[:, 0] == 0).all()
+
+
+def test_fake_quantize_tree_skips_1d_leaves():
+    tree = {"w": jnp.ones((8, 4)), "gain": jnp.ones((4,))}
+    out = fake_quantize_tree(tree, lambda p, l: True, 8)
+    np.testing.assert_array_equal(np.asarray(out["gain"]), np.ones((4,)))
+    assert out["w"].shape == (8, 4)
+
+
+def test_ticket_embeds_recipe_and_roundtrips(tmp_path):
+    params = _params()
+    rec = Recipe(name="emb", stages=(prune_stage("filter"),
+                                     quantize_stage(8)))
+    sess = PruningSession(_scripted_adapter(params, cliff=2.0),
+                          PruneConfig(max_iters=1), recipe=rec,
+                          baseline_accuracy=1.0)
+    res = sess.run()
+    tdir = str(tmp_path / "ticket")
+    sess.export_ticket(tdir)
+    meta = lottery.ticket_meta(tdir)
+    assert meta["quantize_bits"] == 8
+    assert meta["sparsity"] == pytest.approx(res.sparsity)
+    # the embedded recipe reconstructs the exact program
+    assert Recipe.from_dict(meta["recipe"]) == rec
+    # ...and the ticket payload still round-trips
+    w, m = lottery.import_ticket(tdir, params, res.masks)
+    for a, b in zip(jax.tree.leaves(m), jax.tree.leaves(res.masks)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_pre_metadata_tickets_read_as_empty_meta(tmp_path):
+    lottery.export_ticket(str(tmp_path), _params(),
+                          {"b": jnp.ones((256, 128))})
+    # overwrite ticket.json with the old (meta-less) layout
+    with open(str(tmp_path / "ticket.json"), "w") as f:
+        json.dump({"treedef": "x"}, f)
+    assert lottery.ticket_meta(str(tmp_path)) == {}
+
+
+def test_hwreport_weight_bytes_compose():
+    from repro.core.hardware import analyze_masks
+
+    masks = {"b": jnp.asarray(
+        (np.random.RandomState(0).rand(256, 128) > 0.5), jnp.float32)}
+    rep = analyze_masks(masks, lambda p: False, quant_bits=8)
+    b = rep.weight_bytes()
+    live = int(np.asarray(masks["b"]).sum())
+    assert b["dense_bytes"] == 256 * 128 * 4
+    assert b["pruned_bytes"] == live * 4
+    # int8 applies to the SAME live cells (plus per-live-column scales):
+    # pruning and quantization compose instead of double-counting
+    assert b["quantized_bytes"] < b["pruned_bytes"]
+    assert b["quantized_bytes"] >= live  # at least 1 byte per live cell
+    assert rep.weight_bytes(bits=None) is not None
+
+
+def test_events_serialize_losslessly():
+    """PruneEvent → dict → PruneEvent (the checkpoint history codec)."""
+    from repro.core.algorithm import PruneEvent
+
+    e = PruneEvent(3, "filter", 0.1, 0.2, 0.9, True,
+                   stage="prune:filter", stage_idx=1, kind="prune")
+    assert PruneEvent(**dataclasses.asdict(e)) == e

@@ -91,3 +91,48 @@ def test_eos_stops_generation(engine):
     req = [r for r in done if r.uid == 7][0]
     assert req.tokens[0] == eos
     assert len(req.tokens) <= 2
+
+
+def test_prefill_plan_matches_dense_prefill():
+    """A pruned ticket's TilePlans now route prefill projections too:
+    block-sparse prefill must be EXACT vs dense prefill on masked
+    params (pruned weights are exact zeros, so skipping dead tiles
+    changes nothing)."""
+    from repro.api import structured_prune
+    from repro.core.masks import apply_masks, lm_prunable
+    from repro.models.plans import build_decode_plan
+
+    cfg = scaled_down(get_arch("llama3.2-3b"), dtype="float32")
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    masks = structured_prune(params, [("xbar", 0.4), ("filter", 0.2)],
+                             prunable=lm_prunable)
+    masked = apply_masks(params, masks)
+    plan, stats = build_decode_plan(masks, interpret=True)
+    assert plan is not None and stats.routed > 0
+    batch = {"tokens": jnp.asarray(
+        np.arange(1, 13, dtype=np.int32)[None])}
+    dense_logits, dense_caches = tfm.prefill(masked, cfg, batch,
+                                             capacity=32)
+    bs_logits, bs_caches = tfm.prefill(masked, cfg, batch, capacity=32,
+                                       plan=plan)
+    np.testing.assert_allclose(np.asarray(bs_logits),
+                               np.asarray(dense_logits),
+                               rtol=1e-5, atol=1e-5)
+    for a, b in zip(jax.tree.leaves(dense_caches),
+                    jax.tree.leaves(bs_caches)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-5)
+
+    # masked (valid_len) prefill routes through the same plan
+    toks = np.zeros((1, 16), np.int32)
+    toks[0, :12] = np.arange(1, 13)
+    vl = jnp.asarray([12], jnp.int32)
+    d_logits, _ = tfm.prefill(masked, cfg,
+                              {"tokens": jnp.asarray(toks)},
+                              capacity=32, valid_len=vl)
+    p_logits, _ = tfm.prefill(masked, cfg,
+                              {"tokens": jnp.asarray(toks)},
+                              capacity=32, valid_len=vl, plan=plan)
+    np.testing.assert_allclose(np.asarray(p_logits),
+                               np.asarray(d_logits),
+                               rtol=1e-5, atol=1e-5)
