@@ -384,8 +384,9 @@ class EncDecAdapter(ModelAdapter):
     ``evaluate`` returns NEGATIVE decoder cross-entropy (higher is
     better).  Prunability covers encoder/decoder self-attention, MLPs,
     and the decoder cross-attention (``encdec_prunable``).  Serving
-    raises ``ServeUnsupported``: the engine's prompt protocol is
-    token-only and has no frames lane.
+    uses the engine's frames lane: a ``Request`` carries its encoder
+    frames alongside the decoder prompt, and the greedy decoder loop
+    runs behind the same Request/ServeReport surface as the LM families.
     """
 
     family = "audio"
@@ -448,7 +449,15 @@ class EncDecAdapter(ModelAdapter):
         return -float(np.mean(losses))
 
     def serve_fns(self):
-        raise ServeUnsupported(
-            self.cfg.name, self.family,
-            "ServeEngine prompts are token-only; encoder-decoder "
-            "requests need a frames lane")
+        # the engine routes requests with frames through its enc-dec
+        # prefill lane ({"tokens", "frames"} batch, exact-length); the
+        # decoder's per-step signature matches the LM protocol
+        return self._mod.prefill, self._mod.decode_step
+
+    def serve_frames(self, uid: int = 0) -> np.ndarray:
+        """Deterministic synthetic encoder frames for one request —
+        the serving-side analogue of the training ``SyntheticAudio``
+        batches (CLI/demo input when no real mel frames exist)."""
+        rng = np.random.RandomState(uid)
+        return rng.randn(self.cfg.encoder_seq_len,
+                         self.cfg.d_model).astype(np.float32) * 0.1

@@ -13,6 +13,8 @@ transformers, vlm and enc-dec configs.
     python -m repro.api report   --arch vgg11 --ticket /tmp/t
     python -m repro.api finetune --arch vgg11 --ticket /tmp/t --steps 20
     python -m repro.api serve    --arch yi-6b --requests 4
+    python -m repro.api serve-daemon --arch yi-6b --ticket /tmp/t --json
+    python -m repro.api swap --arch yi-6b --ticket /tmp/a --candidate /tmp/b
 
 ``--recipe`` runs a staged prune program (a registered name from
 ``recipes`` or a path to a recipe ``.json``); without it the legacy
@@ -54,56 +56,37 @@ def _hardware_dict(rep) -> dict:
     }
 
 
-class TicketMismatch(RuntimeError):
-    """Ticket on disk does not fit the adapter's parameter template
-    (usually pruned at a different --scale or --arch)."""
+def __getattr__(name):
+    # ``cli.TicketMismatch`` stays importable without paying the jax
+    # import at CLI startup; the class itself lives with the rest of
+    # the ticket verification logic in ``serve.manager``
+    if name == "TicketMismatch":
+        from repro.serve.manager import TicketMismatch
+        return TicketMismatch
+    raise AttributeError(name)
 
 
 def _load_ticket(adapter, path: str, seed: int):
     """Ticket dir → (rewound params, masks) shaped like the adapter.
 
-    Validates the stored mask keys/shapes against the adapter's
-    template first: ``import_ticket`` silently skips mismatched keys,
-    which would otherwise surface as a deep traceback much later.
+    Delegates to ``serve.manager.load_ticket``, which validates the
+    stored mask keys/shapes against the adapter's template first
+    (``import_ticket`` silently skips mismatched keys, which would
+    otherwise surface as a deep traceback much later) and raises
+    ``TicketMismatch`` on disagreement.
     """
-    import os
-
     import jax
 
-    from repro.core import lottery
-    from repro.core.masks import make_masks, path_str
+    from repro.serve.manager import load_ticket
 
     params = adapter.init_params(jax.random.PRNGKey(seed))
-    masks_tmpl = make_masks(params, adapter.prunable)
-    tmpl_shapes = {}
-
-    def visit(p, leaf):
-        if leaf is not None:
-            tmpl_shapes[f"m:{path_str(p)}"] = tuple(leaf.shape)
-        return leaf
-
-    jax.tree_util.tree_map_with_path(visit, masks_tmpl,
-                                     is_leaf=lambda x: x is None)
-    data = np.load(os.path.join(path, "ticket.npz"))
-    stored = {k: tuple(data[k].shape) for k in data.files
-              if k.startswith("m:")}
-    if stored != tmpl_shapes:
-        missing = sorted(set(tmpl_shapes) - set(stored))
-        extra = sorted(set(stored) - set(tmpl_shapes))
-        wrong = sorted(k for k in set(stored) & set(tmpl_shapes)
-                       if stored[k] != tmpl_shapes[k])
-        raise TicketMismatch(
-            f"ticket at {path} does not match {adapter.cfg.name}: "
-            f"{len(missing)} masks missing, {len(extra)} unexpected, "
-            f"{len(wrong)} wrong-shaped"
-            + (f" (e.g. {wrong[0]}: {stored[wrong[0]]} vs "
-               f"{tmpl_shapes[wrong[0]]})" if wrong else "")
-            + " — was it pruned at a different --scale or --arch?")
-    w, m = lottery.import_ticket(path, params, masks_tmpl)
-    return lottery.rewind(w, m), m
+    rewound, masks, _meta = load_ticket(
+        path, params, adapter.prunable,
+        arch_name=getattr(adapter.cfg, "name", "?"))
+    return rewound, masks
 
 
-def _ticket_mismatch(args, e: TicketMismatch) -> int:
+def _ticket_mismatch(args, e) -> int:
     _emit({"event": "ticket_mismatch", "arch": args.arch,
            "ticket": args.ticket, "reason": str(e)},
           args.json, f"error: {e}")
@@ -235,6 +218,7 @@ def cmd_recipes(args) -> int:
 def cmd_finetune(args) -> int:
     from repro.api.registry import make_adapter
     from repro.core.lottery import ticket_meta
+    from repro.serve.manager import TicketMismatch
 
     adapter = make_adapter(args.arch, scale=args.scale,
                            **({"steps": args.steps} if args.steps else {}))
@@ -265,6 +249,7 @@ def cmd_report(args) -> int:
     from repro.core.hardware import analyze_masks
     from repro.core.lottery import ticket_meta
     from repro.core.masks import sparsity_fraction
+    from repro.serve.manager import TicketMismatch
 
     adapter = make_adapter(args.arch, scale=args.scale)
     try:
@@ -301,23 +286,64 @@ def cmd_report(args) -> int:
     return EXIT_OK
 
 
-def cmd_serve(args) -> int:
-    import jax
+def _report_dict(rep) -> dict:
+    """ServeReport → JSON payload (the --json serving surface)."""
+    return {"requests": rep.requests, "tokens": rep.tokens_generated,
+            "decode_steps": rep.decode_steps,
+            "slot_occupancy": rep.slot_occupancy,
+            "tokens_per_s": rep.tokens_per_s,
+            "bsmm": rep.bsmm_enabled,
+            "skipped_tile_fraction": rep.skipped_tile_fraction,
+            "ttft_p50_ms": rep.ttft_p50 * 1e3,
+            "ttft_p95_ms": rep.ttft_p95 * 1e3,
+            "tps_p50": rep.tps_p50, "tps_p95": rep.tps_p95,
+            "deadline_misses": rep.deadline_misses,
+            "swaps": rep.swaps}
 
+
+def _latency_line(rep) -> str:
+    return (f"ttft p50/p95 {rep.ttft_p50 * 1e3:.1f}/"
+            f"{rep.ttft_p95 * 1e3:.1f}ms | per-request tok/s p50/p95 "
+            f"{rep.tps_p50:.1f}/{rep.tps_p95:.1f} | "
+            f"deadline misses {rep.deadline_misses}")
+
+
+def _serve_setup(args):
+    """Shared serve-verb boot: adapter + (prefill, decode) or a
+    structured refusal.  Returns (adapter, fns | None, exit_code)."""
     from repro.api.adapters import ServeUnsupported
     from repro.api.registry import make_adapter
-    from repro.serve import Request, ServeEngine
 
     adapter = make_adapter(args.arch, scale=args.scale)
     try:
-        prefill_fn, decode_fn = adapter.serve_fns()
+        fns = adapter.serve_fns()
     except ServeUnsupported as e:
         _emit({"event": "serve_unsupported", "arch": e.arch,
                "family": e.family, "reason": e.reason},
               args.json,
               f"serve: {e.arch} ({e.family} family) has no serving path "
               f"— {e.reason}")
-        return EXIT_UNSUPPORTED
+        return adapter, None, EXIT_UNSUPPORTED
+    return adapter, fns, EXIT_OK
+
+
+def _request_frames(adapter, uid: int):
+    """Per-request encoder frames for enc-dec families (None for LMs)."""
+    if getattr(adapter.cfg, "is_encoder_decoder", False):
+        return adapter.serve_frames(uid)
+    return None
+
+
+def cmd_serve(args) -> int:
+    import jax
+
+    from repro.serve import Request, ServeEngine
+    from repro.serve.manager import TicketMismatch
+
+    adapter, fns, code = _serve_setup(args)
+    if fns is None:
+        return code
+    prefill_fn, decode_fn = fns
 
     if args.ticket:
         try:
@@ -335,24 +361,267 @@ def cmd_serve(args) -> int:
     for i in range(args.requests):
         prompt = rng.randint(0, 200, size=rng.randint(4, 16))
         engine.submit(Request(uid=i, prompt=prompt.astype(np.int32),
-                              max_new_tokens=args.max_new))
+                              max_new_tokens=args.max_new,
+                              frames=_request_frames(adapter, i)))
     engine.run()
     rep = engine.report
-    _emit({"event": "serve", "arch": args.arch,
-           "requests": rep.requests, "tokens": rep.tokens_generated,
-           "decode_steps": rep.decode_steps,
-           "slot_occupancy": rep.slot_occupancy,
-           "tokens_per_s": rep.tokens_per_s,
-           "bsmm": rep.bsmm_enabled,
-           "skipped_tile_fraction": rep.skipped_tile_fraction},
+    _emit({"event": "serve", "arch": args.arch, **_report_dict(rep)},
           args.json,
           f"{args.arch}: served {rep.requests} requests, "
           f"{rep.tokens_generated} tokens in {rep.decode_steps} decode "
           f"steps | occupancy {rep.slot_occupancy:.0%} | "
-          f"{rep.tokens_per_s:.1f} tok/s | "
+          f"{rep.tokens_per_s:.1f} tok/s | {_latency_line(rep)} | "
           + (f"bsmm on ({rep.skipped_tile_fraction:.0%} tiles skipped)"
              if rep.bsmm_enabled else "bsmm off (dense)"))
     return EXIT_OK
+
+
+def cmd_serve_daemon(args) -> int:
+    """Line-protocol control-plane daemon.
+
+    Reads one JSON op per line (stdin or ``--script``)::
+
+        {"op": "request", "prompt": [1,2,3], "max_new_tokens": 8,
+         "deadline_s": 2.0}              # admit (frames auto for audio)
+        {"op": "pump", "steps": 4}       # advance the scheduler
+        {"op": "swap", "name": "b", "ticket": "/path/to/ticket"}
+        {"op": "status"}                 # health + live report
+        {"op": "drain"}                  # serve everything queued
+        {"op": "shutdown"}               # drain and exit 0
+
+    Emits one event per line: ``ready``, ``admitted``/``rejected``,
+    ``token`` (streaming, as each token is sampled), ``done``,
+    ``swap``/``swap_rejected``, ``status``, and a final ``report`` +
+    ``shutdown``.  EOF behaves like ``shutdown``.
+    """
+    import jax
+
+    from repro.distributed.fault_tolerance import HeartbeatMonitor
+    from repro.serve import (ServeEngine, ServeFrontend, SubmitRejected,
+                             TicketError, TicketManager)
+
+    adapter, fns, code = _serve_setup(args)
+    if fns is None:
+        return code
+    prefill_fn, decode_fn = fns
+
+    manager = TicketManager.from_adapter(adapter, seed=args.seed)
+    if args.ticket:
+        try:
+            rec = manager.register("boot", args.ticket)
+        except TicketError as e:
+            _emit({"event": "ticket_rejected", "ticket": args.ticket,
+                   "reason": e.reason, "detail": str(e)},
+                  args.json, f"error: {e}")
+            return EXIT_UNSUPPORTED
+        params, masks = rec.params, rec.masks
+        manager.active = "boot"
+    else:
+        params = adapter.init_params(jax.random.PRNGKey(args.seed))
+        masks = None
+    heartbeat = (HeartbeatMonitor(args.heartbeat_dir,
+                                  deadline_s=args.heartbeat_deadline)
+                 if args.heartbeat_dir else None)
+    engine = ServeEngine(params=params, cfg=adapter.cfg,
+                         prefill_fn=prefill_fn, decode_fn=decode_fn,
+                         batch_slots=args.slots, capacity=args.capacity,
+                         temperature=args.temperature, masks=masks,
+                         heartbeat=heartbeat)
+    frontend = ServeFrontend(engine, max_queue=args.max_queue)
+    rng = np.random.RandomState(args.seed)
+    next_uid = [0]
+
+    def mk_cb(uid):
+        def cb(tok):
+            _emit({"event": "token", "uid": uid, "token": int(tok)},
+                  args.json, f"  token uid={uid}: {tok}")
+        return cb
+
+    def emit_done(done):
+        for r in done:
+            _emit({"event": "done", "uid": r.uid, "status": r.status,
+                   "generation": r.generation,
+                   "tokens": [int(t) for t in r.tokens],
+                   "ttft_ms": None if r.ttft is None else r.ttft * 1e3},
+                  args.json,
+                  f"  done uid={r.uid} [{r.status}] gen={r.generation} "
+                  f"tokens={r.tokens}")
+
+    _emit({"event": "ready", "arch": args.arch, "ticket": args.ticket,
+           "slots": args.slots, "bsmm": engine.report.bsmm_enabled,
+           "generation": engine.current_generation},
+          args.json,
+          f"daemon ready: {args.arch} slots={args.slots} "
+          + (f"ticket={args.ticket}" if args.ticket else "(unpruned)"))
+
+    stream = open(args.script) if args.script else sys.stdin
+    try:
+        for line in stream:
+            line = line.strip()
+            if not line or line.startswith("#"):
+                continue
+            try:
+                cmd = json.loads(line)
+            except json.JSONDecodeError as e:
+                _emit({"event": "error", "reason": f"bad json: {e}"},
+                      args.json, f"error: bad json: {e}")
+                continue
+            op = cmd.get("op")
+            if op == "request":
+                uid = int(cmd.get("uid", next_uid[0]))
+                next_uid[0] = max(next_uid[0], uid) + 1
+                prompt = cmd.get("prompt")
+                if prompt is None:
+                    prompt = rng.randint(
+                        1, 200, size=int(cmd.get("prompt_len", 8)))
+                try:
+                    handle = frontend.submit(
+                        np.asarray(prompt, np.int32), uid=uid,
+                        max_new_tokens=int(cmd.get("max_new_tokens",
+                                                   args.max_new)),
+                        deadline_s=cmd.get("deadline_s"),
+                        frames=_request_frames(adapter, uid),
+                        on_token=mk_cb(uid))
+                except SubmitRejected as e:
+                    _emit({"event": "rejected", "uid": uid,
+                           "reason": e.reason, "detail": str(e)},
+                          args.json,
+                          f"rejected uid={uid}: [{e.reason}] {e}")
+                else:
+                    _emit({"event": "admitted", "uid": uid,
+                           "state": handle.status},
+                          args.json,
+                          f"admitted uid={uid} ({handle.status})")
+            elif op == "pump":
+                emit_done(frontend.pump(int(cmd.get("steps", 1))))
+            elif op == "drain":
+                emit_done(frontend.drain())
+            elif op == "swap":
+                name = cmd.get("name") or cmd.get("ticket")
+                try:
+                    if name not in manager.tickets:
+                        manager.register(name, cmd["ticket"])
+                    ev = manager.swap(frontend, name)
+                    _emit({"event": "swap", "ticket": name,
+                           "accepted": ev.accepted,
+                           "generation": ev.gid, "reason": ev.reason,
+                           "skipped_tile_fraction":
+                               ev.skipped_tile_fraction},
+                          args.json,
+                          f"swap {name}: "
+                          + ("accepted" if ev.accepted
+                             else f"REJECTED — {ev.reason}")
+                          + f" (gen {ev.gid}, skipped tiles "
+                            f"{ev.skipped_tile_fraction:.0%})")
+                except (TicketError, KeyError) as e:
+                    _emit({"event": "swap_rejected", "ticket": name,
+                           "reason": getattr(e, "reason", "bad_request"),
+                           "detail": str(e)},
+                          args.json, f"swap rejected: {e}")
+            elif op == "status":
+                rep = engine.report
+                _emit({"event": "status",
+                       "healthy": engine.health.healthy,
+                       "health_reason": engine.health.reason,
+                       "active_ticket": manager.active,
+                       "generation": engine.current_generation,
+                       "waiting": len(frontend.waiting),
+                       **_report_dict(rep)},
+                      args.json,
+                      f"status: healthy={engine.health.healthy} "
+                      f"gen={engine.current_generation} "
+                      f"waiting={len(frontend.waiting)} | "
+                      f"{_latency_line(rep)}")
+            elif op == "shutdown":
+                break
+            else:
+                _emit({"event": "error", "reason": f"unknown op {op!r}"},
+                      args.json, f"error: unknown op {op!r}")
+    finally:
+        if stream is not sys.stdin:
+            stream.close()
+    emit_done(frontend.drain())
+    rep = engine.report
+    _emit({"event": "report", **_report_dict(rep)}, args.json,
+          f"served {rep.requests} requests, {rep.tokens_generated} "
+          f"tokens | {_latency_line(rep)} | swaps {rep.swaps}")
+    _emit({"event": "shutdown"}, args.json, "daemon shutdown clean")
+    return EXIT_OK
+
+
+def cmd_swap(args) -> int:
+    """Zero-drain hot-swap preflight: serve live traffic on the running
+    ticket, swap the candidate in MID-DECODE, and prove (a) in-flight
+    outputs are bit-identical to a swap-free oracle and (b) the next
+    admitted request decodes under the candidate's tile plans."""
+    from repro.serve import (Request, ServeFrontend, TicketError,
+                             TicketManager)
+
+    adapter, fns, code = _serve_setup(args)
+    if fns is None:
+        return code
+
+    manager = TicketManager.from_adapter(adapter, seed=args.seed)
+    try:
+        manager.register("current", args.ticket)
+        manager.register("candidate", args.candidate)
+    except TicketError as e:
+        _emit({"event": "ticket_rejected", "reason": e.reason,
+               "detail": str(e)}, args.json, f"error: {e}")
+        return EXIT_UNSUPPORTED
+
+    def mk_requests():
+        return [Request(uid=i,
+                        prompt=np.random.RandomState(1000 + i).randint(
+                            1, 200, size=8).astype(np.int32),
+                        max_new_tokens=args.max_new,
+                        frames=_request_frames(adapter, i))
+                for i in range(args.requests)]
+
+    kw = dict(batch_slots=args.slots, capacity=args.capacity)
+    # oracle: identical traffic served to completion, no swap
+    oracle_eng = manager.make_engine("current", **kw)
+    for r in mk_requests():
+        oracle_eng.submit(r)
+    oracle = {r.uid: list(r.tokens) for r in oracle_eng.run()}
+    old_skip = oracle_eng.report.skipped_tile_fraction
+
+    # live: same traffic, candidate swapped in mid-decode
+    engine = manager.make_engine("current", **kw)
+    frontend = ServeFrontend(engine)
+    for r in mk_requests():
+        frontend.submit(request=r)
+    frontend.pump(args.swap_after)
+    ev = manager.swap(frontend, "candidate")
+    probe = Request(uid=10_000,
+                    prompt=np.random.RandomState(77).randint(
+                        1, 200, size=8).astype(np.int32),
+                    max_new_tokens=args.max_new,
+                    frames=_request_frames(adapter, 10_000))
+    frontend.submit(request=probe)
+    frontend.drain()
+
+    done = {r.uid: r for r in frontend.finished}
+    in_flight = [u for u in oracle if done[u].generation == 0]
+    match = all(done[u].tokens == oracle[u] for u in in_flight)
+    new_skip = engine.report.skipped_tile_fraction
+    ok = ev.accepted and match
+    rep = engine.report
+    _emit({"event": "swap_check", "arch": args.arch,
+           "accepted": ev.accepted, "reason": ev.reason,
+           "in_flight_match": match, "in_flight": len(in_flight),
+           "probe_generation": probe.generation,
+           "old_skipped_tile_fraction": old_skip,
+           "new_skipped_tile_fraction": new_skip,
+           **_report_dict(rep)},
+          args.json,
+          f"swap {'OK' if ok else 'FAILED'}: "
+          f"{len(in_flight)} in-flight requests "
+          f"{'bit-identical' if match else 'DIVERGED'} vs no-swap "
+          f"oracle; probe served on gen {probe.generation}; skipped "
+          f"tiles {old_skip:.0%} -> {new_skip:.0%} | "
+          f"{_latency_line(rep)}")
+    return EXIT_OK if ok else EXIT_UNSUPPORTED
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -418,6 +687,44 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--capacity", type=int, default=128)
     p.add_argument("--temperature", type=float, default=0.0)
     p.set_defaults(fn=cmd_serve)
+
+    p = sub.add_parser("serve-daemon",
+                       help="control-plane daemon: one JSON op per stdin "
+                            "line (request/pump/swap/status/shutdown), "
+                            "streaming token events out")
+    _add_common(p)
+    p.add_argument("--ticket", default=None,
+                   help="boot serving this pruned ticket")
+    p.add_argument("--slots", type=int, default=4)
+    p.add_argument("--capacity", type=int, default=128)
+    p.add_argument("--max-new", type=int, default=8,
+                   help="default token budget for ops that omit it")
+    p.add_argument("--max-queue", type=int, default=64,
+                   help="front-end wait-queue bound (admission control)")
+    p.add_argument("--temperature", type=float, default=0.0)
+    p.add_argument("--heartbeat-dir", default=None,
+                   help="HeartbeatMonitor root: engine ticks beat here "
+                        "and stale beats close the admission gate")
+    p.add_argument("--heartbeat-deadline", type=float, default=30.0)
+    p.add_argument("--script", default=None,
+                   help="read ops from this file instead of stdin")
+    p.set_defaults(fn=cmd_serve_daemon)
+
+    p = sub.add_parser("swap",
+                       help="zero-drain hot-swap preflight: candidate "
+                            "ticket vs running ticket on live traffic")
+    _add_common(p, ticket_required=True)
+    p.add_argument("--candidate", required=True,
+                   help="candidate ticket directory to swap in")
+    p.add_argument("--requests", type=int, default=3,
+                   help="in-flight requests during the swap "
+                        "(keep <= --slots for a full in-flight check)")
+    p.add_argument("--max-new", type=int, default=8)
+    p.add_argument("--slots", type=int, default=4)
+    p.add_argument("--capacity", type=int, default=128)
+    p.add_argument("--swap-after", type=int, default=2,
+                   help="scheduler ticks before the swap lands")
+    p.set_defaults(fn=cmd_swap)
     return ap
 
 

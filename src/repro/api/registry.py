@@ -149,7 +149,7 @@ register_family(FamilySpec(
     recipe="dense-full",
     scale_tiny=_tiny_arch,
     smoke_kwargs=dict(steps=4, batch_size=2, seq_len=12, eval_batches=1),
-    serves=False,
+    serves=True,
 ))
 
 register_family(FamilySpec(

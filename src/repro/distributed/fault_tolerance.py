@@ -103,6 +103,23 @@ class HeartbeatMonitor:
                 dead.append(name[:-3])
         return dead
 
+    def age(self, worker: str) -> Optional[float]:
+        """Seconds since ``worker`` last beat (None: never beat).
+
+        The serving control plane beats once per scheduler tick
+        (``ServeEngine.step``); ``serve.frontend`` reads staleness via
+        ``dead_workers`` to close the engine's admission gate when the
+        decode loop wedges."""
+        path = os.path.join(self.root, f"{worker}.hb")
+        if not os.path.exists(path):
+            return None
+        with open(path) as f:
+            try:
+                last = float(f.read().strip())
+            except ValueError:
+                return None
+        return time.time() - last
+
 
 @dataclass
 class SkipStraggler:

@@ -1,12 +1,16 @@
-"""Production serving launcher (batched prefill/decode engine).
+"""Production serving launcher (control plane over the batched engine).
 
     PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --smoke \
-        [--requests N] [--pruned FRAC]
+        [--requests N] [--pruned FRAC] [--deadline S] [--heartbeat-dir D]
 
-Same mesh/sharding story as train.py: ``--smoke`` runs the reduced
-config on CPU; the full configs' serve_step lowering for the production
-meshes is proven by ``repro.launch.dryrun`` (prefill_32k / decode_32k /
-long_500k cells).
+Requests are admitted through ``serve.frontend.ServeFrontend``: a
+bounded intake queue backs onto the engine's capacity check, deadlines
+cancel expired slots mid-decode, and (with ``--heartbeat-dir``) the
+engine's per-tick heartbeat gates admission when the decode loop
+wedges.  Same mesh/sharding story as train.py: ``--smoke`` runs the
+reduced config on CPU; the full configs' serve_step lowering for the
+production meshes is proven by ``repro.launch.dryrun`` (prefill_32k /
+decode_32k / long_500k cells).
 """
 from __future__ import annotations
 
@@ -19,10 +23,11 @@ from repro.configs import get_arch, scaled_down
 from repro.core import algorithm as alg
 from repro.core.masks import apply_masks, lm_prunable, make_masks, \
     sparsity_fraction
+from repro.distributed.fault_tolerance import HeartbeatMonitor
 from repro.distributed.sharding import ShardingRules, install
 from repro.launch.mesh import make_cpu_mesh, make_production_mesh
 from repro.models import transformer as tfm
-from repro.serve import Request, ServeEngine
+from repro.serve import ServeEngine, ServeFrontend
 
 
 def main():
@@ -32,6 +37,11 @@ def main():
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--pruned", type=float, default=0.0)
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="per-request deadline in seconds (expired "
+                         "requests free their slot mid-decode)")
+    ap.add_argument("--heartbeat-dir", default=None,
+                    help="HeartbeatMonitor root for decode-loop liveness")
     ap.add_argument("--multi-pod", action="store_true")
     args = ap.parse_args()
 
@@ -56,24 +66,32 @@ def main():
         print(f"serving at {sparsity_fraction(masks):.1%} sparsity "
               f"(crossbar-aware)")
 
+    heartbeat = (HeartbeatMonitor(args.heartbeat_dir, deadline_s=30.0)
+                 if args.heartbeat_dir else None)
     with mesh:
         engine = ServeEngine(params=params, cfg=cfg,
                              prefill_fn=tfm.prefill,
                              decode_fn=tfm.decode_step,
-                             batch_slots=8, capacity=256, masks=masks)
+                             batch_slots=8, capacity=256, masks=masks,
+                             heartbeat=heartbeat)
+        frontend = ServeFrontend(engine)
         rng = np.random.RandomState(0)
         for i in range(args.requests):
-            engine.submit(Request(
-                uid=i, prompt=rng.randint(0, 200, rng.randint(4, 32)
-                                          ).astype(np.int32),
-                max_new_tokens=args.max_new))
-        done = engine.run()
+            frontend.submit(
+                rng.randint(0, 200, rng.randint(4, 32)).astype(np.int32),
+                uid=i, max_new_tokens=args.max_new,
+                deadline_s=args.deadline)
+        frontend.drain()
     rep = engine.report
     print(f"served {rep.requests} requests, {rep.tokens_generated} tokens "
           f"in {rep.decode_steps} decode steps "
           f"(occupancy {rep.slot_occupancy:.0%}, "
           f"{rep.tokens_per_s:.1f} tok/s, "
           f"bsmm={'on' if rep.bsmm_enabled else 'off'})")
+    print(f"latency: ttft p50/p95 {rep.ttft_p50 * 1e3:.1f}/"
+          f"{rep.ttft_p95 * 1e3:.1f}ms | per-request tok/s p50/p95 "
+          f"{rep.tps_p50:.1f}/{rep.tps_p95:.1f} | "
+          f"deadline misses {rep.deadline_misses}")
 
 
 if __name__ == "__main__":

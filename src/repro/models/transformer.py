@@ -428,13 +428,15 @@ def supports_masked_prefill(cfg: ArchConfig) -> bool:
     no patch-token prefix.  Windowed/recurrent blocks carry state
     through the padded tail, and MoE routing computes expert capacity
     over *all* positions (pad tokens shift which real tokens are
-    dropped), so those need exact-length prefill instead."""
+    dropped), so those need exact-length prefill instead.
+    Encoder-decoder configs prefill through ``models.encdec`` (no
+    ``valid_len`` lane), so they are exact-length too."""
     try:
         kinds = set(cfg.blocks)
     except Exception:
         return False
     return (kinds == {ATTN} and not cfg.num_patch_tokens
-            and cfg.moe is None)
+            and cfg.moe is None and not cfg.is_encoder_decoder)
 
 
 def cache_batch_axes(cfg: ArchConfig, caches):

@@ -1,3 +1,7 @@
-from repro.serve.engine import (Request, ServeEngine,  # noqa: F401
-                                ServeReport)
+from repro.serve.engine import (EngineHealth, Request,  # noqa: F401
+                                ServeEngine, ServeReport, SubmitRejected)
+from repro.serve.frontend import ServeFrontend, StreamHandle  # noqa: F401
+from repro.serve.manager import (SwapEvent, TicketError,  # noqa: F401
+                                 TicketManager, TicketMismatch,
+                                 TicketRecord, load_ticket)
 from repro.serve.ticket import PlanStats, build_decode_plan  # noqa: F401

@@ -1,14 +1,32 @@
-"""Continuous-batching serving engine: slot refill mid-decode.
+"""Continuous-batching serving engine: slot refill mid-decode, ticket
+generations for zero-drain hot-swap.
 
 The scheduler keeps a fixed array of decode *slots*.  Each request is
 prefilled on its own (padded to a length bucket, masked via
 ``valid_len`` so padding never leaks into attention) and its caches are
 spliced into a free slot's cache lanes; all slots then advance through
 ONE jitted decode step per token, each at its own sequence position
-(per-slot cache indices).  The moment a slot's request finishes — EOS
-or token budget — the next queued request is prefilled and spliced in
-while the other slots keep decoding.  No request ever waits for a
-batch-mate, and no request's output depends on its batch-mates.
+(per-slot cache indices).  The moment a slot's request finishes — EOS,
+token budget, or deadline expiry — the next queued request is prefilled
+and spliced in while the other slots keep decoding.  No request ever
+waits for a batch-mate, and no request's output depends on its
+batch-mates.
+
+**Ticket generations.**  The engine's params/plan/jitted-fns bundle is
+a *generation*.  ``swap(params, masks)`` installs a new generation
+without draining traffic: requests already in slots keep decoding on
+the generation that prefilled them (identical params, caches and
+sampling stream — their outputs are bit-identical to a swap-free run),
+while every subsequent admission prefills on the new ticket.  A drained
+old generation is retired automatically; ``rollback`` discards a
+just-installed generation that has not served traffic yet (the ticket
+manager's smoke-verification path).
+
+The engine is drivable two ways: ``run()`` serves the queue to
+completion (the original batch surface), while ``step()`` advances one
+scheduler tick — refill, deadline sweep, one decode per live
+generation — so a front-end (``serve.frontend``) can interleave
+admission, streaming, health checks and hot-swaps between ticks.
 
 This is the LM-serving analogue of the paper's "train the pruned model"
 story: hand the engine the ticket's masks and the decode projections are
@@ -21,7 +39,7 @@ from __future__ import annotations
 import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Deque, List, Optional, Sequence
+from typing import (Any, Callable, Deque, List, Optional, Sequence)
 
 import jax
 import jax.numpy as jnp
@@ -30,19 +48,75 @@ import numpy as np
 from repro.serve.ticket import PlanStats, build_decode_plan
 
 
+class SubmitRejected(ValueError):
+    """Structured admission rejection.
+
+    ``reason`` is machine-readable:
+
+      * ``"capacity"``     — bounded intake queue is full.  The ONLY
+        retryable reason: capacity frees as slots drain, so front-ends
+        park these in their wait queue.
+      * ``"oversize"``     — prompt + budget exceeds KV-cache capacity.
+      * ``"empty_prompt"`` — no prompt tokens.
+      * ``"bad_budget"``   — ``max_new_tokens < 1``.
+      * ``"unhealthy"``    — the engine's health gate is closed (e.g.
+        heartbeat missed); admission stops, in-flight decode continues.
+
+    Subclasses ``ValueError`` so pre-control-plane callers that caught
+    the bare failure keep working.
+    """
+
+    RETRYABLE = ("capacity",)
+
+    def __init__(self, reason: str, message: str, uid=None):
+        self.reason = reason
+        self.uid = uid
+        super().__init__(message)
+
+    @property
+    def retryable(self) -> bool:
+        return self.reason in self.RETRYABLE
+
+
+@dataclass
+class EngineHealth:
+    healthy: bool = True
+    reason: str = "ok"
+
+
 @dataclass
 class Request:
     uid: int
-    prompt: np.ndarray              # (S,) int32
+    prompt: np.ndarray              # (S,) int32 — decoder prompt
     max_new_tokens: int = 16
     eos_id: Optional[int] = None
     tokens: List[int] = field(default_factory=list)
     done: bool = False
+    # enc-dec lane: precomputed encoder frames (T_enc, d_model); the
+    # prompt above stays the decoder prompt
+    frames: Optional[np.ndarray] = None
+    # seconds from submission after which the request is cancelled —
+    # mid-decode cancellation frees the slot for the next admission
+    deadline_s: Optional[float] = None
+    # streaming: called with each token the moment it is sampled
+    on_token: Optional[Callable[[int], None]] = None
+    # pending -> queued/waiting -> active -> done | expired | rejected
+    status: str = "pending"
+    generation: Optional[int] = None    # ticket generation that served it
+    submitted_at: Optional[float] = None
+    first_token_at: Optional[float] = None
+    finished_at: Optional[float] = None
+
+    @property
+    def ttft(self) -> Optional[float]:
+        if self.first_token_at is None or self.submitted_at is None:
+            return None
+        return self.first_token_at - self.submitted_at
 
 
 @dataclass
 class ServeReport:
-    """Per-``run()`` throughput accounting."""
+    """Cumulative scheduler/throughput accounting (see ``report``)."""
     requests: int = 0
     prefills: int = 0
     decode_steps: int = 0
@@ -55,6 +129,40 @@ class ServeReport:
     live_tiles: int = 0
     total_tiles: int = 0
     skipped_tile_fraction: float = 0.0
+    # per-request latency distribution (seconds / tokens-per-second)
+    ttft_p50: float = 0.0
+    ttft_p95: float = 0.0
+    tps_p50: float = 0.0
+    tps_p95: float = 0.0
+    deadline_misses: int = 0
+    swaps: int = 0                  # committed hot-swaps (rollbacks undo)
+
+
+@dataclass
+class _Generation:
+    """One ticket's serving bundle: params + plan + jitted fns + the
+    slot lanes it is decoding.  Swaps append a new one; old ones drain."""
+    gid: int
+    params: Any
+    masks: Any
+    plan: Any
+    plan_stats: PlanStats
+    prefill_exact: Callable
+    prefill_masked: Callable
+    prefill_frames: Callable
+    decode: Callable
+    slot_reqs: List[Optional[Request]]
+    slot_gens: List[Optional[Any]]
+    cur: np.ndarray
+    slot_caches: Any = None
+    served: int = 0                 # requests prefilled on this ticket
+
+    def active_count(self) -> int:
+        return sum(1 for r in self.slot_reqs if r is not None)
+
+    def free_slot(self, s: int) -> None:
+        self.slot_reqs[s] = None
+        self.slot_gens[s] = None
 
 
 def _default_buckets(capacity: int) -> List[int]:
@@ -66,6 +174,10 @@ def _default_buckets(capacity: int) -> List[int]:
     return out
 
 
+def _pct(xs: List[float], q: float) -> float:
+    return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
+
+
 class ServeEngine:
     """Continuous-batching scheduler over pure prefill/decode functions.
 
@@ -74,9 +186,17 @@ class ServeEngine:
     forced on without masks).  ``decode_fn`` must then accept a
     ``plan=`` kwarg (``models.transformer.decode_step`` does).
 
+    ``queue_limit`` bounds the intake queue: beyond it ``submit``
+    rejects with the retryable ``"capacity"`` reason (None = unbounded,
+    the legacy batch behaviour).  ``clock`` injects a time source for
+    deadline tests.  ``heartbeat``/``heartbeat_worker`` wire a
+    ``distributed.fault_tolerance.HeartbeatMonitor``: every scheduler
+    tick beats, so a wedged decode step surfaces as a stale heartbeat
+    the front-end turns into an unhealthy admission gate.
+
     Oversized requests — ``len(prompt) + max_new_tokens > capacity`` —
-    are rejected at ``submit`` with ``ValueError`` rather than silently
-    decoding past the KV-cache capacity.
+    are rejected at ``submit`` (``SubmitRejected("oversize")``) rather
+    than silently decoding past the KV-cache capacity.
     """
 
     def __init__(self, *, params, cfg, prefill_fn, decode_fn,
@@ -85,12 +205,14 @@ class ServeEngine:
                  sample_seed: int = 0, masks=None,
                  use_bsmm: Optional[bool] = None,
                  interpret: Optional[bool] = None,
-                 prefill_buckets: Optional[Sequence[int]] = None):
+                 prefill_buckets: Optional[Sequence[int]] = None,
+                 queue_limit: Optional[int] = None,
+                 clock: Optional[Callable[[], float]] = None,
+                 heartbeat=None, heartbeat_worker: str = "engine"):
         if batch_slots < 1:
             raise ValueError(f"batch_slots must be >= 1, got {batch_slots}")
         if capacity < 2:
             raise ValueError(f"capacity must be >= 2, got {capacity}")
-        self.params = params
         self.cfg = cfg
         self.capacity = capacity
         self.slots = batch_slots
@@ -100,21 +222,16 @@ class ServeEngine:
         self.greedy = (temperature <= 0.0) if greedy is None else greedy
         self.temperature = temperature
         self.sample_seed = sample_seed
+        self._prefill_fn = prefill_fn
+        self._decode_fn = decode_fn
 
-        # -- pruned-ticket decode plan (static, baked into the jit) ----
         # interpret=None → emulate the Pallas kernel everywhere except
         # on a real TPU backend (interpret mode is a correctness path,
         # not a fast path)
         if interpret is None:
             interpret = jax.default_backend() != "tpu"
-        self._plan, self._plan_stats = (build_decode_plan(
-            masks, interpret=interpret) if masks is not None
-            else (None, PlanStats()))
-        if use_bsmm is False:
-            self._plan, self._plan_stats = None, PlanStats()
-        elif use_bsmm and self._plan is None:
-            raise ValueError("use_bsmm=True needs masks with routable "
-                             "dense projections")
+        self._interpret = interpret
+        self._use_bsmm = use_bsmm
 
         # -- masked (bucketed) vs exact-length prefill ------------------
         try:
@@ -125,41 +242,147 @@ class ServeEngine:
         self._buckets = sorted(prefill_buckets) if prefill_buckets \
             else _default_buckets(capacity)
 
+        self.queue_limit = queue_limit
+        self.clock = clock or time.perf_counter
+        self.heartbeat = heartbeat
+        self.heartbeat_worker = heartbeat_worker
+        self.health = EngineHealth()
+
+        self.queue: Deque[Request] = deque()
+        self._axes = None
+        self._splice = None              # built lazily from the first prefill
+        self._gens: List[_Generation] = []
+        self._next_gid = 0
+        self._finished: List[Request] = []
+        self._prefills = 0
+        self._decode_steps = 0
+        self._tokens = 0
+        self._busy_acc = 0
+        self._deadline_misses = 0
+        self._swaps = 0
+        self._t0: Optional[float] = None
+        self._t_last: Optional[float] = None
+        self._install_generation(params, masks, use_bsmm)
+
+    # -- generations (the hot-swap machinery) ------------------------------
+    def _install_generation(self, params, masks, use_bsmm) -> int:
         # the ticket's TilePlans drive BOTH serving paths: prefill
         # projections skip the same dead tiles decode skips.  The
         # plan= kwarg is passed only when a plan exists, so unpruned
         # engines keep working with prefill/decode fns that never
         # learned to accept it (``models.transformer``'s do).
-        plankw = {} if self._plan is None else {"plan": self._plan}
-        self._prefill_exact = jax.jit(
-            lambda p, toks: prefill_fn(p, cfg, {"tokens": toks},
-                                       capacity, **plankw))
-        self._prefill_masked = jax.jit(
-            lambda p, toks, vl: prefill_fn(p, cfg, {"tokens": toks},
-                                           capacity, valid_len=vl,
-                                           **plankw))
-        self._decode = jax.jit(
-            lambda p, caches, tok: decode_fn(p, cfg, caches, tok,
-                                             **plankw))
-        self._axes = None
-        self._splice = None              # built lazily from the first prefill
+        plan, stats = (build_decode_plan(masks, interpret=self._interpret)
+                       if masks is not None else (None, PlanStats()))
+        if use_bsmm is False:
+            plan, stats = None, PlanStats()
+        elif use_bsmm and plan is None:
+            raise ValueError("use_bsmm=True needs masks with routable "
+                             "dense projections")
+        cfg, capacity = self.cfg, self.capacity
+        prefill_fn, decode_fn = self._prefill_fn, self._decode_fn
+        plankw = {} if plan is None else {"plan": plan}
+        gen = _Generation(
+            gid=self._next_gid, params=params, masks=masks, plan=plan,
+            plan_stats=stats,
+            prefill_exact=jax.jit(
+                lambda p, toks: prefill_fn(p, cfg, {"tokens": toks},
+                                           capacity, **plankw)),
+            prefill_masked=jax.jit(
+                lambda p, toks, vl: prefill_fn(p, cfg, {"tokens": toks},
+                                               capacity, valid_len=vl,
+                                               **plankw)),
+            prefill_frames=jax.jit(
+                lambda p, toks, fr: prefill_fn(p, cfg,
+                                               {"tokens": toks,
+                                                "frames": fr},
+                                               capacity, **plankw)),
+            decode=jax.jit(
+                lambda p, caches, tok: decode_fn(p, cfg, caches, tok,
+                                                 **plankw)),
+            slot_reqs=[None] * self.slots,
+            slot_gens=[None] * self.slots,
+            cur=np.zeros((self.slots,), np.int32))
+        self._next_gid += 1
+        self._gens.append(gen)
+        return gen.gid
 
-        self.queue: Deque[Request] = deque()
-        self.report = ServeReport()
+    @property
+    def current_generation(self) -> int:
+        """Generation id new admissions will prefill on."""
+        return self._gens[-1].gid
+
+    def swap(self, params, masks=None, use_bsmm: Optional[bool] = None
+             ) -> int:
+        """Install a new ticket generation WITHOUT draining traffic.
+
+        In-flight requests finish on the generation (params + tile
+        plans + caches) that prefilled them; every admission from this
+        call on prefills on the new ticket.  Returns the new generation
+        id (``rollback`` it if a post-swap verification fails)."""
+        if use_bsmm is None:
+            use_bsmm = self._use_bsmm
+        gid = self._install_generation(params, masks, use_bsmm)
+        self._swaps += 1
+        return gid
+
+    def rollback(self, gid: int) -> None:
+        """Discard a just-swapped generation that has served nothing.
+
+        The ticket manager swaps, smoke-verifies against the ticket's
+        recorded fingerprint, and rolls back on mismatch — admissions
+        in between are impossible because the scheduler is not stepped
+        during verification."""
+        gen = self._gens[-1]
+        if gen.gid != gid:
+            raise ValueError(f"generation {gid} is not the newest "
+                             f"swapped-in generation")
+        if gen.served or gen.active_count():
+            raise RuntimeError(f"generation {gid} already served "
+                               f"{gen.served} request(s); cannot roll back")
+        if len(self._gens) == 1:
+            raise ValueError("cannot roll back the only live generation")
+        self._gens.pop()
+        self._swaps -= 1
+
+    def _gen_by_gid(self, gid: int) -> _Generation:
+        for g in self._gens:
+            if g.gid == gid:
+                return g
+        raise KeyError(f"no live generation {gid}")
+
+    # -- health ------------------------------------------------------------
+    def set_health(self, healthy: bool, reason: str = "ok") -> None:
+        self.health = EngineHealth(healthy, reason)
 
     # -- request intake ----------------------------------------------------
-    def submit(self, req: Request):
+    def submit(self, req: Request) -> None:
+        if not self.health.healthy:
+            raise SubmitRejected(
+                "unhealthy", f"request {req.uid}: engine is unhealthy "
+                f"({self.health.reason}); admission stopped", req.uid)
         n = len(req.prompt)
         if n < 1:
-            raise ValueError(f"request {req.uid}: empty prompt")
+            raise SubmitRejected(
+                "empty_prompt", f"request {req.uid}: empty prompt", req.uid)
         if req.max_new_tokens < 1:
-            raise ValueError(f"request {req.uid}: max_new_tokens must be "
-                             f">= 1, got {req.max_new_tokens}")
+            raise SubmitRejected(
+                "bad_budget", f"request {req.uid}: max_new_tokens must be "
+                f">= 1, got {req.max_new_tokens}", req.uid)
         if n + req.max_new_tokens > self.capacity:
-            raise ValueError(
+            raise SubmitRejected(
+                "oversize",
                 f"request {req.uid}: prompt ({n}) + max_new_tokens "
                 f"({req.max_new_tokens}) exceeds KV-cache capacity "
-                f"({self.capacity}); shorten the request or raise capacity")
+                f"({self.capacity}); shorten the request or raise capacity",
+                req.uid)
+        if self.queue_limit is not None \
+                and len(self.queue) >= self.queue_limit:
+            raise SubmitRejected(
+                "capacity", f"request {req.uid}: intake queue full "
+                f"({self.queue_limit}); retry when slots free", req.uid)
+        if req.submitted_at is None:
+            req.submitted_at = self.clock()
+        req.status = "queued"
         self.queue.append(req)
 
     # -- sampling ----------------------------------------------------------
@@ -226,105 +449,234 @@ class ServeEngine:
                 return b
         return self.capacity
 
-    def _prefill_request(self, req: Request, gen):
+    def _prefill_request(self, gen: _Generation, req: Request, rng):
         """Single-request prefill → (first sampled token, caches).
 
-        ``gen`` is the request's sampling stream — shared with the
+        ``rng`` is the request's sampling stream — shared with the
         decode loop so prefill and decode draws never reuse noise.
         """
         prompt = np.asarray(req.prompt, np.int32)
         n = len(prompt)
-        if self._masked_prefill:
+        if req.frames is not None:
+            # enc-dec lane: encoder frames ride along; exact-length
+            # decoder prefill (frames shape is config-static, so the
+            # trace caches like the bucketed path)
+            frames = np.asarray(req.frames, np.float32)
+            logits, caches = gen.prefill_frames(
+                gen.params, jnp.asarray(prompt[None]),
+                jnp.asarray(frames[None]))
+        elif self._masked_prefill:
             S = self._bucket(n)
             toks = np.zeros((1, S), np.int32)
             toks[0, :n] = prompt                       # right-pad
-            logits, caches = self._prefill_masked(
-                self.params, jnp.asarray(toks),
+            logits, caches = gen.prefill_masked(
+                gen.params, jnp.asarray(toks),
                 jnp.asarray([n], jnp.int32))
         else:
-            logits, caches = self._prefill_exact(
-                self.params, jnp.asarray(prompt[None]))
-        tok = self._sample_row(np.asarray(logits[0, -1]), gen)
+            logits, caches = gen.prefill_exact(
+                gen.params, jnp.asarray(prompt[None]))
+        tok = self._sample_row(np.asarray(logits[0, -1]), rng)
         return tok, caches
 
+    # -- lifecycle helpers -------------------------------------------------
+    def _finish(self, req: Request, status: str,
+                out: Optional[List[Request]] = None) -> None:
+        req.done = True
+        req.status = status
+        req.finished_at = self.clock()
+        self._finished.append(req)
+        if out is not None:
+            out.append(req)
+
+    def _emit_token(self, req: Request, tok: int) -> None:
+        req.tokens.append(tok)
+        self._tokens += 1
+        if req.first_token_at is None:
+            req.first_token_at = self.clock()
+        if req.on_token is not None:
+            req.on_token(tok)
+
+    def _expired(self, req: Request) -> bool:
+        return (req.deadline_s is not None and req.submitted_at is not None
+                and self.clock() - req.submitted_at > req.deadline_s)
+
+    def expire(self, req: Request) -> None:
+        """Mark a not-yet-admitted request deadline-expired (the
+        front-end's wait-queue sweep books misses here so the report
+        counts every miss once)."""
+        self._deadline_misses += 1
+        self._finish(req, "expired")
+
+    def _expire_queue(self, out: List[Request]) -> None:
+        keep: Deque[Request] = deque()
+        while self.queue:
+            req = self.queue.popleft()
+            if self._expired(req):
+                self._deadline_misses += 1
+                self._finish(req, "expired", out)
+            else:
+                keep.append(req)
+        self.queue = keep
+
+    def _expire_slots(self, out: List[Request]) -> None:
+        # mid-decode cancellation: the slot is freed NOW and refilled
+        # this same tick — an expired request never blocks admission
+        for gen in self._gens:
+            for s in range(self.slots):
+                req = gen.slot_reqs[s]
+                if req is not None and self._expired(req):
+                    self._deadline_misses += 1
+                    self._finish(req, "expired", out)
+                    gen.free_slot(s)
+
     # -- the scheduler -----------------------------------------------------
+    def _refill(self, out: List[Request]) -> None:
+        gen = self._gens[-1]            # admissions target: newest ticket
+        for s in range(self.slots):
+            while gen.slot_reqs[s] is None and self.queue:
+                req = self.queue.popleft()
+                if self._expired(req):
+                    self._deadline_misses += 1
+                    self._finish(req, "expired", out)
+                    continue
+                rng = self._gen_for(req)
+                tok, caches = self._prefill_request(gen, req, rng)
+                self._prefills += 1
+                gen.served += 1
+                req.generation = gen.gid
+                req.status = "active"
+                self._emit_token(req, tok)
+                if ((req.eos_id is not None and tok == req.eos_id)
+                        or req.max_new_tokens <= 1):
+                    self._finish(req, "done", out)   # done at prefill
+                    continue
+                if gen.slot_caches is None:
+                    gen.slot_caches = self._empty_slot_caches(caches)
+                    if self._splice is None:
+                        self._splice = self._make_splice(caches)
+                gen.slot_caches = self._splice(gen.slot_caches, caches,
+                                               jnp.asarray(s, jnp.int32))
+                gen.slot_reqs[s] = req
+                gen.slot_gens[s] = rng
+                gen.cur[s] = tok
+
+    def _decode_gen(self, gen: _Generation, out: List[Request]) -> None:
+        active = [s for s in range(self.slots)
+                  if gen.slot_reqs[s] is not None]
+        if not active:
+            return
+        logits, gen.slot_caches = gen.decode(gen.params, gen.slot_caches,
+                                             jnp.asarray(gen.cur[:, None]))
+        self._decode_steps += 1
+        self._busy_acc += len(active)
+        logits_h = np.asarray(logits[:, 0])
+        for s in active:
+            req = gen.slot_reqs[s]
+            tok = self._sample_row(logits_h[s], gen.slot_gens[s])
+            self._emit_token(req, tok)
+            gen.cur[s] = tok
+            if ((req.eos_id is not None and tok == req.eos_id)
+                    or len(req.tokens) >= req.max_new_tokens):
+                self._finish(req, "done", out)
+                gen.free_slot(s)     # freed: refilled next tick
+
+    def step(self) -> List[Request]:
+        """One scheduler tick: deadline sweep, slot refill (newest
+        generation), one decode step per generation with live slots,
+        retire drained generations, heartbeat.  Returns the requests
+        that finished this tick."""
+        if self._t0 is None:
+            self._t0 = self.clock()
+        out: List[Request] = []
+        self._expire_queue(out)
+        self._expire_slots(out)
+        if self.queue:
+            self._refill(out)
+        for gen in list(self._gens):
+            self._decode_gen(gen, out)
+        newest = self._gens[-1]
+        self._gens = [g for g in self._gens
+                      if g is newest or g.active_count()]
+        self._t_last = self.clock()
+        if self.heartbeat is not None:
+            self.heartbeat.beat(self.heartbeat_worker)
+        return out
+
+    @property
+    def idle(self) -> bool:
+        return not self.queue and all(g.active_count() == 0
+                                      for g in self._gens)
+
     def run(self) -> List[Request]:
         """Serve everything in the queue to completion (continuous).
 
-        Returns finished requests; ``self.report`` holds the run's
-        throughput accounting.
+        Returns the requests that finished during this call;
+        ``self.report`` holds the cumulative accounting.
         """
-        t0 = time.perf_counter()
-        finished: List[Request] = []
-        slot_reqs: List[Optional[Request]] = [None] * self.slots
-        slot_gens: List[Optional[object]] = [None] * self.slots
-        cur = np.zeros((self.slots,), np.int32)
-        slot_caches = None
-        decode_steps = prefills = tokens = busy_acc = 0
+        start = len(self._finished)
+        while not self.idle:
+            self.step()
+        return self._finished[start:]
 
-        def finish(req: Request):
-            req.done = True
-            finished.append(req)
+    # -- verification ------------------------------------------------------
+    def smoke_decode(self, prompt, max_new: int, *,
+                     gid: Optional[int] = None, frames=None) -> List[int]:
+        """Greedy-decode one probe prompt through a generation's jitted
+        prefill/decode WITHOUT touching slot state or the queue — the
+        ticket manager verifies a swapped-in generation against the
+        ticket's recorded fingerprint before committing to it."""
+        gen = self._gens[-1] if gid is None else self._gen_by_gid(gid)
+        prompt = np.asarray(prompt, np.int32)
+        if frames is not None:
+            logits, caches = gen.prefill_frames(
+                gen.params, jnp.asarray(prompt[None]),
+                jnp.asarray(np.asarray(frames, np.float32)[None]))
+        else:
+            logits, caches = gen.prefill_exact(gen.params,
+                                               jnp.asarray(prompt[None]))
+        tok = int(np.argmax(np.asarray(logits[0, -1])))
+        out = [tok]
+        for _ in range(max_new - 1):
+            logits, caches = gen.decode(gen.params, caches,
+                                        jnp.asarray([[tok]], jnp.int32))
+            tok = int(np.argmax(np.asarray(logits[0, 0])))
+            out.append(tok)
+        return out
 
-        while True:
-            # refill every free slot before the next decode step
-            for s in range(self.slots):
-                while slot_reqs[s] is None and self.queue:
-                    req = self.queue.popleft()
-                    gen = self._gen_for(req)
-                    tok, caches = self._prefill_request(req, gen)
-                    prefills += 1
-                    tokens += 1
-                    req.tokens.append(tok)
-                    if ((req.eos_id is not None and tok == req.eos_id)
-                            or req.max_new_tokens <= 1):
-                        finish(req)      # done at prefill; slot stays free
-                        continue
-                    if slot_caches is None:
-                        slot_caches = self._empty_slot_caches(caches)
-                        if self._splice is None:
-                            self._splice = self._make_splice(caches)
-                    slot_caches = self._splice(slot_caches, caches,
-                                               jnp.asarray(s, jnp.int32))
-                    slot_reqs[s] = req
-                    slot_gens[s] = gen
-                    cur[s] = tok
-            active = [s for s in range(self.slots)
-                      if slot_reqs[s] is not None]
-            if not active:
-                break
-            logits, slot_caches = self._decode(self.params, slot_caches,
-                                               jnp.asarray(cur[:, None]))
-            decode_steps += 1
-            busy_acc += len(active)
-            logits_h = np.asarray(logits[:, 0])
-            for s in active:
-                req = slot_reqs[s]
-                tok = self._sample_row(logits_h[s], slot_gens[s])
-                req.tokens.append(tok)
-                tokens += 1
-                cur[s] = tok
-                if ((req.eos_id is not None and tok == req.eos_id)
-                        or len(req.tokens) >= req.max_new_tokens):
-                    finish(req)
-                    slot_reqs[s] = None  # freed: refilled next loop turn
-                    slot_gens[s] = None
-
-        wall = time.perf_counter() - t0
-        st = self._plan_stats
-        self.report = ServeReport(
-            requests=len(finished),
-            prefills=prefills,
-            decode_steps=decode_steps,
-            tokens_generated=tokens,
-            slot_occupancy=(busy_acc / (decode_steps * self.slots)
-                            if decode_steps else 0.0),
+    # -- accounting --------------------------------------------------------
+    @property
+    def report(self) -> ServeReport:
+        """Live cumulative report; latency percentiles come from every
+        finished request's timestamps (TTFT = first token − submission;
+        tokens/s = tokens over total request latency)."""
+        fin = self._finished
+        wall = ((self._t_last - self._t0)
+                if self._t0 is not None and self._t_last is not None
+                else 0.0)
+        ttft = [r.ttft for r in fin if r.ttft is not None]
+        tps = [len(r.tokens) / max(r.finished_at - r.submitted_at, 1e-9)
+               for r in fin
+               if r.tokens and r.finished_at is not None
+               and r.submitted_at is not None]
+        cur = self._gens[-1]
+        st = cur.plan_stats
+        return ServeReport(
+            requests=len(fin),
+            prefills=self._prefills,
+            decode_steps=self._decode_steps,
+            tokens_generated=self._tokens,
+            slot_occupancy=(self._busy_acc / (self._decode_steps
+                                              * self.slots)
+                            if self._decode_steps else 0.0),
             wall_s=wall,
-            tokens_per_s=tokens / wall if wall > 0 else 0.0,
-            bsmm_enabled=self._plan is not None,
+            tokens_per_s=self._tokens / wall if wall > 0 else 0.0,
+            bsmm_enabled=cur.plan is not None,
             routed_matmuls=st.routed,
             live_tiles=st.live_tiles,
             total_tiles=st.total_tiles,
             skipped_tile_fraction=st.skipped_tile_fraction,
+            ttft_p50=_pct(ttft, 50), ttft_p95=_pct(ttft, 95),
+            tps_p50=_pct(tps, 50), tps_p95=_pct(tps, 95),
+            deadline_misses=self._deadline_misses,
+            swaps=self._swaps,
         )
-        return finished

@@ -160,11 +160,15 @@ def test_serve_unsupported_is_structured():
     assert isinstance(ei.value, NotImplementedError)  # back-compat
 
 
-def test_encdec_serve_unsupported():
+def test_encdec_serves_through_frames_lane():
     adapter = make_adapter("whisper-tiny", scale="tiny")
-    with pytest.raises(ServeUnsupported) as ei:
-        adapter.serve_fns()
-    assert ei.value.family == "audio"
+    prefill_fn, decode_fn = adapter.serve_fns()
+    assert callable(prefill_fn) and callable(decode_fn)
+    frames = adapter.serve_frames(uid=3)
+    assert frames.shape == (adapter.cfg.encoder_seq_len,
+                            adapter.cfg.d_model)
+    # deterministic per uid so engine outputs are reproducible
+    assert (frames == adapter.serve_frames(uid=3)).all()
 
 
 def test_lm_adapter_still_serves():

@@ -29,7 +29,9 @@ def test_archs_lists_every_registered_name(capsys):
     by_arch = {r["arch"]: r for r in rows}
     assert by_arch["vgg11"]["family"] == "cnn"
     assert by_arch["deepseek-v3-671b"]["granularities"][0] == "expert"
-    assert by_arch["whisper-tiny"]["serves"] is False
+    # the audio family serves through the engine's frames lane (PR 6)
+    assert by_arch["whisper-tiny"]["serves"] is True
+    assert by_arch["vgg11"]["serves"] is False
 
 
 def test_cnn_prune_report_finetune_roundtrip(tmp_path, capsys):
@@ -102,9 +104,19 @@ def test_serve_unsupported_family_reports_not_raises(tmp_path, capsys):
     assert rep["family"] == "cnn"
     assert rep["reason"]
 
-    code, out = _run(capsys, ["serve", "--arch", "whisper-tiny", "--json"])
-    assert code == cli.EXIT_UNSUPPORTED
-    assert _json_lines(out)[0]["family"] == "audio"
+
+def test_serve_audio_family_through_frames_lane(capsys):
+    """whisper serves now: requests carry synthetic encoder frames and
+    the report includes the latency percentiles."""
+    code, out = _run(capsys, ["serve", "--arch", "whisper-tiny",
+                              "--requests", "2", "--max-new", "3",
+                              "--capacity", "32", "--json"])
+    assert code == 0
+    rep = _json_lines(out)[0]
+    assert rep["event"] == "serve"
+    assert rep["requests"] == 2 and rep["tokens"] == 6
+    assert rep["ttft_p50_ms"] > 0 and rep["tps_p50"] > 0
+    assert rep["deadline_misses"] == 0
 
 
 def test_ticket_scale_mismatch_reports_not_tracebacks(tmp_path, capsys):

@@ -1,0 +1,428 @@
+"""Serving control plane: structured admission, streaming, deadlines,
+ticket manager verification, and zero-drain hot-swap equivalence."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import structured_prune
+from repro.configs import PruneConfig, get_arch, scaled_down
+from repro.core import lottery
+from repro.core.masks import apply_masks, lm_prunable
+from repro.distributed.fault_tolerance import HeartbeatMonitor
+from repro.models import transformer as tfm
+from repro.serve import (Request, ServeEngine, ServeFrontend,
+                         SubmitRejected, TicketError, TicketManager,
+                         TicketMismatch)
+
+CAP = 96
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = scaled_down(get_arch("llama3.2-3b"), dtype="float32")
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    masks_a = structured_prune(params, [("filter", 0.2)],
+                               prunable=lm_prunable, cfg=PruneConfig())
+    masks_b = structured_prune(params, [("xbar", 0.4), ("filter", 0.3)],
+                               prunable=lm_prunable, cfg=PruneConfig())
+    return cfg, params, masks_a, masks_b
+
+
+@pytest.fixture(scope="module")
+def tickets(setup, tmp_path_factory):
+    """Two exported tickets (different prune rates) + templates."""
+    cfg, params, masks_a, masks_b = setup
+    root = tmp_path_factory.mktemp("tickets")
+    meta = {"arch": cfg.name, "recipe": {"name": "paper"},
+            "quantize_bits": None}
+    lottery.export_ticket(str(root / "a"), lottery.snapshot(params),
+                          masks_a, meta=meta)
+    lottery.export_ticket(str(root / "b"), lottery.snapshot(params),
+                          masks_b, meta=meta)
+    return root
+
+
+def _engine(cfg, params, masks=None, slots=4, **kw):
+    return ServeEngine(params=params, cfg=cfg, prefill_fn=tfm.prefill,
+                       decode_fn=tfm.decode_step, batch_slots=slots,
+                       capacity=CAP, masks=masks, **kw)
+
+
+def _manager(cfg, params, **kw):
+    return TicketManager(cfg=cfg, params_template=params,
+                         prunable=lm_prunable, prefill_fn=tfm.prefill,
+                         decode_fn=tfm.decode_step, probe_tokens=6, **kw)
+
+
+def _reqs(n, budget=6):
+    return [Request(uid=i, prompt=np.arange(1 + i, 9 + i, dtype=np.int32),
+                    max_new_tokens=budget) for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# structured admission rejection
+# ---------------------------------------------------------------------------
+def test_submit_rejections_carry_machine_readable_reasons(setup):
+    cfg, params, *_ = setup
+    eng = _engine(cfg, params, queue_limit=1)
+    with pytest.raises(SubmitRejected) as e:
+        eng.submit(Request(uid=0, prompt=np.zeros((0,), np.int32)))
+    assert e.value.reason == "empty_prompt" and not e.value.retryable
+    with pytest.raises(SubmitRejected) as e:
+        eng.submit(Request(uid=1, prompt=np.arange(4, dtype=np.int32),
+                           max_new_tokens=0))
+    assert e.value.reason == "bad_budget"
+    with pytest.raises(SubmitRejected) as e:
+        eng.submit(Request(uid=2, prompt=np.arange(CAP, dtype=np.int32),
+                           max_new_tokens=4))
+    assert e.value.reason == "oversize"
+    eng.submit(Request(uid=3, prompt=np.arange(1, 8, dtype=np.int32),
+                       max_new_tokens=2))
+    with pytest.raises(SubmitRejected) as e:       # bounded intake queue
+        eng.submit(Request(uid=4, prompt=np.arange(1, 8, dtype=np.int32),
+                           max_new_tokens=2))
+    assert e.value.reason == "capacity" and e.value.retryable
+    eng.set_health(False, "wedged decode loop")
+    with pytest.raises(SubmitRejected) as e:
+        eng.submit(Request(uid=5, prompt=np.arange(1, 8, dtype=np.int32)))
+    assert e.value.reason == "unhealthy"
+    # rejections never entered the queue
+    assert len(eng.queue) == 1
+
+
+def test_frontend_parks_only_capacity_and_drains_fifo(setup):
+    """Capacity rejections park in the bounded wait queue and drain in
+    submission order; structural rejections re-raise immediately."""
+    cfg, params, *_ = setup
+    eng = _engine(cfg, params, slots=1, queue_limit=1)
+    fe = ServeFrontend(eng, max_queue=3)
+    handles = [fe.submit(request=r) for r in _reqs(4, budget=3)]
+    assert [h.status for h in handles] == \
+        ["queued", "waiting", "waiting", "waiting"]
+    # structural rejection raises even while capacity requests wait
+    with pytest.raises(SubmitRejected) as e:
+        fe.submit(np.zeros((0,), np.int32))
+    assert e.value.reason == "empty_prompt"
+    # the wait queue itself is bounded: overflow re-raises capacity
+    with pytest.raises(SubmitRejected) as e:
+        fe.submit(np.arange(1, 8, dtype=np.int32), uid=9)
+    assert e.value.reason == "capacity"
+    fe.drain()
+    assert [r.uid for r in fe.finished] == [0, 1, 2, 3]   # FIFO
+    assert all(len(r.tokens) == 3 and r.status == "done"
+               for r in fe.finished)
+
+
+# ---------------------------------------------------------------------------
+# streaming
+# ---------------------------------------------------------------------------
+def test_stream_handle_yields_each_token_once(setup):
+    cfg, params, *_ = setup
+    eng = _engine(cfg, params, slots=2)
+    fe = ServeFrontend(eng)
+    seen = []
+    h = fe.submit(np.arange(1, 9, dtype=np.int32), max_new_tokens=5,
+                  on_token=seen.append)
+    streamed = list(h)
+    assert len(streamed) == 5
+    assert streamed == h.request.tokens == seen
+    assert h.status == "done"
+    # streaming matches a plain batch run of the same request
+    eng2 = _engine(cfg, params, slots=2)
+    eng2.submit(Request(uid=0, prompt=np.arange(1, 9, dtype=np.int32),
+                        max_new_tokens=5))
+    assert eng2.run()[0].tokens == streamed
+
+
+# ---------------------------------------------------------------------------
+# deadlines
+# ---------------------------------------------------------------------------
+def test_deadline_expiry_frees_slot_and_later_requests_unaffected(setup):
+    cfg, params, *_ = setup
+    t = {"now": 0.0}
+    eng = _engine(cfg, params, slots=1, clock=lambda: t["now"])
+    fe = ServeFrontend(eng)
+    doomed = fe.submit(np.arange(1, 9, dtype=np.int32),
+                       max_new_tokens=50, deadline_s=5.0)
+    fe.pump(2)
+    assert doomed.status == "active" and 0 < len(doomed.tokens) < 50
+    t["now"] = 10.0                      # past the deadline mid-decode
+    fe.pump(1)
+    assert doomed.status == "expired" and doomed.request.done
+    assert eng.report.deadline_misses == 1
+    # the slot is free again: a later request decodes to completion and
+    # matches a run on a fresh engine (no contamination)
+    after = fe.submit(np.arange(2, 10, dtype=np.int32), uid=7,
+                      max_new_tokens=4)
+    fe.drain()
+    assert after.status == "done" and len(after.tokens) == 4
+    eng2 = _engine(cfg, params, slots=1)
+    eng2.submit(Request(uid=7, prompt=np.arange(2, 10, dtype=np.int32),
+                        max_new_tokens=4))
+    assert eng2.run()[0].tokens == after.request.tokens
+
+
+def test_deadline_expiry_in_wait_queue_counts_as_miss(setup):
+    cfg, params, *_ = setup
+    t = {"now": 0.0}
+    eng = _engine(cfg, params, slots=1, queue_limit=1,
+                  clock=lambda: t["now"])
+    fe = ServeFrontend(eng)
+    fe.submit(request=Request(uid=0,
+                              prompt=np.arange(1, 9, dtype=np.int32),
+                              max_new_tokens=3))
+    waiting = fe.submit(np.arange(1, 9, dtype=np.int32), uid=1,
+                        max_new_tokens=3, deadline_s=2.0)
+    assert waiting.status == "waiting"
+    t["now"] = 5.0
+    fe.drain()
+    assert waiting.status == "expired" and waiting.tokens == []
+    assert eng.report.deadline_misses == 1
+    assert [r.uid for r in fe.finished if r.status == "done"] == [0]
+
+
+# ---------------------------------------------------------------------------
+# zero-drain hot-swap (the acceptance-criterion demo, as a test)
+# ---------------------------------------------------------------------------
+def test_hot_swap_zero_drain_equivalence(setup):
+    """With requests in flight, swap(ticket_b): in-flight outputs are
+    bit-identical to the no-swap oracle, the next admission decodes
+    under ticket B's tile plans, and the skipped-tile stats differ
+    between the two tickets."""
+    cfg, params, masks_a, masks_b = setup
+    pa, pb = apply_masks(params, masks_a), apply_masks(params, masks_b)
+
+    oracle_eng = _engine(cfg, pa, masks=masks_a)
+    for r in _reqs(4, budget=8):
+        oracle_eng.submit(r)
+    oracle = {r.uid: list(r.tokens) for r in oracle_eng.run()}
+    skip_a = oracle_eng.report.skipped_tile_fraction
+
+    eng = _engine(cfg, pa, masks=masks_a)
+    for r in _reqs(4, budget=8):
+        eng.submit(r)
+    for _ in range(3):
+        eng.step()                        # all four requests mid-decode
+    gid = eng.swap(pb, masks=masks_b)
+    probe = Request(uid=99, prompt=np.arange(2, 10, dtype=np.int32),
+                    max_new_tokens=6)
+    eng.submit(probe)
+    done = {r.uid: r for r in eng.run()}
+
+    # in-flight requests: bit-identical to the swap-free oracle
+    for uid, toks in oracle.items():
+        assert done[uid].generation == 0
+        assert done[uid].tokens == toks
+    # the post-swap admission ran on ticket B's generation and matches
+    # a request served on a B-only engine
+    assert probe.generation == gid
+    solo = _engine(cfg, pb, masks=masks_b)
+    solo.submit(Request(uid=99, prompt=np.arange(2, 10, dtype=np.int32),
+                        max_new_tokens=6))
+    assert solo.run()[0].tokens == probe.tokens
+    # observable proof the plans changed: skipped-tile stats differ
+    rep = eng.report
+    assert rep.swaps == 1
+    assert rep.skipped_tile_fraction != skip_a
+    assert rep.skipped_tile_fraction == \
+        solo.report.skipped_tile_fraction
+
+
+def test_rollback_restores_previous_generation(setup):
+    cfg, params, masks_a, masks_b = setup
+    pa, pb = apply_masks(params, masks_a), apply_masks(params, masks_b)
+    eng = _engine(cfg, pa, masks=masks_a)
+    before = eng.smoke_decode(np.arange(1, 9, dtype=np.int32), 4)
+    gid = eng.swap(pb, masks=masks_b)
+    eng.rollback(gid)
+    assert eng.current_generation == 0
+    assert eng.report.swaps == 0
+    assert eng.smoke_decode(np.arange(1, 9, dtype=np.int32), 4) == before
+    # a generation that served traffic cannot be rolled back
+    gid = eng.swap(pb, masks=masks_b)
+    eng.submit(Request(uid=0, prompt=np.arange(1, 9, dtype=np.int32),
+                       max_new_tokens=2))
+    eng.step()
+    with pytest.raises(RuntimeError, match="served"):
+        eng.rollback(gid)
+
+
+# ---------------------------------------------------------------------------
+# ticket manager
+# ---------------------------------------------------------------------------
+def test_manager_registers_fingerprints_and_swaps_verified(setup,
+                                                           tickets):
+    cfg, params, *_ = setup
+    mgr = _manager(cfg, params)
+    rec_a = mgr.register("a", str(tickets / "a"))
+    rec_b = mgr.register("b", str(tickets / "b"))
+    assert len(rec_a.fingerprint) == 6
+    assert rec_a.recipe_name == "paper"
+    assert rec_a.fingerprint != rec_b.fingerprint
+
+    eng = mgr.make_engine("a", batch_slots=2, capacity=CAP)
+    for r in _reqs(2, budget=6):
+        eng.submit(r)
+    eng.step()                            # traffic in flight
+    ev = mgr.swap(eng, "b")
+    assert ev.accepted and ev.reason == "ok"
+    assert mgr.active == "b"
+    assert eng.current_generation == ev.gid
+    eng.run()
+    assert all(len(r.tokens) == 6 for r in eng._finished)
+
+
+def test_manager_rejects_arch_recipe_and_shape_mismatch(setup, tickets,
+                                                        tmp_path):
+    cfg, params, masks_a, _ = setup
+    # arch mismatch: metadata names a different architecture
+    lottery.export_ticket(str(tmp_path / "other"),
+                          lottery.snapshot(params), masks_a,
+                          meta={"arch": "some-other-arch",
+                                "recipe": {"name": "paper"}})
+    mgr = _manager(cfg, params)
+    with pytest.raises(TicketError) as e:
+        mgr.register("other", str(tmp_path / "other"))
+    assert e.value.reason == "arch_mismatch"
+    # recipe mismatch: deployment pinned to another recipe name
+    strict = _manager(cfg, params, expect_recipe="paper-quant")
+    with pytest.raises(TicketError) as e:
+        strict.register("a", str(tickets / "a"))
+    assert e.value.reason == "recipe_mismatch"
+    # shape mismatch: corrupt one stored mask's shape
+    import shutil
+    shutil.copytree(str(tickets / "a"), str(tmp_path / "bad"))
+    data = dict(np.load(str(tmp_path / "bad" / "ticket.npz")))
+    key = next(k for k in data if k.startswith("m:"))
+    data[key] = data[key][..., :-1]
+    np.savez_compressed(str(tmp_path / "bad" / "ticket.npz"), **data)
+    with pytest.raises(TicketMismatch) as e:
+        mgr.register("bad", str(tmp_path / "bad"))
+    assert e.value.reason == "shape_mismatch"
+    # swap of an unregistered name is refused
+    mgr.register("a", str(tickets / "a"))
+    eng = mgr.make_engine("a", batch_slots=2, capacity=CAP)
+    with pytest.raises(TicketError) as e:
+        mgr.swap(eng, "nope")
+    assert e.value.reason == "unknown_ticket"
+
+
+def test_manager_rolls_back_on_fingerprint_mismatch(setup, tickets):
+    """A candidate whose live smoke-decode disagrees with its recorded
+    fingerprint is rolled back; in-flight traffic still matches the
+    no-swap oracle afterwards."""
+    cfg, params, masks_a, _ = setup
+    pa = apply_masks(params, masks_a)
+    oracle_eng = _engine(cfg, pa, masks=masks_a)
+    for r in _reqs(2, budget=6):
+        oracle_eng.submit(r)
+    oracle = {r.uid: list(r.tokens) for r in oracle_eng.run()}
+
+    mgr = _manager(cfg, params)
+    mgr.register("a", str(tickets / "a"))
+    rec_b = mgr.register("b", str(tickets / "b"))
+    rec_b.fingerprint = tuple(t + 1 for t in rec_b.fingerprint)  # corrupt
+
+    eng = mgr.make_engine("a", batch_slots=2, capacity=CAP)
+    for r in _reqs(2, budget=6):
+        eng.submit(r)
+    eng.step()
+    ev = mgr.swap(eng, "b")
+    assert not ev.accepted and "rolled back" in ev.reason
+    assert ev.observed != ev.expected
+    assert mgr.active == "a"
+    assert eng.current_generation == 0    # generation discarded
+    assert eng.report.swaps == 0
+    done = {r.uid: r.tokens for r in eng.run()}
+    assert done == oracle
+
+
+# ---------------------------------------------------------------------------
+# heartbeat → health gate
+# ---------------------------------------------------------------------------
+def test_stale_heartbeat_closes_admission_and_recovers(setup, tmp_path):
+    cfg, params, *_ = setup
+    hb = HeartbeatMonitor(str(tmp_path / "hb"), deadline_s=0.05)
+    eng = _engine(cfg, params, slots=2, heartbeat=hb)
+    fe = ServeFrontend(eng)
+    fe.submit(np.arange(1, 9, dtype=np.int32), max_new_tokens=2)
+    fe.drain()                            # engine ticked → beat written
+    assert hb.age("engine") is not None
+    time.sleep(0.12)                      # decode loop "wedges"
+    with pytest.raises(SubmitRejected) as e:
+        fe.submit(np.arange(1, 9, dtype=np.int32), uid=5)
+    assert e.value.reason == "unhealthy"
+    assert not eng.health.healthy
+    eng.step()                            # loop resumes → fresh beat
+    h = fe.submit(np.arange(1, 9, dtype=np.int32), uid=6,
+                  max_new_tokens=3)
+    assert eng.health.healthy             # gate reopened automatically
+    fe.drain()
+    assert h.status == "done" and len(h.tokens) == 3
+
+
+# ---------------------------------------------------------------------------
+# encdec (audio) serve lane
+# ---------------------------------------------------------------------------
+def test_encdec_frames_lane_matches_full_forward_greedy():
+    from repro.api.adapters import EncDecAdapter
+    from repro.models import encdec
+
+    cfg = scaled_down(get_arch("whisper-tiny"), dtype="float32")
+    adapter = EncDecAdapter(cfg)
+    params = adapter.init_params(jax.random.PRNGKey(0))
+    prefill_fn, decode_fn = adapter.serve_fns()
+    eng = ServeEngine(params=params, cfg=cfg, prefill_fn=prefill_fn,
+                      decode_fn=decode_fn, batch_slots=2, capacity=32)
+    reqs = [Request(uid=i, prompt=np.arange(1 + i, 5 + i, dtype=np.int32),
+                    max_new_tokens=4, frames=adapter.serve_frames(i))
+            for i in range(3)]
+    for r in reqs:
+        eng.submit(r)
+    got = {r.uid: r.tokens for r in eng.run()}
+    assert all(len(t) == 4 for t in got.values())
+    # KV-cached engine decode == token-by-token full forward
+    for i in range(3):
+        frames = adapter.serve_frames(i)[None]
+        ctx = list(np.arange(1 + i, 5 + i, dtype=np.int32))
+        toks = []
+        for _ in range(4):
+            lg, _ = encdec.forward(
+                params, cfg,
+                {"frames": jnp.asarray(frames),
+                 "tokens": jnp.asarray(np.asarray(ctx, np.int32)[None])})
+            nxt = int(jnp.argmax(lg[0, -1]))
+            toks.append(nxt)
+            ctx.append(nxt)
+        assert got[i] == toks
+
+
+def test_registry_audio_family_serves():
+    from repro.api.registry import make_adapter, resolve_config
+    _, spec = resolve_config("whisper-tiny")
+    assert spec.serves
+    adapter = make_adapter("whisper-tiny", scale="tiny")
+    prefill_fn, decode_fn = adapter.serve_fns()
+    assert callable(prefill_fn) and callable(decode_fn)
+
+
+# ---------------------------------------------------------------------------
+# latency metrics
+# ---------------------------------------------------------------------------
+def test_report_latency_percentiles_populated(setup):
+    cfg, params, *_ = setup
+    eng = _engine(cfg, params, slots=2)
+    fe = ServeFrontend(eng)
+    for r in _reqs(4, budget=4):
+        fe.submit(request=r)
+    fe.drain()
+    rep = eng.report
+    assert rep.requests == 4
+    assert rep.ttft_p95 >= rep.ttft_p50 > 0
+    assert rep.tps_p95 >= rep.tps_p50 > 0
+    assert rep.deadline_misses == 0 and rep.swaps == 0
+    for r in fe.finished:
+        assert r.ttft is not None and r.ttft > 0
