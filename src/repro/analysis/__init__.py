@@ -1,0 +1,36 @@
+"""Sparsity lint: static verification of recipes, tile plans, and
+jitted hot paths.
+
+Three analyzers, one structured ``Finding`` model with stable rule
+codes (``findings.RULES``):
+
+* ``recipe_lint`` — R001–R009, recipe programs vs family capabilities;
+* ``invariants``  — P101–P112, tile plans / decode plans / crossbar
+  stats re-derived from the masks and compared;
+* ``jaxpr_audit`` — J201–J207, abstract traces of jitted hot paths
+  (dense routing misses, x64 promotions, host callbacks) plus a
+  compiled-HLO cross-check.
+
+``lint.lint_arch`` runs all three against a registered arch; the CLI
+surface is ``python -m repro.api lint [--arch NAME | --all]``.
+"""
+from repro.analysis.findings import (RULES, SEVERITIES, Finding, Report,
+                                     error, info, warning)
+from repro.analysis.invariants import (verify_decode_plan, verify_engine,
+                                       verify_mask_accounting,
+                                       verify_tile_plan, verify_xbar_stats)
+from repro.analysis.jaxpr_audit import (audit_closure, audit_compiled,
+                                        audit_hlo_text, collect_covered,
+                                        iter_eqns, unambiguous_covered)
+from repro.analysis.lint import lint_all, lint_arch
+from repro.analysis.recipe_lint import lint_recipe, lint_recipe_for_family
+
+__all__ = [
+    "RULES", "SEVERITIES", "Finding", "Report", "error", "warning", "info",
+    "lint_recipe", "lint_recipe_for_family",
+    "verify_tile_plan", "verify_decode_plan", "verify_xbar_stats",
+    "verify_mask_accounting", "verify_engine",
+    "audit_closure", "audit_compiled", "audit_hlo_text",
+    "collect_covered", "unambiguous_covered", "iter_eqns",
+    "lint_arch", "lint_all",
+]

@@ -1,0 +1,162 @@
+"""Shared finding model for the sparsity lint.
+
+Every analyzer — the recipe linter, the invariant verifier, the jaxpr
+auditor — reports through one structured ``Finding(severity, code,
+where, msg)`` so the CLI, CI gate, and tests consume a single surface.
+
+Rule codes are STABLE identifiers (documented in the README's rule
+table and asserted by ``tests/test_analysis.py``): a code never changes
+meaning, new rules get new codes.  ``RULES`` maps every code to its
+one-line contract; emitting an unregistered code is itself a bug
+(``Finding.__post_init__`` raises).
+
+Severities:
+  error   — the sparsity contract is broken: a silently-dense hot path,
+            a plan inconsistent with its mask, a recipe that cannot
+            run.  The CLI exits nonzero on any error finding.
+  warning — legal but almost certainly unintended (QAT before pruning,
+            unreachable sparsity targets, f64 in a hot trace).
+  info    — measurements worth surfacing (HLO collective traffic).
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Tuple
+
+SEVERITIES = ("error", "warning", "info")
+
+# ---------------------------------------------------------------------------
+# The rule-code registry.  README's "Static analysis" table is generated
+# from this dict; tests assert every emitted code is registered.
+# ---------------------------------------------------------------------------
+RULES: Dict[str, str] = {
+    # recipe linter -------------------------------------------------------
+    "R001": "recipe/stage does not validate (construction failed)",
+    "R002": "prune granularity unknown to the target family",
+    "R003": "non-monotonic target_sparsity: stage target already met "
+            "by an earlier stage (dead stage)",
+    "R004": "non-positive retrain budget (0 silently falls back to the "
+            "adapter default — it does NOT mean 'no retraining')",
+    "R005": "quantize stage before any prune stage (QAT calibrates a "
+            "dense model)",
+    "R006": "prune stage after a quantize stage (invalidates the QAT "
+            "calibration the quantize gate accepted)",
+    "R007": "target_sparsity unreachable within max_rounds at the "
+            "stage rate",
+    "R008": "duplicate stage names (resume + event attribution are "
+            "keyed by stage identity)",
+    "R009": "recipe commits no masks (no prune stage)",
+    # invariant verifier --------------------------------------------------
+    "P101": "TilePlan indices/counts malformed or out of bounds",
+    "P102": "TilePlan counts disagree with the mask's tile bitmap",
+    "P103": "TilePlan live-index set disagrees with the mask's tile "
+            "bitmap",
+    "P104": "TilePlan kmax/nmax below the max live count",
+    "P105": "transposed plan (idx_t/counts_t) is not the exact "
+            "transpose of the forward plan",
+    "P106": "flat live-tile coords (kk/nn) disagree with the bitmap",
+    "P107": "live/total tile accounting disagrees with the bitmap",
+    "P108": "geometry mismatch: mask shape vs tile/crossbar geometry",
+    "P109": "decode plan disagrees with the mask's tile reduction "
+            "(missing, extra, or stale plan entry)",
+    "P110": "PlanStats totals disagree with the per-projection plans",
+    "P111": "packing/XbarStats accounting disagrees with the mask",
+    "P112": "cross-generation inconsistency inside a ServeEngine",
+    # jaxpr auditor -------------------------------------------------------
+    "J201": "dense dot_general on a weight shape a TilePlan covers "
+            "(missed block-sparse routing)",
+    "J202": "float64 value in a hot-path trace (accidental x64 "
+            "promotion)",
+    "J203": "host callback inside a hot-path trace",
+    "J204": "hot-path closure is not jitted (per-call retrace/dispatch)",
+    "J205": "plan covers projections but the traced closure issues no "
+            "pallas_call at all (whole-path routing miss)",
+    "J206": "compiled artifact contains f64 tensors (HLO cross-check)",
+    "J207": "collective traffic in a hot-path artifact (HLO "
+            "cross-check)",
+}
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One lint result: ``severity`` ∈ {error, warning, info}, ``code``
+    a stable rule id from ``RULES``, ``where`` a location path (e.g.
+    ``vgg11/recipe:cnn-full/stage[2]:prune:index`` or
+    ``llama3.2-3b/decode/seg0.0.mlp.up``), ``msg`` the human account."""
+    severity: str
+    code: str
+    where: str
+    msg: str
+
+    def __post_init__(self):
+        if self.severity not in SEVERITIES:
+            raise ValueError(f"unknown severity {self.severity!r}; "
+                             f"known: {SEVERITIES}")
+        if self.code not in RULES:
+            raise ValueError(f"unregistered rule code {self.code!r} — "
+                             f"add it to analysis.findings.RULES")
+
+    def to_dict(self) -> dict:
+        return {"severity": self.severity, "code": self.code,
+                "where": self.where, "msg": self.msg}
+
+    def __str__(self) -> str:
+        return f"[{self.severity.upper():7s}] {self.code} {self.where}: " \
+               f"{self.msg}"
+
+
+def error(code: str, where: str, msg: str) -> Finding:
+    return Finding("error", code, where, msg)
+
+
+def warning(code: str, where: str, msg: str) -> Finding:
+    return Finding("warning", code, where, msg)
+
+
+def info(code: str, where: str, msg: str) -> Finding:
+    return Finding("info", code, where, msg)
+
+
+@dataclass
+class Report:
+    """An ordered collection of findings with severity accounting."""
+    findings: List[Finding] = field(default_factory=list)
+
+    def add(self, f: Finding) -> None:
+        self.findings.append(f)
+
+    def extend(self, fs: Iterable[Finding]) -> None:
+        self.findings.extend(fs)
+
+    @property
+    def errors(self) -> Tuple[Finding, ...]:
+        return tuple(f for f in self.findings if f.severity == "error")
+
+    @property
+    def warnings(self) -> Tuple[Finding, ...]:
+        return tuple(f for f in self.findings if f.severity == "warning")
+
+    @property
+    def ok(self) -> bool:
+        """True when no error-severity finding was recorded."""
+        return not self.errors
+
+    def codes(self) -> Tuple[str, ...]:
+        return tuple(f.code for f in self.findings)
+
+    def by_code(self, code: str) -> Tuple[Finding, ...]:
+        return tuple(f for f in self.findings if f.code == code)
+
+    def summary(self) -> dict:
+        counts = {s: 0 for s in SEVERITIES}
+        for f in self.findings:
+            counts[f.severity] += 1
+        return {"findings": len(self.findings), **counts, "ok": self.ok}
+
+    def to_dict(self) -> dict:
+        return {"findings": [f.to_dict() for f in self.findings],
+                "summary": self.summary()}
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), indent=2)

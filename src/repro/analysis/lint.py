@@ -1,0 +1,207 @@
+"""The lint driver: one arch → one ``Report``, all three analyzers.
+
+``lint_arch`` is deliberately a *static* pipeline — no training, no
+token generation.  It builds the real objects (adapter, masks, tile
+plans, a live ``ServeEngine`` for serving families) exactly the way a
+run would, then verifies them and traces the jitted hot paths
+abstractly:
+
+  1. recipe lint — the family's tuned recipe (or an explicit one)
+     against the family's capabilities (R-rules);
+  2. invariant verification — a ``structured_prune`` mask set at the
+     config's crossbar geometry, its per-leaf ``XbarStats`` accounting,
+     the decode/train tile plans vs the masks' tile reduction, and
+     cross-generation consistency after a live hot-swap (P-rules);
+  3. jaxpr audit — the jitted train step, prefill, and decode closures
+     traced with abstract/concrete batches, checked for dense routing
+     misses, x64 promotions, host callbacks (J-rules); ``hlo=True``
+     adds the compiled-artifact cross-check.
+
+Everything runs on CPU at ``scale="tiny"`` in seconds per arch, so the
+CI gate can afford ``lint --all``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence
+
+from repro.analysis.findings import Report
+from repro.analysis.invariants import (_walk_plan_leaves, verify_decode_plan,
+                                       verify_engine, verify_mask_accounting,
+                                       verify_tile_plan)
+from repro.analysis.jaxpr_audit import (audit_closure, audit_compiled,
+                                        unambiguous_covered)
+from repro.analysis.recipe_lint import lint_recipe_for_family
+
+# modest per-granularity fractions: enough pruning to produce dead
+# tiles at tiny scale without collapsing any layer to all-zero
+_LINT_FRACTION = 0.3
+_EXPERT_FRACTION = 0.25
+
+
+def _lint_schedule(spec) -> Sequence:
+    grans = spec.granularities or ("filter", "channel", "index")
+    return [(g, _EXPERT_FRACTION if g == "expert" else _LINT_FRACTION)
+            for g in grans]
+
+
+def lint_arch(arch: Any, *, recipe: Any = None, scale: str = "tiny",
+              seed: int = 0, hlo: bool = False) -> Report:
+    """Run all three analyzers against one registered arch.
+
+    ``recipe`` overrides the family's tuned recipe (name, path, dict,
+    or instance); ``hlo=True`` additionally compiles the serving
+    prefill and cross-checks the optimized HLO (slower).
+    """
+    import jax
+
+    from repro.api.registry import make_adapter, resolve_config
+    from repro.api.session import structured_prune
+    from repro.configs import PruneConfig
+
+    report = Report()
+    cfg, spec = resolve_config(arch)
+    name = arch if isinstance(arch, str) else getattr(cfg, "name", "arch")
+    prefix = f"{name}/"
+
+    # -- 1. recipe lint ----------------------------------------------------
+    rec = recipe if recipe is not None else spec.recipe
+    if rec is not None:
+        report.extend(lint_recipe_for_family(rec, spec,
+                                             where_prefix=prefix))
+
+    # -- 2. masks + plans at the config's crossbar geometry ----------------
+    adapter = make_adapter(arch, scale=scale)
+    params = adapter.init_params(jax.random.PRNGKey(seed))
+    pcfg = PruneConfig()
+    masks = structured_prune(params, _lint_schedule(spec),
+                             prunable=adapter.prunable,
+                             conv_pred=adapter.conv_pred, cfg=pcfg)
+    report.extend(verify_mask_accounting(
+        masks, adapter.conv_pred, rows=pcfg.xbar_rows,
+        cols=pcfg.xbar_cols, where=f"{name}/masks"))
+
+    # -- 3. family-shaped plan verification + jaxpr audit ------------------
+    if spec.family == "cnn":
+        _lint_cnn(report, name, adapter, params, masks)
+    else:
+        _lint_lm(report, name, adapter, params, masks)
+
+    if spec.serves:
+        _lint_serving(report, name, adapter, spec, params, masks, hlo=hlo)
+    return report
+
+
+def _lint_cnn(report: Report, name: str, adapter, params, masks) -> None:
+    import jax
+
+    from repro.train.plans import cnn_train_plan
+
+    plans, stats = cnn_train_plan(masks, interpret=True)
+    for path, leaf in _walk_plan_leaves(plans):
+        report.extend(verify_tile_plan(
+            leaf, where=f"{name}/train_plan/{path}"))
+    covered = unambiguous_covered(plans, params)
+    cfg = adapter.cfg
+    cnn = adapter._cnn
+
+    def loss(p, state, batch):
+        l, (new_state, _) = cnn.loss_fn(p, state, cfg, batch, train=True,
+                                        plans=plans)
+        return l, (new_state, {})
+
+    step = jax.jit(jax.value_and_grad(loss, has_aux=True))
+    batch = adapter._batch(0, 2)
+    report.extend(audit_closure(
+        step, [params, adapter._bn0, batch], covered=covered,
+        where=f"{name}/train_step"))
+
+
+def _lint_lm(report: Report, name: str, adapter, params, masks) -> None:
+    import jax
+
+    kwargs: Dict[str, Any] = {}
+    covered: Dict = {}
+    if adapter.family == "audio":
+        # enc-dec masks carry no decode-plan structure; the trace is
+        # audited for promotions/callbacks only
+        mod, cfg = adapter._mod, adapter.cfg
+        loss = lambda p, batch: mod.loss_fn(p, cfg, batch)
+    else:
+        from repro.models.plans import build_decode_plan
+        from repro.train.plans import lm_train_plan
+
+        plan, stats = build_decode_plan(masks, interpret=True)
+        report.extend(verify_decode_plan(
+            masks, plan, stats, where=f"{name}/decode_plan"))
+        train_plan, _ = lm_train_plan(masks, interpret=True)
+        covered = unambiguous_covered(train_plan, params)
+        tfm, cfg = adapter._tfm, adapter.cfg
+        loss = lambda p, batch: tfm.loss_fn(p, cfg, batch,
+                                            plan=train_plan)
+
+    step = jax.jit(jax.value_and_grad(loss, has_aux=True))
+    batch = adapter._batch(0)
+    report.extend(audit_closure(
+        step, [params, batch], covered=covered,
+        where=f"{name}/train_step", **kwargs))
+
+
+def _lint_serving(report: Report, name: str, adapter, spec, params,
+                  masks, *, hlo: bool = False) -> None:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.masks import apply_masks
+    from repro.serve.engine import ServeEngine
+
+    cfg = adapter.cfg   # the SCALED config the params were built for
+    prefill_fn, decode_fn = adapter.serve_fns()
+    masked = apply_masks(params, masks)
+    eng = ServeEngine(params=masked, cfg=cfg, prefill_fn=prefill_fn,
+                      decode_fn=decode_fn, masks=masks, interpret=True,
+                      batch_slots=2, capacity=64)
+    gen = eng.generations[-1]
+    covered = unambiguous_covered(gen.plan, masked)
+
+    toks = jnp.zeros((1, 8), jnp.int32)
+    if spec.family == "audio":
+        frames = jnp.zeros((1, int(cfg.encoder_seq_len),
+                            int(cfg.d_model)), jnp.float32)
+        prefill, pargs = gen.prefill_frames, [masked, toks, frames]
+    else:
+        prefill, pargs = gen.prefill_exact, [masked, toks]
+    report.extend(audit_closure(prefill, pargs, covered=covered,
+                                where=f"{name}/prefill"))
+
+    # decode runs against SLOT-shaped caches (batch axis = engine
+    # slots), derived abstractly: eval_shape the prefill, zero-fill,
+    # re-lane through the engine's own cache plumbing
+    logits_s, caches_s = jax.eval_shape(prefill, *pargs)
+    zeros = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), caches_s)
+    slot_caches = eng._empty_slot_caches(zeros)
+    slot_s = jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), slot_caches)
+    tok = jax.ShapeDtypeStruct((eng.slots, 1), jnp.int32)
+    report.extend(audit_closure(
+        gen.decode, [masked, slot_s, tok], covered=covered,
+        where=f"{name}/decode"))
+
+    # live hot-swap, then cross-generation consistency (P112)
+    eng.swap(masked, masks)
+    report.extend(verify_engine(eng, where=f"{name}/engine"))
+
+    if hlo:
+        report.extend(audit_compiled(prefill, pargs,
+                                     where=f"{name}/prefill.hlo"))
+
+
+def lint_all(names: Optional[Sequence[str]] = None, *,
+             scale: str = "tiny", seed: int = 0,
+             hlo: bool = False) -> Dict[str, Report]:
+    """``lint_arch`` over every registered arch (or ``names``)."""
+    from repro.api.registry import list_adaptable
+
+    out: Dict[str, Report] = {}
+    for name in (names if names is not None else list_adaptable()):
+        out[name] = lint_arch(name, scale=scale, seed=seed, hlo=hlo)
+    return out

@@ -215,6 +215,29 @@ def cmd_recipes(args) -> int:
     return EXIT_OK
 
 
+def cmd_lint(args) -> int:
+    """Static sparsity lint; exits 1 on any error-severity finding."""
+    from repro.analysis import lint_arch
+    from repro.api.registry import list_adaptable
+
+    names = list_adaptable() if args.all else [args.arch]
+    any_error = False
+    for name in names:
+        rep = lint_arch(name, recipe=args.recipe, scale=args.scale,
+                        seed=args.seed, hlo=args.hlo)
+        any_error = any_error or not rep.ok
+        summary = rep.summary()
+        _emit({"arch": name, **rep.to_dict()}, args.json,
+              f"{name:28s} findings={summary['findings']} "
+              f"errors={summary['error']} "
+              f"warnings={summary['warning']} "
+              f"{'OK' if rep.ok else 'FAIL'}")
+        if not args.json:
+            for f in rep.findings:
+                print(f"  {f}")
+    return 1 if any_error else EXIT_OK
+
+
 def cmd_finetune(args) -> int:
     from repro.api.registry import make_adapter
     from repro.core.lottery import ticket_meta
@@ -640,6 +663,30 @@ def build_parser() -> argparse.ArgumentParser:
                             "programs) and which families they tune")
     p.add_argument("--json", action="store_true")
     p.set_defaults(fn=cmd_recipes)
+
+
+    p = sub.add_parser("lint",
+                       help="static sparsity lint: recipe programs, "
+                            "tile-plan invariants, and jitted hot-path "
+                            "traces (exit 1 on error findings)")
+    g = p.add_mutually_exclusive_group(required=True)
+    g.add_argument("--arch", default=None,
+                   help="any name from `python -m repro.api archs`")
+    g.add_argument("--all", action="store_true",
+                   help="lint every registered arch")
+    p.add_argument("--recipe", default=None,
+                   help="recipe to lint instead of the family default: "
+                        "a registered name or a path to a recipe .json")
+    p.add_argument("--scale", default="tiny", choices=("tiny", "full"),
+                   help="config scale the masks/plans/traces are built "
+                        "at (tiny: CPU-seconds per arch)")
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--hlo", action="store_true",
+                   help="also compile the serving prefill and "
+                        "cross-check the optimized HLO (slower)")
+    p.add_argument("--json", action="store_true",
+                   help="one JSON report object per arch line")
+    p.set_defaults(fn=cmd_lint)
 
     p = sub.add_parser("prune", help="run a prune recipe (PruningSession)")
     _add_common(p)

@@ -80,27 +80,38 @@ class Stage:
     granularities: Tuple[str, ...] = ()
 
     def __post_init__(self):
+        # validation errors name the offending field (and, through
+        # ``Recipe``'s wrapping, the recipe name + stage index) — the
+        # analysis.recipe_lint R001 rule reuses these messages verbatim
         if self.kind not in STAGE_KINDS:
-            raise ValueError(f"unknown stage kind {self.kind!r}; "
-                             f"known: {STAGE_KINDS}")
+            raise ValueError(f"field 'kind': unknown stage kind "
+                             f"{self.kind!r}; known: {STAGE_KINDS}")
         if self.kind == "prune":
             if not self.granularity:
-                raise ValueError("prune stage needs a granularity")
+                raise ValueError("field 'granularity': prune stage "
+                                 "needs a granularity")
             require_strategies([self.granularity])
             if not (0.0 < self.rate < 1.0):
-                raise ValueError(f"prune rate must be in (0, 1), "
-                                 f"got {self.rate}")
+                raise ValueError(f"field 'rate': prune rate must be in "
+                                 f"(0, 1), got {self.rate}")
+            if self.target_sparsity is not None and not (
+                    0.0 < self.target_sparsity < 1.0):
+                raise ValueError(f"field 'target_sparsity': must be in "
+                                 f"(0, 1), got {self.target_sparsity}")
+            if self.max_rounds is not None and self.max_rounds < 1:
+                raise ValueError(f"field 'max_rounds': must be >= 1, "
+                                 f"got {self.max_rounds}")
         elif self.kind == "quantize":
             if self.bits not in (8, 16):
-                raise ValueError(f"quantize bits must be 8 or 16, "
-                                 f"got {self.bits}")
+                raise ValueError(f"field 'bits': quantize bits must be "
+                                 f"8 or 16, got {self.bits}")
         elif self.kind == "ablate":
             sweep = self.granularities or ABLATION_SWEEP
             require_strategies(sweep)
             object.__setattr__(self, "granularities", tuple(sweep))
             if not (0.0 < self.rate < 1.0):
-                raise ValueError(f"ablate rate must be in (0, 1), "
-                                 f"got {self.rate}")
+                raise ValueError(f"field 'rate': ablate rate must be in "
+                                 f"(0, 1), got {self.rate}")
         if not self.name:
             object.__setattr__(self, "name", self._default_name())
 
@@ -135,6 +146,11 @@ class Stage:
         d = dict(d)
         if "granularities" in d:
             d["granularities"] = tuple(d["granularities"])
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = sorted(set(d) - known)
+        if unknown:
+            raise ValueError(f"unknown stage field(s) {unknown}; "
+                             f"known: {sorted(known)}")
         return cls(**d)
 
 
@@ -160,9 +176,20 @@ class Recipe:
     def __post_init__(self):
         if not self.stages:
             raise ValueError(f"recipe {self.name!r} has no stages")
-        object.__setattr__(self, "stages", tuple(
-            s if isinstance(s, Stage) else Stage.from_dict(s)
-            for s in self.stages))
+        stages = []
+        for i, s in enumerate(self.stages):
+            if isinstance(s, Stage):
+                stages.append(s)
+                continue
+            try:
+                stages.append(Stage.from_dict(s))
+            except (ValueError, TypeError, KeyError) as e:
+                label = ""
+                if isinstance(s, dict) and (s.get("name") or s.get("kind")):
+                    label = f" ({s.get('name') or s.get('kind')})"
+                raise type(e)(
+                    f"recipe {self.name!r} stage[{i}]{label}: {e}") from e
+        object.__setattr__(self, "stages", tuple(stages))
 
     @property
     def prune_granularities(self) -> Tuple[str, ...]:
@@ -181,8 +208,10 @@ class Recipe:
 
     @classmethod
     def from_dict(cls, d: dict) -> "Recipe":
+        # raw stage dicts go through __post_init__, which wraps their
+        # validation errors with the recipe name + stage index/name
         return cls(name=d["name"], description=d.get("description", ""),
-                   stages=tuple(Stage.from_dict(s) for s in d["stages"]))
+                   stages=tuple(d["stages"]))
 
     def to_json(self) -> str:
         return json.dumps(self.to_dict(), indent=2)

@@ -43,6 +43,10 @@ class FamilySpec:
     conv_pred: Optional[Callable[[str], bool]] = None
     # None → PruneConfig.granularities (the paper's schedule)
     granularities: Optional[Tuple[str, ...]] = None
+    # granularities that exist in the strategy registry but are inert
+    # for this family (e.g. `expert` outside MoE exposes no prunable
+    # groups) — the recipe linter flags recipes that schedule them
+    excluded_granularities: Tuple[str, ...] = ()
     # tuned full-scale prune program (registered recipe name); applied
     # at scale="full" only — tiny smoke runs keep the cheap flat
     # schedule above
@@ -72,6 +76,14 @@ def get_family(family: str) -> FamilySpec:
 
 def available_families() -> Tuple[str, ...]:
     return tuple(sorted(_FAMILIES))
+
+
+def family_granularities(spec: FamilySpec) -> Tuple[str, ...]:
+    """Granularities a recipe may schedule for this family: every
+    registered strategy minus the family's exclusions."""
+    from repro.core.strategies import available_strategies
+    return tuple(g for g in available_strategies()
+                 if g not in spec.excluded_granularities)
 
 
 def _tiny_arch(cfg: ArchConfig) -> ArchConfig:
@@ -136,6 +148,7 @@ for _fam in ("dense", "moe", "hybrid", "ssm", "vlm"):
         prunable=family_prunable(_fam),
         granularities=(("expert", "filter", "channel", "index")
                        if _fam == "moe" else None),
+        excluded_granularities=() if _fam == "moe" else ("expert",),
         recipe="moe-full" if _fam == "moe" else "dense-full",
         scale_tiny=_tiny_arch,
         smoke_kwargs=_LM_SMOKE,
@@ -146,6 +159,7 @@ register_family(FamilySpec(
     family="audio",
     adapter_factory=EncDecAdapter,
     prunable=family_prunable("audio"),
+    excluded_granularities=("expert",),
     recipe="dense-full",
     scale_tiny=_tiny_arch,
     smoke_kwargs=dict(steps=4, batch_size=2, seq_len=12, eval_batches=1),
@@ -157,6 +171,7 @@ register_family(FamilySpec(
     adapter_factory=CNNAdapter,
     prunable=family_prunable("cnn"),
     conv_pred=cnn_conv_path,
+    excluded_granularities=("expert",),
     recipe="cnn-full",
     scale_tiny=scaled_down_cnn,
     smoke_kwargs=dict(steps=6, batch_size=8, eval_batches=1,

@@ -23,6 +23,16 @@ RGLRU = "rglru"          # recurrentgemma RG-LRU recurrent block
 MLSTM = "mlstm"          # xLSTM matrix-LSTM block
 SLSTM = "slstm"          # xLSTM scalar-LSTM block
 
+# ---------------------------------------------------------------------------
+# Hardware tile geometry.  The paper's ReRAM crossbar and the TPU MXU
+# share one 128×128 weight-tile shape; this single constant is the
+# source of truth for every kernel tile default, the packing lane
+# width, and ``PruneConfig.xbar_rows/xbar_cols``.  It lives here (the
+# framework-free config layer) so any module can import it without
+# touching jax or pallas.
+# ---------------------------------------------------------------------------
+MXU_TILE = 128
+
 
 @dataclass(frozen=True)
 class MoEConfig:
@@ -86,8 +96,8 @@ class PruneConfig:
     prune_fraction: float = 0.25       # p: fraction of remaining weights pruned / iter
     max_iters: int = 20                # MAX_ITER
     epochs_per_iter: int = 1           # E (paper: epochs; here: eval-gated rounds)
-    xbar_rows: int = 128               # ReRAM crossbar geometry == TPU tile geometry
-    xbar_cols: int = 128
+    xbar_rows: int = MXU_TILE          # ReRAM crossbar geometry == TPU tile geometry
+    xbar_cols: int = MXU_TILE
     accuracy_tolerance: float = 0.0    # allowed drop vs baseline ("no accuracy drop")
     granularities: Tuple[str, ...] = ("filter", "channel", "index")
     # named repro.api.recipes recipe; overrides `granularities` when set

@@ -30,8 +30,10 @@ from typing import Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-XBAR_ROWS = 128
-XBAR_COLS = 128
+from repro.configs.base import MXU_TILE
+
+XBAR_ROWS = MXU_TILE
+XBAR_COLS = MXU_TILE
 
 
 # ---------------------------------------------------------------------------

@@ -22,7 +22,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-LANE = 128
+from repro.configs.base import MXU_TILE
+
+LANE = MXU_TILE
 
 
 def _live_columns(masks_up: np.ndarray, masks_gate: Optional[np.ndarray],

@@ -26,13 +26,15 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.core.crossbar import XBAR_COLS, XBAR_ROWS
+
 # paper / ISAAC [2] constants
 XBARS_PER_TILE = 96
 N_TILES = 256
 TOTAL_XBARS = XBARS_PER_TILE * N_TILES          # 24576
 XBAR_FREQ_HZ = 10e6
 TRAIN_PASSES = 3.0                              # fwd + err-bwd + wgrad
-ACT_CELLS_PER_XBAR = 128 * 128
+ACT_CELLS_PER_XBAR = XBAR_ROWS * XBAR_COLS
 # ISAAC stores 16-bit fixed-point values in 2-bit cells: 8 cells/weight.
 # This is why an unpruned CNN nearly saturates the 24576-crossbar chip
 # (paper §V.C: ">80% of the crossbars" for ResNet-18 C11-C17) and why

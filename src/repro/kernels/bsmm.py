@@ -30,7 +30,33 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.configs.base import MXU_TILE
 from repro.kernels.compat import CompilerParams
+
+
+class GeometryError(ValueError):
+    """A mask/weight shape disagrees with the tile/crossbar geometry.
+
+    Raised where the disagreement is detected (plan construction, plan
+    application) instead of surfacing later as an opaque index error
+    deep inside a Pallas grid.  Carries the offending ``shape``, the
+    ``tile`` edge, and a ``where`` location so lint findings and
+    tracebacks can name the exact projection.
+    """
+
+    def __init__(self, reason: str, *, shape=None, tile=None, where=""):
+        self.reason = reason
+        self.shape = None if shape is None else tuple(shape)
+        self.tile = tile
+        self.where = where
+        parts = [reason]
+        if shape is not None:
+            parts.append(f"shape={self.shape}")
+        if tile is not None:
+            parts.append(f"tile={tile}")
+        if where:
+            parts.append(f"at {where}")
+        super().__init__(" | ".join(parts))
 
 
 def default_interpret() -> bool:
@@ -39,7 +65,8 @@ def default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def tile_bitmap(mask: np.ndarray, bk: int = 128, bn: int = 128) -> np.ndarray:
+def tile_bitmap(mask: np.ndarray, bk: int = MXU_TILE,
+                bn: int = MXU_TILE) -> np.ndarray:
     """Elementwise {0,1} mask (K, N) → tile liveness (⌈K/bk⌉, ⌈N/bn⌉)."""
     m = np.asarray(mask) != 0
     K, N = m.shape
@@ -86,8 +113,8 @@ def _bsmm_kernel(count_ref, idx_ref, x_ref, w_ref, o_ref, acc_ref):
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
-def bsmm_pallas(x, w, tile_mask: np.ndarray, *, bm: int = 128,
-                bk: int = 128, bn: int = 128,
+def bsmm_pallas(x, w, tile_mask: np.ndarray, *, bm: int = MXU_TILE,
+                bk: int = MXU_TILE, bn: int = MXU_TILE,
                 interpret: bool = True):
     """x: (M, K) @ block-sparse w: (K, N) → (M, N).
 
@@ -97,9 +124,12 @@ def bsmm_pallas(x, w, tile_mask: np.ndarray, *, bm: int = 128,
     """
     M, K = x.shape
     K2, N = w.shape
-    assert K == K2, (x.shape, w.shape)
-    assert M % bm == 0 and K % bk == 0 and N % bn == 0, \
-        f"shapes must tile: {(M, K, N)} vs {(bm, bk, bn)}"
+    if K != K2:
+        raise GeometryError("x/w contraction dims disagree",
+                            shape=(K, K2), where="bsmm_pallas")
+    if M % bm or K % bk or N % bn:
+        raise GeometryError(f"shapes must tile {(bm, bk, bn)}",
+                            shape=(M, K, N), where="bsmm_pallas")
     idx, counts, kmax = compact_tile_indices(tile_mask)
     assert idx.shape[0] == N // bn and tile_mask.shape[0] == K // bk
     return _bsmm_compact(x, w, idx, counts, kmax, bm=bm, bk=bk, bn=bn,
@@ -166,15 +196,32 @@ class TilePlan(NamedTuple):
     nn: Optional[np.ndarray] = None       # (L,) N-tile id of each live tile
 
 
-def make_tile_plan(mask: np.ndarray, *, tile: int = 128,
-                   interpret: bool = True) -> Optional[TilePlan]:
-    """Elementwise {0,1} mask (K, N) → ``TilePlan`` or None if the shape
-    does not tile evenly (caller falls back to a dense matmul)."""
+def make_tile_plan(mask: np.ndarray, *, tile: int = MXU_TILE,
+                   interpret: bool = True,
+                   strict: bool = False,
+                   where: str = "make_tile_plan") -> Optional[TilePlan]:
+    """Elementwise {0,1} mask (K, N) → ``TilePlan``.
+
+    A shape that does not tile evenly returns ``None`` (the caller's
+    dense fallback) — or, with ``strict=True``, raises a structured
+    ``GeometryError`` naming the shape/tile/location, for callers that
+    expect the geometry to hold (lint, tests, TPU launches).  An
+    invalid ``tile`` always raises.
+    """
+    if tile <= 0:
+        raise GeometryError(f"tile edge must be positive, got {tile}",
+                            tile=tile, where=where)
     m = np.asarray(mask)
     if m.ndim != 2:
+        if strict:
+            raise GeometryError("mask must be 2-D to tile",
+                                shape=m.shape, tile=tile, where=where)
         return None
     K, N = m.shape
     if K == 0 or N == 0 or K % tile or N % tile:
+        if strict:
+            raise GeometryError("mask shape does not tile evenly",
+                                shape=m.shape, tile=tile, where=where)
         return None
     bitmap = tile_bitmap(m, tile, tile)
     idx, counts, kmax = compact_tile_indices(bitmap)
@@ -352,6 +399,19 @@ def plan_matmul(x, w, plan: Optional[TilePlan]):
     lead = x.shape[:-1]
     K = x.shape[-1]
     N = w.shape[-1]
+    # a stale or mis-routed plan would otherwise fail far downstream as
+    # an opaque Pallas grid/index error — name the disagreement here
+    planK = plan.counts_t.shape[0] * plan.tile \
+        if plan.counts_t is not None else None
+    planN = plan.counts.shape[0] * plan.tile
+    if w.shape[-2] != K:
+        raise GeometryError("x/w contraction dims disagree",
+                            shape=(K, w.shape[-2]), where="plan_matmul")
+    if N != planN or (planK is not None and K != planK):
+        raise GeometryError(
+            f"TilePlan covers ({planK}, {planN}) but the weight is "
+            f"({K}, {N}) — plan built from different masks?",
+            shape=(K, N), tile=plan.tile, where="plan_matmul")
     M = int(np.prod(lead)) if lead else 1
     x2 = x.reshape(M, K)
     # pad M to a multiple of 8 (f32 sublane); large M tiles at 128
@@ -395,12 +455,15 @@ def _masked_kernel(x_ref, w_ref, m_ref, o_ref, acc_ref):
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
-def masked_matmul_pallas(x, w, mask, *, bm: int = 128, bk: int = 128,
-                         bn: int = 128, interpret: bool = True):
+def masked_matmul_pallas(x, w, mask, *, bm: int = MXU_TILE,
+                         bk: int = MXU_TILE, bn: int = MXU_TILE,
+                         interpret: bool = True):
     """Elementwise-masked matmul with per-tile MXU skip (no DMA skip)."""
     M, K = x.shape
     _, N = w.shape
-    assert M % bm == 0 and K % bk == 0 and N % bn == 0
+    if M % bm or K % bk or N % bn:
+        raise GeometryError(f"shapes must tile {(bm, bk, bn)}",
+                            shape=(M, K, N), where="masked_matmul_pallas")
     grid = (M // bm, N // bn, K // bk)
     kernel = pl.pallas_call(
         _masked_kernel,

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.configs.base import MXU_TILE
 from repro.kernels.compat import CompilerParams
 
 NEG_INF = -1e30
@@ -66,8 +67,9 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
                        / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
 
 
-def flash_attention(q, k, v, *, causal: bool = True, bq: int = 128,
-                    bk: int = 128, interpret: bool = True):
+def flash_attention(q, k, v, *, causal: bool = True,
+                    bq: int = MXU_TILE, bk: int = MXU_TILE,
+                    interpret: bool = True):
     """q: (B, S, Hq, hd); k/v: (B, S, Hkv, hd) → (B, S, Hq, hd)."""
     B, S, Hq, hd = q.shape
     Hkv = k.shape[2]

@@ -11,20 +11,22 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
+from repro.configs.base import MXU_TILE
 from repro.kernels import ref
 from repro.kernels.bsmm import (make_tile_plan, plan_matmul,
                                 tile_bitmap)  # noqa: F401  (re-export)
 from repro.kernels.tile_stats import tile_stats_pallas
 
 
-def tile_density(mask: np.ndarray, bk: int = 128, bn: int = 128) -> float:
+def tile_density(mask: np.ndarray, bk: int = MXU_TILE,
+                 bn: int = MXU_TILE) -> float:
     """Fraction of live tiles — the kernel's compute/bandwidth cost."""
     bm = tile_bitmap(mask, bk, bn)
     return float(bm.mean())
 
 
-def sparse_dense(x, w, mask: np.ndarray, *, bk: int = 128,
-                 bn: int = 128, interpret: bool = True):
+def sparse_dense(x, w, mask: np.ndarray, *, bk: int = MXU_TILE,
+                 bn: int = MXU_TILE, interpret: bool = True):
     """x (..., K) @ pruned w (K, N) skipping dead 128×128 tiles.
 
     mask: host numpy elementwise {0,1} (static — pruning is offline).
@@ -47,7 +49,8 @@ def sparse_dense(x, w, mask: np.ndarray, *, bk: int = 128,
     return plan_matmul(x, w * jnp.asarray(mask, w.dtype), plan)
 
 
-def tile_stats(w, *, bk: int = 128, bn: int = 128, interpret: bool = True):
+def tile_stats(w, *, bk: int = MXU_TILE, bn: int = MXU_TILE,
+               interpret: bool = True):
     """Device-side per-tile (liveness, Σ|w|); pads ragged edges."""
     K, N = w.shape
     pk, pn = (-K) % bk, (-N) % bn

@@ -4,6 +4,8 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
+from repro.configs.base import MXU_TILE
+
 
 def expand_tile_mask(tile_mask, bk: int, bn: int, K: int, N: int):
     """(K/bk, N/bn) {0,1} → (K, N) elementwise mask."""
@@ -11,7 +13,7 @@ def expand_tile_mask(tile_mask, bk: int, bn: int, K: int, N: int):
     return m[:K, :N]
 
 
-def bsmm_ref(x, w, tile_mask, bk: int = 128, bn: int = 128):
+def bsmm_ref(x, w, tile_mask, bk: int = MXU_TILE, bn: int = MXU_TILE):
     """Block-sparse matmul oracle: x @ (w ⊙ expand(tile_mask)).
 
     x: (M, K); w: (K, N); tile_mask: (ceil(K/bk), ceil(N/bn)).
@@ -21,7 +23,7 @@ def bsmm_ref(x, w, tile_mask, bk: int = 128, bn: int = 128):
     return jnp.dot(x, w * m, preferred_element_type=jnp.float32).astype(x.dtype)
 
 
-def tile_stats_ref(w, bk: int = 128, bn: int = 128):
+def tile_stats_ref(w, bk: int = MXU_TILE, bn: int = MXU_TILE):
     """Per 128×128 tile: (any-nonzero, sum|w|) — oracle for tile_stats.
 
     w: (K, N) → (nt_k, nt_n) bool liveness + (nt_k, nt_n) f32 |w| sums.

@@ -13,6 +13,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.configs.base import MXU_TILE
+
 
 def _tile_stats_kernel(w_ref, live_ref, sum_ref):
     blk = w_ref[...].astype(jnp.float32)
@@ -36,7 +38,7 @@ def tile_stats_for_config(w, prune_cfg, *, interpret: bool = True):
     return tile_stats_pallas(w, bk=bk, bn=bn, interpret=interpret)
 
 
-def tile_stats_pallas(w, *, bk: int = 128, bn: int = 128,
+def tile_stats_pallas(w, *, bk: int = MXU_TILE, bn: int = MXU_TILE,
                       interpret: bool = True):
     """w: (K, N) → (live (Kt, Nt) int32, sums (Kt, Nt) f32)."""
     K, N = w.shape

@@ -44,6 +44,22 @@ def _shape_bytes(shape_str: str) -> int:
     return total
 
 
+def hlo_dtype_census(hlo_text: str) -> Dict[str, int]:
+    """Count shape occurrences per known dtype in an HLO text.
+
+    Used by the jaxpr auditor's compiled-artifact cross-check: an f64
+    entry in an optimized module means an x64 promotion survived all
+    the way through compilation (rule J206).  Unknown dtype tokens are
+    ignored, like in ``_shape_bytes``.
+    """
+    census: Dict[str, int] = {}
+    for m in _SHAPE_RE.finditer(hlo_text):
+        dt = m.group(1)
+        if dt in _DTYPE_BYTES:
+            census[dt] = census.get(dt, 0) + 1
+    return census
+
+
 @dataclass
 class CollectiveStats:
     bytes_by_kind: Dict[str, int] = field(default_factory=dict)

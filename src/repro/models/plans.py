@@ -27,7 +27,8 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.kernels.bsmm import TilePlan, make_tile_plan
+from repro.configs.base import MXU_TILE
+from repro.kernels.bsmm import GeometryError, TilePlan, make_tile_plan
 
 # projection keys routed through the bsmm kernel
 _ATTN_KEYS = ("wq", "wk", "wv", "wo")
@@ -71,13 +72,15 @@ def _union_mask(mask) -> Optional[np.ndarray]:
 
 
 def _plan_group(masks: Dict[str, Any], keys, label: str, stats: PlanStats,
-                *, tile: int, interpret: bool) -> Optional[Dict[str, TilePlan]]:
+                *, tile: int, interpret: bool,
+                strict: bool = False) -> Optional[Dict[str, TilePlan]]:
     group: Dict[str, TilePlan] = {}
     for key in keys:
         m2 = _union_mask(masks.get(key))
         if m2 is None:
             continue
-        plan = make_tile_plan(m2, tile=tile, interpret=interpret)
+        plan = make_tile_plan(m2, tile=tile, interpret=interpret,
+                              strict=strict, where=f"{label}.{key}")
         if plan is None:                  # shape does not tile — stay dense
             stats.dense_fallback += 1
             continue
@@ -90,14 +93,21 @@ def _plan_group(masks: Dict[str, Any], keys, label: str, stats: PlanStats,
     return group or None
 
 
-def build_decode_plan(masks, *, tile: int = 128, interpret: bool = True
+def build_decode_plan(masks, *, tile: int = MXU_TILE,
+                      interpret: bool = True, strict: bool = False
                       ) -> Tuple[Optional[list], PlanStats]:
     """Mask pytree → (plan mirroring params['segments'], PlanStats).
 
     Returns ``(None, empty stats)`` when the masks carry no routable
     structure (non-transformer params, MLA attention, MoE-only FFNs —
-    those run dense).
+    those run dense).  ``strict=True`` turns per-projection dense
+    fallbacks (shapes that don't tile) into a ``GeometryError`` naming
+    the projection — for callers that expect full coverage.  An invalid
+    ``tile`` raises ``GeometryError`` either way.
     """
+    if tile <= 0:
+        raise GeometryError(f"tile edge must be positive, got {tile}",
+                            tile=tile, where="build_decode_plan")
     stats = PlanStats()
     if not isinstance(masks, dict) or "segments" not in masks:
         return None, stats
@@ -115,13 +125,15 @@ def build_decode_plan(masks, *, tile: int = 128, interpret: bool = True
             # is skipped: its dict carries w_dq/w_uq instead of wq.
             if isinstance(attn, dict) and "wq" in attn:
                 g = _plan_group(attn, _ATTN_KEYS, f"seg{s_idx}.{pos}.attn",
-                                stats, tile=tile, interpret=interpret)
+                                stats, tile=tile, interpret=interpret,
+                                strict=strict)
                 if g:
                     entry["attn"] = g
             ffn = ptree.get("mlp")
             if isinstance(ffn, dict):
                 g = _plan_group(ffn, _MLP_KEYS, f"seg{s_idx}.{pos}.mlp",
-                                stats, tile=tile, interpret=interpret)
+                                stats, tile=tile, interpret=interpret,
+                                strict=strict)
                 if g:
                     entry["mlp"] = g
             moe = ptree.get("moe")
@@ -130,13 +142,15 @@ def build_decode_plan(masks, *, tile: int = 128, interpret: bool = True
                 # expert axis (and the scan axis) into ONE shared plan:
                 # the per-expert matmuls vmap over E with that plan
                 g = _plan_group(moe, _EXPERT_KEYS, f"seg{s_idx}.{pos}.moe",
-                                stats, tile=tile, interpret=interpret)
+                                stats, tile=tile, interpret=interpret,
+                                strict=strict)
                 moe_entry: Dict[str, Any] = dict(g) if g else {}
                 shared = moe.get("shared")
                 if isinstance(shared, dict):
                     sg = _plan_group(shared, _MLP_KEYS,
                                      f"seg{s_idx}.{pos}.moe.shared",
-                                     stats, tile=tile, interpret=interpret)
+                                     stats, tile=tile, interpret=interpret,
+                                     strict=strict)
                     if sg:
                         moe_entry["shared"] = sg
                 if moe_entry:

@@ -39,7 +39,7 @@ from __future__ import annotations
 import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import (Any, Callable, Deque, List, Optional, Sequence)
+from typing import (Any, Callable, Deque, List, Optional, Sequence, Tuple)
 
 import jax
 import jax.numpy as jnp
@@ -310,6 +310,14 @@ class ServeEngine:
     def current_generation(self) -> int:
         """Generation id new admissions will prefill on."""
         return self._gens[-1].gid
+
+    @property
+    def generations(self) -> Tuple[_Generation, ...]:
+        """Live ticket generations, oldest → newest.  A read-only view
+        for verification tooling (``repro.analysis`` checks each
+        generation's plan against its masks and traces its closures);
+        the scheduler itself only ever touches ``self._gens``."""
+        return tuple(self._gens)
 
     def swap(self, params, masks=None, use_bsmm: Optional[bool] = None
              ) -> int:

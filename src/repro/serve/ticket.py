@@ -7,4 +7,5 @@ plan drives both prefill and decode in ``ServeEngine``) and the
 training retrain path (``repro.train.plans``), so neither layer has to
 import the other.
 """
+from repro.kernels.bsmm import GeometryError  # noqa: F401
 from repro.models.plans import PlanStats, build_decode_plan  # noqa: F401

@@ -20,11 +20,12 @@ from typing import Any, Optional, Tuple
 
 import numpy as np
 
+from repro.configs.base import MXU_TILE
 from repro.kernels.bsmm import default_interpret, make_tile_plan
 from repro.models.plans import PlanStats, build_decode_plan
 
 
-def lm_train_plan(masks, *, tile: int = 128,
+def lm_train_plan(masks, *, tile: int = MXU_TILE,
                   interpret: Optional[bool] = None
                   ) -> Tuple[Optional[list], PlanStats]:
     """Transformer mask pytree → (train plan, PlanStats).
@@ -38,7 +39,7 @@ def lm_train_plan(masks, *, tile: int = 128,
     return build_decode_plan(masks, tile=tile, interpret=interpret)
 
 
-def cnn_train_plan(masks, *, tile: int = 128,
+def cnn_train_plan(masks, *, tile: int = MXU_TILE,
                    interpret: Optional[bool] = None
                    ) -> Tuple[Optional[dict], PlanStats]:
     """CNN mask pytree → ({"fc": [plan|None, ...], "head": plan|None},

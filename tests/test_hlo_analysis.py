@@ -1,0 +1,128 @@
+"""launch.hlo_analysis: shape parsing, collective summation, roofline.
+
+The parser feeds both the launch-time roofline report and the lint's
+compiled-artifact cross-check (J206/J207), so its corner cases —
+tuple shapes, unknown dtypes, sub-byte s4/u4 — get pinned here.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.hlo_analysis import (HBM_BW, ICI_BW, PEAK_FLOPS,
+                                       RooflineTerms, _shape_bytes,
+                                       collective_bytes, hlo_dtype_census,
+                                       roofline_from_compiled,
+                                       while_trip_counts)
+
+
+# ---------------------------------------------------------------------------
+# _shape_bytes
+# ---------------------------------------------------------------------------
+def test_shape_bytes_basic():
+    assert _shape_bytes("f32[2,3]") == 24
+    assert _shape_bytes("bf16[8,128,4096]{2,1,0}") == 8 * 128 * 4096 * 2
+    assert _shape_bytes("f32[]") == 4          # scalar: empty dims
+
+
+def test_shape_bytes_tuple_shapes_sum_parts():
+    # tuple-result ops list every component; all parseable parts count
+    assert _shape_bytes("(f32[2,3], s32[4])") == 24 + 16
+    assert _shape_bytes("(bf16[2], pred[3], u8[5])") == 4 + 3 + 5
+
+
+def test_shape_bytes_unknown_dtype_skipped():
+    assert _shape_bytes("opaque[8]") == 0
+    assert _shape_bytes("token[]") == 0
+    # unknown part skipped, known part still counted
+    assert _shape_bytes("(opaque[8], f16[4])") == 8
+
+
+def test_shape_bytes_subbyte_s4_u4():
+    # s4/u4 are billed at 1 byte per element (packing is backend detail)
+    assert _shape_bytes("s4[16]") == 16
+    assert _shape_bytes("u4[3,3]") == 9
+
+
+# ---------------------------------------------------------------------------
+# collective_bytes
+# ---------------------------------------------------------------------------
+_HLO = """\
+ENTRY %main {
+  %x = bf16[16,4096]{1,0} parameter(0)
+  %ag = bf16[16,4096]{1,0} all-gather(%x), replica_groups={{0,1}}
+  %ar = f32[128]{0} all-reduce-start(%y), to_apply=%add
+  %rs = f32[64]{0} reduce-scatter(%z), dimensions={0}
+  %noise = f32[9]{0} add(f32[9]{0} %a, f32[9]{0} %b)
+}
+"""
+
+
+def test_collective_bytes_sums_by_kind():
+    stats = collective_bytes(_HLO)
+    assert stats.bytes_by_kind["all-gather"] == 16 * 4096 * 2
+    assert stats.bytes_by_kind["all-reduce"] == 128 * 4      # -start form
+    assert stats.bytes_by_kind["reduce-scatter"] == 64 * 4
+    assert stats.count_by_kind == {"all-gather": 1, "all-reduce": 1,
+                                   "reduce-scatter": 1}
+    assert stats.total_bytes == 16 * 4096 * 2 + 128 * 4 + 64 * 4
+
+
+def test_collective_bytes_ignores_plain_ops():
+    assert collective_bytes("%r = f32[8]{0} add(%a, %b)").total_bytes == 0
+
+
+def test_while_trip_counts():
+    text = 'while(...), backend_config={"trip_count":"12"}\n' \
+           "trip_count=3\n"
+    assert sorted(while_trip_counts(text)) == [3, 12]
+    assert while_trip_counts("no loops") == []
+
+
+# ---------------------------------------------------------------------------
+# hlo_dtype_census
+# ---------------------------------------------------------------------------
+def test_hlo_dtype_census_counts_known_dtypes():
+    census = hlo_dtype_census(_HLO)
+    assert census["bf16"] == 2
+    assert census["f32"] >= 4
+    assert "opaque" not in census
+    assert hlo_dtype_census("no shapes here") == {}
+
+
+# ---------------------------------------------------------------------------
+# RooflineTerms + roofline_from_compiled
+# ---------------------------------------------------------------------------
+def test_roofline_terms_math():
+    t = RooflineTerms(flops=PEAK_FLOPS, bytes_accessed=HBM_BW * 2,
+                      collective_b=ICI_BW * 0.5, n_chips=4,
+                      model_flops=PEAK_FLOPS)
+    assert t.compute_s == pytest.approx(1.0)
+    assert t.memory_s == pytest.approx(2.0)
+    assert t.collective_s == pytest.approx(0.5)
+    assert t.bottleneck == "memory"
+    assert t.step_time_s == pytest.approx(2.0)
+    assert t.useful_flops_ratio == pytest.approx(0.25)
+    assert t.mfu == pytest.approx(1.0 / (2.0 * 4))
+    d = t.as_dict()
+    assert d["bottleneck"] == "memory" and d["n_chips"] == 4
+
+
+def test_roofline_from_compiled_tiny_matmul():
+    n = 64
+
+    @jax.jit
+    def f(x):
+        return x @ x
+
+    compiled = f.lower(jnp.ones((n, n), jnp.float32)).compile()
+    terms = roofline_from_compiled(compiled, n_chips=1,
+                                   model_flops=2 * n ** 3)
+    assert terms.flops > 0
+    assert terms.bytes_accessed > 0
+    assert terms.collective_b == 0            # single device, no ICI
+    assert terms.step_time_s > 0
+    assert terms.bottleneck in ("compute", "memory", "collective")
+    # explicit hlo_text path agrees with the compiled.as_text() default
+    again = roofline_from_compiled(compiled, n_chips=1,
+                                   hlo_text=compiled.as_text())
+    assert again.collective_b == terms.collective_b

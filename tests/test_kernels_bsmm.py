@@ -120,12 +120,14 @@ def test_compact_indices_empty_mask():
 def test_bsmm_rejects_non_tiling_last_tile():
     """K/N that leave a ragged (non-128-multiple) last tile must be
     rejected, not silently mis-indexed."""
+    from repro.kernels.bsmm import GeometryError
     rng = np.random.RandomState(0)
     x = jnp.asarray(rng.randn(128, 200), jnp.float32)     # K = 200
     w = jnp.asarray(rng.randn(200, 128), jnp.float32)
-    with pytest.raises(AssertionError, match="tile"):
+    with pytest.raises(GeometryError, match="tile") as ei:
         bsmm_pallas(x, w, np.ones((2, 1), np.int32), interpret=True)
-    with pytest.raises(AssertionError):
+    assert ei.value.shape == (128, 200, 128)      # structured context
+    with pytest.raises(GeometryError):
         bsmm_pallas(jnp.asarray(rng.randn(100, 128), jnp.float32),
                     jnp.asarray(rng.randn(128, 128), jnp.float32),
                     np.ones((1, 1), np.int32), interpret=True)
