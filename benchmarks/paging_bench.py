@@ -1,0 +1,117 @@
+"""Paged-KV decode bandwidth: bytes/step vs capacity and live context.
+
+The point of paging is that decode-attention bandwidth scales with the
+LIVE context (blocks actually holding tokens), not with the allocated
+capacity — a dense per-slot cache reads its full ``capacity`` tokens of
+K and V every step regardless of how short the request is.
+
+Two sweeps over a tiny llama-family model, one request per run:
+
+  * ``capacity`` sweep — fixed live context, growing ``kv_blocks``:
+    paged bytes/token must stay FLAT while the dense oracle's per-step
+    read (``capacity × token_bytes``) grows linearly with capacity.
+  * ``context`` sweep — fixed ``kv_blocks``, growing prompt length:
+    paged bytes/token must grow linearly (in ``BLOCK_TOKENS`` steps)
+    with the live context.
+
+Bytes are the engine's own analytic accounting (``ServeReport
+.kv_bytes_per_token`` = block_bytes × blocks gathered per decode call);
+wall-clock on this CPU container is interpret-mode emulation and is
+recorded for completeness only.
+
+``run()`` prints the CSV lines every bench module emits AND returns
+machine-readable records; ``benchmarks/run.py paging --json`` persists
+them to ``BENCH_paging.json``.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from benchmarks.common import Timer, csv_line
+from repro.configs import get_arch, scaled_down
+from repro.kernels.paged_attention import BLOCK_TOKENS
+from repro.models import transformer as tfm
+from repro.serve import Request, ServeEngine
+from repro.serve.paging import blocks_needed
+
+CTX_SWEEP = (32, 160, 288)          # 1, 2, 3 live blocks
+KV_BLOCKS_SWEEP = (4, 8, 16)        # capacity 384 → 1920 tokens
+FIXED_CTX = 160
+FIXED_KV_BLOCKS = 16
+BUDGET = 4
+
+
+def _measure(cfg, params, ctx: int, kv_blocks: int) -> Dict:
+    eng = ServeEngine(params=params, cfg=cfg, prefill_fn=tfm.prefill,
+                      decode_fn=tfm.decode_step, batch_slots=2,
+                      capacity=BLOCK_TOKENS, kv_blocks=kv_blocks)
+    assert eng.paged
+    prompt = (np.arange(ctx, dtype=np.int32) % (cfg.vocab_size - 1)) + 1
+    eng.submit(Request(uid=0, prompt=prompt, max_new_tokens=BUDGET))
+    with Timer() as t:
+        done = eng.run()
+    assert len(done) == 1 and done[0].done
+    rep = eng.report
+    token_bytes = rep.kv_block_bytes / BLOCK_TOKENS
+    return {
+        "live_context": ctx,
+        "kv_blocks": kv_blocks,
+        "capacity_tokens": eng.max_context,
+        "live_blocks": blocks_needed(ctx + BUDGET, BLOCK_TOKENS),
+        "kv_blocks_peak": rep.kv_blocks_peak,
+        "kv_block_bytes": rep.kv_block_bytes,
+        "paged_bytes_per_token": rep.kv_bytes_per_token,
+        "dense_bytes_per_token": eng.max_context * token_bytes,
+        "us_per_decode_step": t.us / max(rep.decode_steps, 1),
+        "decode_steps": rep.decode_steps,
+        "interpret": True,
+        "backend": jax.default_backend(),
+    }
+
+
+def run() -> List[Dict]:
+    cfg = scaled_down(get_arch("llama3.2-3b"), dtype="float32")
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    records: List[Dict] = []
+
+    for kv_blocks in KV_BLOCKS_SWEEP:
+        rec = _measure(cfg, params, FIXED_CTX, kv_blocks)
+        rec["name"] = f"paging_capacity_{rec['capacity_tokens']}"
+        rec["sweep"] = "capacity"
+        records.append(rec)
+        print(csv_line(
+            rec["name"], rec["us_per_decode_step"],
+            f"ctx={FIXED_CTX};capacity={rec['capacity_tokens']};"
+            f"paged_B_per_tok={rec['paged_bytes_per_token']:.0f};"
+            f"dense_B_per_tok={rec['dense_bytes_per_token']:.0f}"))
+
+    for ctx in CTX_SWEEP:
+        rec = _measure(cfg, params, ctx, FIXED_KV_BLOCKS)
+        rec["name"] = f"paging_context_{ctx}"
+        rec["sweep"] = "context"
+        records.append(rec)
+        print(csv_line(
+            rec["name"], rec["us_per_decode_step"],
+            f"ctx={ctx};capacity={rec['capacity_tokens']};"
+            f"live_blocks={rec['live_blocks']};"
+            f"paged_B_per_tok={rec['paged_bytes_per_token']:.0f};"
+            f"dense_B_per_tok={rec['dense_bytes_per_token']:.0f}"))
+
+    # the headline claims, checked at record time so a regression cannot
+    # silently write a JSON that contradicts the README
+    cap = [r for r in records if r["sweep"] == "capacity"]
+    assert len({r["paged_bytes_per_token"] for r in cap}) == 1, \
+        "paged bytes/token must be flat in capacity"
+    ctxs = [r for r in records if r["sweep"] == "context"]
+    per_block = ctxs[0]["kv_block_bytes"]
+    for r in ctxs:
+        assert r["paged_bytes_per_token"] == r["live_blocks"] * per_block, \
+            "paged bytes/token must be linear in live blocks"
+    return records
+
+
+if __name__ == "__main__":
+    run()

@@ -8,6 +8,7 @@ Prints ``name,us_per_call,derived`` CSV (one line per measurement).
   fig8_layerwise  — paper Fig. 8 (ResNet-18 per-layer xbars/time)
   kernels_bench   — block-sparse train-step (fwd+bwd) tile-skip scaling
   recipes_bench   — staged recipe (paper-quant) per-stage trajectory
+  paging_bench    — paged-KV decode bytes/step vs capacity & live context
   roofline        — corrected roofline table from the dry-run cache
 
 Run all: ``PYTHONPATH=src python -m benchmarks.run``
@@ -15,7 +16,8 @@ One:     ``PYTHONPATH=src python -m benchmarks.run fig6``
 JSON:    ``PYTHONPATH=src python -m benchmarks.run kernels --json``
          writes ``BENCH_kernels.json``;
          ``... recipes --json`` writes ``BENCH_recipes.json`` (per-stage
-         accuracy/sparsity/live-tile records for the tiny CNN recipe).
+         accuracy/sparsity/live-tile records for the tiny CNN recipe);
+         ``... paging --json`` writes ``BENCH_paging.json``.
 """
 import argparse
 import json
@@ -23,14 +25,15 @@ import platform
 
 # benches whose run() returns machine-readable records --json can dump
 _JSON_BENCHES = {"kernels": "BENCH_kernels.json",
-                 "recipes": "BENCH_recipes.json"}
+                 "recipes": "BENCH_recipes.json",
+                 "paging": "BENCH_paging.json"}
 
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("which", nargs="?", default="all",
                     choices=["all", "fig5", "fig6", "fig7", "fig8",
-                             "kernels", "recipes", "roofline"])
+                             "kernels", "recipes", "paging", "roofline"])
     ap.add_argument("--json", nargs="?", const="", default=None,
                     metavar="PATH",
                     help="write the bench's records to PATH (default "
@@ -55,6 +58,9 @@ def main() -> None:
     if which in ("all", "recipes"):
         from benchmarks import recipes_bench
         mods.append(recipes_bench)
+    if which in ("all", "paging"):
+        from benchmarks import paging_bench
+        mods.append(paging_bench)
     if which in ("all", "roofline"):
         from benchmarks import roofline
         mods.append(roofline)
@@ -70,13 +76,14 @@ def main() -> None:
     if json_path is not None:
         if not records:
             raise SystemExit("--json needs a record-producing bench in "
-                             "the run (`kernels`, `recipes`, or `all`)")
+                             "the run (`kernels`, `recipes`, `paging`, "
+                             "or `all`)")
         if json_path and len(records) > 1:
             raise SystemExit(
                 "--json PATH is ambiguous with multiple record benches "
-                "in one run (`all` produces kernels AND recipes); drop "
-                "the PATH to get the default BENCH_<bench>.json names, "
-                "or run one bench at a time")
+                "in one run (`all` produces several); drop the PATH to "
+                "get the default BENCH_<bench>.json names, or run one "
+                "bench at a time")
         import jax
         for bench, recs in records.items():
             path = json_path or _JSON_BENCHES[bench]

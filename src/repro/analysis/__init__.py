@@ -5,8 +5,8 @@ Three analyzers, one structured ``Finding`` model with stable rule
 codes (``findings.RULES``):
 
 * ``recipe_lint`` — R001–R009, recipe programs vs family capabilities;
-* ``invariants``  — P101–P112, tile plans / decode plans / crossbar
-  stats re-derived from the masks and compared;
+* ``invariants``  — P101–P115, tile plans / decode plans / crossbar
+  stats / paged-KV pools re-derived from their sources and compared;
 * ``jaxpr_audit`` — J201–J207, abstract traces of jitted hot paths
   (dense routing misses, x64 promotions, host callbacks) plus a
   compiled-HLO cross-check.
@@ -16,8 +16,12 @@ surface is ``python -m repro.api lint [--arch NAME | --all]``.
 """
 from repro.analysis.findings import (RULES, SEVERITIES, Finding, Report,
                                      error, info, warning)
-from repro.analysis.invariants import (verify_decode_plan, verify_engine,
+from repro.analysis.invariants import (verify_block_pool,
+                                       verify_block_tables,
+                                       verify_decode_plan, verify_engine,
                                        verify_mask_accounting,
+                                       verify_paged_engine,
+                                       verify_paged_reconstruction,
                                        verify_tile_plan, verify_xbar_stats)
 from repro.analysis.jaxpr_audit import (audit_closure, audit_compiled,
                                         audit_hlo_text, collect_covered,
@@ -29,7 +33,9 @@ __all__ = [
     "RULES", "SEVERITIES", "Finding", "Report", "error", "warning", "info",
     "lint_recipe", "lint_recipe_for_family",
     "verify_tile_plan", "verify_decode_plan", "verify_xbar_stats",
-    "verify_mask_accounting", "verify_engine",
+    "verify_mask_accounting", "verify_engine", "verify_block_pool",
+    "verify_block_tables", "verify_paged_engine",
+    "verify_paged_reconstruction",
     "audit_closure", "audit_compiled", "audit_hlo_text",
     "collect_covered", "unambiguous_covered", "iter_eqns",
     "lint_arch", "lint_all",

@@ -63,6 +63,13 @@ RULES: Dict[str, str] = {
     "P110": "PlanStats totals disagree with the per-projection plans",
     "P111": "packing/XbarStats accounting disagrees with the mask",
     "P112": "cross-generation inconsistency inside a ServeEngine",
+    "P113": "paged block table disagrees with the pool's ownership "
+            "(unallocated, double-referenced, out-of-bounds, or "
+            "off-scratch dead entry)",
+    "P114": "paged cache gathered in logical block order does not "
+            "reconstruct the dense oracle cache",
+    "P115": "BlockPool accounting does not balance (free + live + "
+            "scratch vs capacity, or reservations exceed free)",
     # jaxpr auditor -------------------------------------------------------
     "J201": "dense dot_general on a weight shape a TilePlan covers "
             "(missed block-sparse routing)",

@@ -7,7 +7,7 @@ builders (``make_tile_plan``, ``build_decode_plan``, ``xbar_stats``,
 the engine's generation bookkeeping) surfaces as a structured finding
 rather than as silently-wrong serving math.
 
-Rule codes P101–P112; see ``analysis.findings.RULES``.
+Rule codes P101–P115; see ``analysis.findings.RULES``.
 """
 from __future__ import annotations
 
@@ -384,6 +384,8 @@ def verify_engine(engine, *, where: str = "engine") -> List[Finding]:
     ``ServeEngine``: distinct gids, every generation's plan identical
     to the tile reduction of its own masks, and the engine report's
     skipped-tile fraction agreeing with the newest generation (P112).
+    Paged engines additionally get the block-pool/table checks
+    (P113/P115) via ``verify_paged_engine``.
     """
     findings: List[Finding] = []
     gens = engine.generations
@@ -416,4 +418,185 @@ def verify_engine(engine, *, where: str = "engine") -> List[Finding]:
                 f"report.skipped_tile_fraction="
                 f"{rep.skipped_tile_fraction:.6f} disagrees with the "
                 f"newest generation's {want:.6f}"))
+    if getattr(engine, "paged", False):
+        findings.extend(verify_paged_engine(engine, where=where))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# Paged KV cache: block pools, block tables, logical reconstruction
+# ---------------------------------------------------------------------------
+def verify_block_pool(pool, *, where: str = "pool") -> List[Finding]:
+    """``BlockPool`` accounting (P115), re-derived from its raw state.
+
+    Runs the pool's own ``check()`` (double-tracking, leaks) and then
+    independently recomputes the balance identity
+    ``free + live + scratch == capacity`` and the reservation bound, so
+    drift in either the allocator or its self-check surfaces here.
+    """
+    from repro.serve.paging import PoolError
+    findings: List[Finding] = []
+    try:
+        pool.check()
+    except PoolError as e:
+        findings.append(error("P115", where, str(e)))
+        return findings
+    free = len(pool._free)
+    total = free + pool.live + len(pool.reserved_ids)
+    if total != pool.num_blocks:
+        findings.append(error(
+            "P115", where,
+            f"free({free}) + live({pool.live}) + "
+            f"scratch({len(pool.reserved_ids)}) = {total} != capacity "
+            f"{pool.num_blocks}"))
+    if pool.outstanding > free:
+        findings.append(error(
+            "P115", where,
+            f"outstanding reservations ({pool.outstanding}) exceed the "
+            f"free list ({free}) — a guaranteed alloc would fail"))
+    if pool.available != free - pool.outstanding:
+        findings.append(error(
+            "P115", where,
+            f"available={pool.available} != free({free}) - "
+            f"outstanding({pool.outstanding})"))
+    return findings
+
+
+def verify_block_tables(pool, tables, lens, slot_nblocks, uids, *,
+                        block_tokens: int,
+                        where: str = "tables") -> List[Finding]:
+    """Block tables vs pool ownership (P113).
+
+    For every active slot: the row's live prefix must list exactly the
+    blocks the pool says that request owns, in logical order, with no
+    block referenced by two slots, no scratch/out-of-range id used as a
+    live block, the block count matching ``ceil(len / BLOCK)``, and the
+    dead tail parked on the scratch block.  Inactive slots must be
+    fully reset.
+    """
+    findings: List[Finding] = []
+    tables = np.asarray(tables)
+    lens = np.asarray(lens)
+    nbs = np.asarray(slot_nblocks)
+    scratch = set(pool.reserved_ids)
+    seen: Dict[int, int] = {}
+    for s, uid in enumerate(uids):
+        sw = f"{where}/slot{s}"
+        row = tables[s]
+        if uid is None:
+            if int(nbs[s]) or int(lens[s]) or \
+                    any(int(v) not in scratch for v in row):
+                findings.append(error(
+                    "P113", sw,
+                    "inactive slot still holds table state "
+                    f"(nblocks={int(nbs[s])} len={int(lens[s])})"))
+            continue
+        n, nb = int(lens[s]), int(nbs[s])
+        want_nb = -(-n // block_tokens)
+        if nb != want_nb:
+            findings.append(error(
+                "P113", sw,
+                f"uid {uid}: {nb} blocks held for {n} tokens "
+                f"(want ceil({n}/{block_tokens}) = {want_nb})"))
+            continue
+        live = [int(v) for v in row[:nb]]
+        bad = [v for v in live
+               if v in scratch or not 0 <= v < pool.num_blocks]
+        if bad:
+            findings.append(error(
+                "P113", sw,
+                f"uid {uid}: live entries reference scratch/out-of-"
+                f"range blocks {bad}"))
+            continue
+        if list(pool.owned(uid)) != live:
+            findings.append(error(
+                "P113", sw,
+                f"uid {uid}: table row {live} disagrees with pool "
+                f"ownership {list(pool.owned(uid))}"))
+            continue
+        for v in live:
+            if v in seen:
+                findings.append(error(
+                    "P113", sw,
+                    f"block {v} referenced by slot {seen[v]} and "
+                    f"slot {s}"))
+            seen[v] = s
+        if any(int(v) not in scratch for v in row[nb:]):
+            findings.append(error(
+                "P113", sw,
+                f"uid {uid}: dead table entries past block {nb} are "
+                f"not parked on the scratch block"))
+    return findings
+
+
+def verify_paged_reconstruction(paged_caches, dense_caches, blocks,
+                                length: int, *,
+                                where: str = "paged") -> List[Finding]:
+    """Logical-order reconstruction vs the dense oracle (P114).
+
+    ``dense_caches`` is a single request's exact ``prefill`` output
+    (B=1); ``blocks`` its adopted physical block ids in logical order.
+    Gathering every layer's pool rows through ``blocks`` and trimming to
+    ``length`` must reproduce the dense cache bit-for-bit — adopt and
+    append are pure copies, so any tolerance would hide an indexing bug.
+    """
+    findings: List[Finding] = []
+    blocks = np.asarray(blocks)
+
+    def gather(pool):
+        rows = np.asarray(pool)[blocks]          # (nb, T, H, d)
+        return rows.reshape(-1, *rows.shape[2:])[:length]
+
+    def check(pool, want, path):
+        pool = np.asarray(pool)
+        want = np.asarray(want)
+        stacked = pool.ndim == 5                 # leading scan-reps axis
+        pools = pool if stacked else pool[None]
+        wants = want if stacked else want[None]
+        for r in range(pools.shape[0]):
+            got = gather(pools[r])
+            oracle = wants[r][0, :length].astype(got.dtype)
+            if got.shape != oracle.shape or \
+                    not np.array_equal(got, oracle):
+                diff = float(np.abs(got.astype(np.float32)
+                                    - oracle.astype(np.float32)).max()) \
+                    if got.shape == oracle.shape else float("nan")
+                rp = f"{path}[rep{r}]" if stacked else path
+                findings.append(error(
+                    "P114", f"{where}/{rp}",
+                    f"gathered pool rows != dense oracle over "
+                    f"{length} tokens (max |diff| = {diff})"))
+                return
+
+    for si, (seg_p, seg_d) in enumerate(zip(paged_caches, dense_caches)):
+        for pi, (pc, dc) in enumerate(zip(seg_p, seg_d)):
+            path = f"seg{si}.{pi}"
+            if hasattr(pc, "k_pool"):            # GQA
+                check(pc.k_pool, dc.k, f"{path}.k")
+                check(pc.v_pool, dc.v, f"{path}.v")
+            else:                                # absorbed MLA
+                # the pool stores concat(c_kv, k_rope) as one "kv head"
+                want = np.concatenate(
+                    [np.asarray(dc.c_kv), np.asarray(dc.k_rope)],
+                    axis=-1)[..., None, :]       # (..., B, S, 1, r+dr)
+                check(pc.pool, want, path)
+    return findings
+
+
+def verify_paged_engine(engine, *, where: str = "engine") -> List[Finding]:
+    """Pool + table consistency across every generation of a paged
+    ``ServeEngine`` (P113/P115) — including generations parked by a
+    hot-swap, whose draining requests still own blocks.
+    """
+    from repro.kernels.paged_attention import BLOCK_TOKENS
+    findings: List[Finding] = []
+    for g in engine.generations:
+        if getattr(g, "pool", None) is None:
+            continue
+        gwhere = f"{where}/gen{g.gid}"
+        findings.extend(verify_block_pool(g.pool, where=f"{gwhere}/pool"))
+        uids = [None if r is None else r.uid for r in g.slot_reqs]
+        findings.extend(verify_block_tables(
+            g.pool, g.tables, g.lens, g.slot_nblocks, uids,
+            block_tokens=BLOCK_TOKENS, where=f"{gwhere}/tables"))
     return findings

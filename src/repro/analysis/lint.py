@@ -186,7 +186,34 @@ def _lint_serving(report: Report, name: str, adapter, spec, params,
         gen.decode, [masked, slot_s, tok], covered=covered,
         where=f"{name}/decode"))
 
-    # live hot-swap, then cross-generation consistency (P112)
+    if eng.paged:
+        # paged decode closure: same J-rule audit as the dense decode,
+        # against abstract pool/table/length arguments
+        pc_s = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
+            gen.paged_caches)
+        tbl = jax.ShapeDtypeStruct((eng.slots, eng.kv_blocks - 1),
+                                   jnp.int32)
+        lens = jax.ShapeDtypeStruct((eng.slots,), jnp.int32)
+        report.extend(audit_closure(
+            gen.decode_paged, [masked, pc_s, tok, tbl, lens],
+            covered=covered, where=f"{name}/decode_paged"))
+        # adopt a real prefill into the pool and demand the gathered
+        # logical order reproduce the dense oracle bit-for-bit (P114)
+        from repro.analysis.invariants import verify_paged_reconstruction
+        from repro.serve.paging import blocks_needed
+        if spec.family != "audio":
+            _, dense_c = gen.prefill_exact(masked, toks)
+            from repro.kernels.paged_attention import BLOCK_TOKENS
+            nb = blocks_needed(int(toks.shape[1]), BLOCK_TOKENS)
+            blocks = jnp.arange(1, nb + 1, dtype=jnp.int32)
+            adopted = gen.adopt(gen.paged_caches, dense_c, blocks)
+            report.extend(verify_paged_reconstruction(
+                adopted, dense_c, blocks, int(toks.shape[1]),
+                where=f"{name}/paged"))
+
+    # live hot-swap, then cross-generation consistency (P112) — paged
+    # engines also get pool/table balance checks here (P113/P115)
     eng.swap(masked, masks)
     report.extend(verify_engine(eng, where=f"{name}/engine"))
 

@@ -321,7 +321,13 @@ def _report_dict(rep) -> dict:
             "ttft_p95_ms": rep.ttft_p95 * 1e3,
             "tps_p50": rep.tps_p50, "tps_p95": rep.tps_p95,
             "deadline_misses": rep.deadline_misses,
-            "swaps": rep.swaps}
+            "swaps": rep.swaps,
+            "paged": rep.paged,
+            "kv_blocks": rep.kv_blocks,
+            "kv_blocks_live": rep.kv_blocks_live,
+            "kv_blocks_peak": rep.kv_blocks_peak,
+            "kv_block_bytes": rep.kv_block_bytes,
+            "kv_bytes_per_token": rep.kv_bytes_per_token}
 
 
 def _latency_line(rep) -> str:
@@ -382,7 +388,8 @@ def cmd_serve(args) -> int:
                          temperature=args.temperature, masks=masks)
     rng = np.random.RandomState(args.seed)
     for i in range(args.requests):
-        prompt = rng.randint(0, 200, size=rng.randint(4, 16))
+        plen = args.prompt_len if args.prompt_len else rng.randint(4, 16)
+        prompt = rng.randint(0, 200, size=plen)
         engine.submit(Request(uid=i, prompt=prompt.astype(np.int32),
                               max_new_tokens=args.max_new,
                               frames=_request_frames(adapter, i)))
@@ -732,6 +739,9 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--max-new", type=int, default=8)
     p.add_argument("--slots", type=int, default=4)
     p.add_argument("--capacity", type=int, default=128)
+    p.add_argument("--prompt-len", type=int, default=None,
+                   help="fixed prompt length (default: random 4-15); "
+                        "paged engines admit lengths past --capacity")
     p.add_argument("--temperature", type=float, default=0.0)
     p.set_defaults(fn=cmd_serve)
 

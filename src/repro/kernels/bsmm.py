@@ -22,6 +22,7 @@ paper §V.C), so the compacted indices are baked in as constants.
 """
 from __future__ import annotations
 
+import functools
 from typing import NamedTuple, Optional, Tuple
 
 import jax
@@ -95,6 +96,24 @@ def compact_tile_indices(tile_mask: np.ndarray) -> Tuple[np.ndarray,
     return idx, counts, kmax
 
 
+# Epilogue activations the flush can apply in-register (f32 accumulator
+# → act → output dtype, one pass over the output instead of two)
+_EPILOGUE_ACTS = {
+    "relu": jax.nn.relu,
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+}
+
+
+def _epilogue(z, act: Optional[str]):
+    if act is None:
+        return z
+    if act not in _EPILOGUE_ACTS:
+        raise ValueError(f"unsupported epilogue act {act!r}; "
+                         f"known: {sorted(_EPILOGUE_ACTS)}")
+    return _EPILOGUE_ACTS[act](z)
+
+
 def _bsmm_kernel(count_ref, idx_ref, x_ref, w_ref, o_ref, acc_ref):
     j = pl.program_id(1)
     k = pl.program_id(2)
@@ -111,6 +130,30 @@ def _bsmm_kernel(count_ref, idx_ref, x_ref, w_ref, o_ref, acc_ref):
     @pl.when(k == pl.num_programs(2) - 1)
     def _flush():
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _bsmm_epilogue_kernel(count_ref, idx_ref, x_ref, w_ref, b_ref, o_ref,
+                          acc_ref, *, act: Optional[str]):
+    """``_bsmm_kernel`` with the bias+activation epilogue fused into the
+    flush: the f32 accumulator gets ``+ b`` and the activation while it
+    is still in VMEM, saving the extra HBM round-trip a separate
+    bias/act pass would cost."""
+    j = pl.program_id(1)
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(k < count_ref[j])
+    def _accum():
+        acc_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+                                preferred_element_type=jnp.float32)
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _flush():
+        z = acc_ref[...] + b_ref[...].astype(jnp.float32)
+        o_ref[...] = _epilogue(z, act).astype(o_ref.dtype)
 
 
 def bsmm_pallas(x, w, tile_mask: np.ndarray, *, bm: int = MXU_TILE,
@@ -137,10 +180,38 @@ def bsmm_pallas(x, w, tile_mask: np.ndarray, *, bm: int = MXU_TILE,
 
 
 def _bsmm_compact(x, w, idx, counts, kmax: int, *, bm: int, bk: int,
-                  bn: int, interpret: bool):
+                  bn: int, interpret: bool, bias=None,
+                  act: Optional[str] = None):
     M, K = x.shape
     N = w.shape[1]
     grid = (M // bm, N // bn, kmax)
+    fused = bias is not None or act is not None
+    if fused:
+        b = jnp.zeros((1, N), x.dtype) if bias is None \
+            else jnp.asarray(bias).reshape(1, N)
+        kernel = pl.pallas_call(
+            functools.partial(_bsmm_epilogue_kernel, act=act),
+            grid_spec=pltpu.PrefetchScalarGridSpec(
+                num_scalar_prefetch=2,
+                grid=grid,
+                in_specs=[
+                    pl.BlockSpec((bm, bk),
+                                 lambda i, j, k, cnt, idx: (i, idx[j, k])),
+                    pl.BlockSpec((bk, bn),
+                                 lambda i, j, k, cnt, idx: (idx[j, k], j)),
+                    pl.BlockSpec((1, bn),
+                                 lambda i, j, k, cnt, idx: (0, j)),
+                ],
+                out_specs=pl.BlockSpec((bm, bn),
+                                       lambda i, j, k, cnt, idx: (i, j)),
+                scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+            ),
+            out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+            compiler_params=CompilerParams(
+                dimension_semantics=("parallel", "parallel", "arbitrary")),
+            interpret=interpret,
+        )
+        return kernel(jnp.asarray(counts), jnp.asarray(idx), x, w, b)
     kernel = pl.pallas_call(
         _bsmm_kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
@@ -350,7 +421,8 @@ def _bsmm_dw(x2, g, plan: TilePlan, *, bm: int, out_dtype):
     return dw.transpose(0, 2, 1, 3).reshape(K, N)
 
 
-def bsmm_apply(x2, w, plan: TilePlan, *, bm: int):
+def bsmm_apply(x2, w, plan: TilePlan, *, bm: int, bias=None,
+               act: Optional[str] = None):
     """Differentiable ``x2 (M, K) @ (w ⊙ tile-bitmap) (K, N)``.
 
     Forward AND both backward matmuls run through block-sparse Pallas
@@ -360,31 +432,74 @@ def bsmm_apply(x2, w, plan: TilePlan, *, bm: int):
     zero on dead tiles (never computed); callers that also carry an
     elementwise mask (``ops.sparse_dense``) recover the elementwise
     gradient through the chain rule of ``w * mask``.
+
+    ``bias``/``act`` fuse a ``+ b`` / activation epilogue into the
+    kernel flush (one pass over the output instead of two).  The
+    backward recomputes the pre-activation block-sparsely — nothing
+    dense sneaks in — and returns ``db = dz.sum(0)`` alongside dx/dw.
     """
     if plan.idx_t is None or plan.kk is None:
         raise ValueError("TilePlan lacks backward metadata — rebuild it "
                          "with make_tile_plan()")
 
-    @jax.custom_vjp
-    def f(x2, w):
+    if bias is None and act is None:
+        @jax.custom_vjp
+        def f(x2, w):
+            return _bsmm_compact(x2, w, plan.idx, plan.counts, plan.kmax,
+                                 bm=bm, bk=plan.tile, bn=plan.tile,
+                                 interpret=plan.interpret)
+
+        def f_fwd(x2, w):
+            return f(x2, w), (x2, w)
+
+        def f_bwd(res, g):
+            x2, w = res
+            dx = _bsmm_dx(g, w, plan, bm=bm).astype(x2.dtype)
+            dw = _bsmm_dw(x2, g, plan, bm=bm, out_dtype=w.dtype)
+            return dx, dw
+
+        f.defvjp(f_fwd, f_bwd)
+        return f(x2, w)
+
+    if act is not None and act not in _EPILOGUE_ACTS:
+        raise ValueError(f"unsupported epilogue act {act!r}; "
+                         f"known: {sorted(_EPILOGUE_ACTS)}")
+    N = plan.counts.shape[0] * plan.tile
+    b = jnp.zeros((N,), x2.dtype) if bias is None \
+        else jnp.asarray(bias).reshape(N)
+
+    def _compact(x2, w, b, a):
         return _bsmm_compact(x2, w, plan.idx, plan.counts, plan.kmax,
                              bm=bm, bk=plan.tile, bn=plan.tile,
-                             interpret=plan.interpret)
+                             interpret=plan.interpret, bias=b, act=a)
 
-    def f_fwd(x2, w):
-        return f(x2, w), (x2, w)
+    @jax.custom_vjp
+    def f(x2, w, b):
+        return _compact(x2, w, b, act)
+
+    def f_fwd(x2, w, b):
+        return f(x2, w, b), (x2, w, b)
 
     def f_bwd(res, g):
-        x2, w = res
-        dx = _bsmm_dx(g, w, plan, bm=bm).astype(x2.dtype)
-        dw = _bsmm_dw(x2, g, plan, bm=bm, out_dtype=w.dtype)
-        return dx, dw
+        x2, w, b = res
+        if act is None:
+            dz = g
+        else:
+            # recompute the pre-activation block-sparsely, then pull the
+            # cotangent through the activation alone
+            z = _compact(x2, w, b, None)
+            dz = jax.vjp(_EPILOGUE_ACTS[act], z)[1](g)[0]
+        dx = _bsmm_dx(dz, w, plan, bm=bm).astype(x2.dtype)
+        dw = _bsmm_dw(x2, dz, plan, bm=bm, out_dtype=w.dtype)
+        db = dz.sum(0).astype(b.dtype)
+        return dx, dw, db
 
     f.defvjp(f_fwd, f_bwd)
-    return f(x2, w)
+    return f(x2, w, b)
 
 
-def plan_matmul(x, w, plan: Optional[TilePlan]):
+def plan_matmul(x, w, plan: Optional[TilePlan], bias=None,
+                act: Optional[str] = None):
     """x (..., K) @ w (K, N) routed through the block-sparse kernel.
 
     ``plan=None`` is the dense path.  Rows are zero-padded up to a
@@ -393,9 +508,16 @@ def plan_matmul(x, w, plan: Optional[TilePlan]):
     with the live-tile count along K — the dimension pruning actually
     thins.  Differentiable: gradients flow through the custom-VJP
     block-sparse backward kernels (``bsmm_apply``).
+
+    ``bias``/``act`` fuse the bias-add and activation into the kernel's
+    flush (``bsmm_apply`` epilogue); the dense fallback applies them
+    unfused for bit-compatible semantics.
     """
     if plan is None:
-        return x @ w
+        out = x @ w
+        if bias is not None:
+            out = out + bias
+        return _epilogue(out, act)
     lead = x.shape[:-1]
     K = x.shape[-1]
     N = w.shape[-1]
@@ -425,7 +547,8 @@ def plan_matmul(x, w, plan: Optional[TilePlan]):
         bm = Mp
     if mp:
         x2 = jnp.pad(x2, ((0, mp), (0, 0)))
-    out = bsmm_apply(x2, w, plan, bm=bm)
+    # padded rows come out as act(bias) garbage; they are sliced off below
+    out = bsmm_apply(x2, w, plan, bm=bm, bias=bias, act=act)
     if mp:
         out = out[:M]
     return out.reshape(*lead, N)

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import bsmm
+from repro.kernels.paged_attention import BLOCK_TOKENS, paged_attention
 from repro.models.layers import apply_rope, rmsnorm, rmsnorm_init, xavier
 
 
@@ -314,6 +315,86 @@ def gqa_decode(params, cache: KVCache, x, *, n_heads, n_kv_heads, head_dim,
 
 
 # ---------------------------------------------------------------------------
+# Paged KV cache (GQA): shared block pool + per-sequence block tables
+# ---------------------------------------------------------------------------
+class PagedKVCache(NamedTuple):
+    """Pool-resident KV state for one attention layer.
+
+    Unlike ``KVCache`` there is no per-sequence capacity axis: all
+    sequences share one pool of ``BLOCK_TOKENS``-token blocks, and the
+    *engine* owns the indirection (block tables + per-slot lengths,
+    passed into every call).  Decode bandwidth therefore scales with
+    live context, not allocated capacity — the KV analogue of the
+    bsmm live-tile story.
+    """
+    k_pool: jax.Array     # (P, BLOCK_TOKENS, Hkv, hd)
+    v_pool: jax.Array     # (P, BLOCK_TOKENS, Hkv, hd)
+
+
+def gqa_paged_spec(num_blocks: int, n_kv_heads: int, head_dim: int, dtype,
+                   block: int = BLOCK_TOKENS):
+    zeros = jax.ShapeDtypeStruct((num_blocks, block, n_kv_heads, head_dim),
+                                 dtype)
+    return PagedKVCache(k_pool=zeros, v_pool=zeros)
+
+
+def gqa_paged_adopt(paged: PagedKVCache, cache: KVCache, blocks):
+    """Scatter one request's dense prefill cache into pool blocks.
+
+    ``cache`` is a single-request prefill cache (B=1, capacity == the
+    padded prefill length S); ``blocks`` (⌈S/BLOCK⌉,) int32 physical
+    ids, logical order.  Entries past the request's real length may
+    point at the engine's scratch block — padded keys land there (and
+    in the tail of the last real block), where per-length masking keeps
+    them invisible, exactly like ``valid_len`` masking on the dense
+    path.
+    """
+    kp, vp = paged.k_pool, paged.v_pool
+    S = cache.k.shape[1]
+    T = kp.shape[1]
+    nb = blocks.shape[0]
+    if nb != -(-S // T):
+        raise ValueError(f"adopt needs ceil({S}/{T}) block ids, got {nb}")
+    for i in range(nb):
+        w = min(T, S - i * T)
+        kp = kp.at[blocks[i], :w].set(cache.k[0, i * T:i * T + w])
+        vp = vp.at[blocks[i], :w].set(cache.v[0, i * T:i * T + w])
+    return PagedKVCache(kp, vp)
+
+
+def gqa_paged_decode(params, cache: PagedKVCache, x, *, n_heads, n_kv_heads,
+                     head_dim, rope_theta, tables, lens, plan=None,
+                     interpret=None):
+    """One paged decode step.  x: (B, 1, d).
+
+    ``tables`` (B, NB) int32 block tables, ``lens`` (B,) int32 tokens
+    already written per sequence — the new token is appended at logical
+    position ``lens[b]`` (block ``lens[b] // BLOCK`` must already be
+    allocated; idle rows point at the scratch block) and attention runs
+    over ``lens + 1`` tokens via the paged Pallas kernel.  ``plan``
+    routes the q/k/v/o projections through the block-sparse kernel as
+    on the dense path.
+    """
+    B, S, _ = x.shape
+    assert S == 1
+    pos = jnp.asarray(lens, jnp.int32)             # (B,)
+    q, k, v = gqa_qkv(params, x, n_heads=n_heads, n_kv_heads=n_kv_heads,
+                      head_dim=head_dim, positions=pos[:, None],
+                      rope_theta=rope_theta, plan=plan)
+    T = cache.k_pool.shape[1]
+    blk = tables[jnp.arange(B), pos // T]          # physical block per row
+    off = pos % T
+    kp = cache.k_pool.at[blk, off].set(k[:, 0])
+    vp = cache.v_pool.at[blk, off].set(v[:, 0])
+    out = paged_attention(q[:, 0], kp, vp, tables, pos + 1,
+                          scale=1.0 / math.sqrt(head_dim),
+                          interpret=interpret)
+    proj = bsmm.plan_matmul(out.reshape(B, 1, n_heads * head_dim),
+                            params["wo"], (plan or {}).get("wo"))
+    return proj, PagedKVCache(kp, vp)
+
+
+# ---------------------------------------------------------------------------
 # MLA (DeepSeek multi-head latent attention)
 # ---------------------------------------------------------------------------
 class MLACache(NamedTuple):
@@ -428,3 +509,68 @@ def mla_decode(params, cache: MLACache, x, *, n_heads, mla, rope_theta):
     out = jnp.einsum("bhr,rhd->bhd", ctx_lat, w_uv.astype(jnp.float32))
     out = out.reshape(B, 1, n_heads * dv).astype(x.dtype)
     return out @ params["wo"], MLACache(cc, kr, pos + 1)
+
+
+# ---------------------------------------------------------------------------
+# Paged MLA: latent rows (c_kv ‖ k_rope) in a shared block pool
+# ---------------------------------------------------------------------------
+class PagedLatentCache(NamedTuple):
+    """Paged absorbed-MLA state: one pool of latent rows per layer.
+
+    Each token stores ``concat(c_kv, k_rope)`` — width ``r + dr`` — as a
+    single "kv head".  The same paged kernel serves it via ``v_dim=r``:
+    values are the first ``r`` lanes of each key row, so scores and
+    context both happen in the latent space, exactly like ``mla_decode``.
+    """
+    pool: jax.Array       # (P, BLOCK_TOKENS, 1, kv_lora_rank + rope_dim)
+
+
+def mla_paged_spec(num_blocks: int, mla, dtype, block: int = BLOCK_TOKENS):
+    width = mla.kv_lora_rank + mla.qk_rope_head_dim
+    return PagedLatentCache(
+        pool=jax.ShapeDtypeStruct((num_blocks, block, 1, width), dtype))
+
+
+def mla_paged_adopt(paged: PagedLatentCache, cache: MLACache, blocks):
+    """Scatter one request's dense MLA prefill cache into pool blocks."""
+    pool = paged.pool
+    S = cache.c_kv.shape[1]
+    T = pool.shape[1]
+    nb = blocks.shape[0]
+    if nb != -(-S // T):
+        raise ValueError(f"adopt needs ceil({S}/{T}) block ids, got {nb}")
+    rows = jnp.concatenate([cache.c_kv[0], cache.k_rope[0]], axis=-1)
+    for i in range(nb):
+        w = min(T, S - i * T)
+        pool = pool.at[blocks[i], :w, 0].set(rows[i * T:i * T + w])
+    return PagedLatentCache(pool)
+
+
+def mla_paged_decode(params, cache: PagedLatentCache, x, *, n_heads, mla,
+                     rope_theta, tables, lens, interpret=None):
+    """One paged absorbed-MLA decode step.  See ``gqa_paged_decode``."""
+    B, S, _ = x.shape
+    assert S == 1
+    dn, dr, dv = mla.qk_nope_head_dim, mla.qk_rope_head_dim, mla.v_head_dim
+    r = mla.kv_lora_rank
+    pos = jnp.asarray(lens, jnp.int32)
+    q_nope, q_rope, c_new, kr_new = _mla_qkv_latent(
+        params, x, mla, n_heads, rope_theta, pos[:, None])
+    T = cache.pool.shape[1]
+    blk = tables[jnp.arange(B), pos // T]
+    off = pos % T
+    row = jnp.concatenate([c_new[:, 0], kr_new[:, 0]], axis=-1)
+    pool = cache.pool.at[blk, off, 0].set(row)
+    w_uk = params["w_uk"].reshape(r, n_heads, dn)
+    q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0], w_uk,
+                       preferred_element_type=jnp.float32)
+    q_eff = jnp.concatenate(
+        [q_lat, q_rope[:, 0].astype(jnp.float32)], axis=-1)  # (B,H,r+dr)
+    ctx_lat = paged_attention(q_eff.astype(pool.dtype), pool, None, tables,
+                              pos + 1, scale=1.0 / math.sqrt(dn + dr),
+                              v_dim=r, interpret=interpret)   # (B,H,r)
+    w_uv = params["w_uv"].reshape(r, n_heads, dv)
+    out = jnp.einsum("bhr,rhd->bhd", ctx_lat.astype(jnp.float32),
+                     w_uv.astype(jnp.float32))
+    out = out.reshape(B, 1, n_heads * dv).astype(x.dtype)
+    return out @ params["wo"], PagedLatentCache(pool)

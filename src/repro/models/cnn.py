@@ -149,9 +149,9 @@ def forward(params, state, cfg: CNNConfig, images, train: bool = False,
     # global average pool (CIFAR ResNet/VGG-small convention)
     x = jnp.mean(x, axis=(1, 2))
     for fc, fp in zip(params["fc"], fc_plans):
-        x = jax.nn.relu(plan_matmul(x, fc["w"], fp) + fc["b"])
-    logits = plan_matmul(x, params["head"]["w"], plans.get("head")) \
-        + params["head"]["b"]
+        x = plan_matmul(x, fc["w"], fp, bias=fc["b"], act="relu")
+    logits = plan_matmul(x, params["head"]["w"], plans.get("head"),
+                         bias=params["head"]["b"])
     return logits, new_state
 
 

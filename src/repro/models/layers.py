@@ -96,19 +96,19 @@ def _act(name: str, x):
 def mlp(params, x, act: str = "silu", plan=None):
     """``plan`` optionally routes up/gate/down through the block-sparse
     kernel (serving OR retraining a pruned ticket); dense otherwise.
-    The kernel's custom VJP keeps the routed path differentiable."""
+    The kernel's custom VJP keeps the routed path differentiable.
+    Bias adds and the gate/up activation ride the kernel's fused
+    epilogue — one pass over each projection's output."""
     plan = plan or {}
-    up = plan_matmul(x, params["up"], plan.get("up"))
-    if "up_b" in params:
-        up = up + params["up_b"]
     if "gate" in params:
-        h = _act(act, plan_matmul(x, params["gate"], plan.get("gate"))) * up
+        up = plan_matmul(x, params["up"], plan.get("up"),
+                         bias=params.get("up_b"))
+        h = plan_matmul(x, params["gate"], plan.get("gate"), act=act) * up
     else:
-        h = _act(act, up)
-    out = plan_matmul(h, params["down"], plan.get("down"))
-    if "down_b" in params:
-        out = out + params["down_b"]
-    return out
+        h = plan_matmul(x, params["up"], plan.get("up"),
+                        bias=params.get("up_b"), act=act)
+    return plan_matmul(h, params["down"], plan.get("down"),
+                       bias=params.get("down_b"))
 
 
 # ---------------------------------------------------------------------------

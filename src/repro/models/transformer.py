@@ -191,12 +191,16 @@ def init_params(rng, cfg: ArchConfig):
 # Block application
 # ---------------------------------------------------------------------------
 def _apply_block(cfg: ArchConfig, sig, p, x, mode: str, cache,
-                 capacity: Optional[int], valid_len=None, plan=None):
+                 capacity: Optional[int], valid_len=None, plan=None,
+                 paged=None):
     """Returns (x, new_cache, aux_loss).
 
     ``valid_len`` (B,) marks right-padded prefill batches (masked
     prefill — attention kinds only); ``plan`` routes decode projections
-    through the block-sparse kernel (keys "attn"/"mlp").
+    through the block-sparse kernel (keys "attn"/"mlp").  ``paged``
+    (tables, lens) switches decode onto the paged KV path: ``cache`` is
+    then a ``PagedKVCache``/``PagedLatentCache`` pool and attention runs
+    the paged Pallas kernel over live blocks only.
     """
     kind, is_moe = sig
     window = cfg.local_window if kind == LOCAL_ATTN else None
@@ -221,6 +225,10 @@ def _apply_block(cfg: ArchConfig, sig, p, x, mode: str, cache,
                 out, new_cache = attn_lib.mla_make_cache(
                     p["attn"], h, capacity=capacity, valid_len=valid_len,
                     **kw)
+            elif paged is not None:
+                out, new_cache = attn_lib.mla_paged_decode(
+                    p["attn"], cache, h, tables=paged[0], lens=paged[1],
+                    **kw)
             else:
                 out, new_cache = attn_lib.mla_decode(p["attn"], cache, h, **kw)
         else:
@@ -233,6 +241,10 @@ def _apply_block(cfg: ArchConfig, sig, p, x, mode: str, cache,
                 out, new_cache = attn_lib.gqa_make_cache(
                     p["attn"], h, capacity=capacity, window=window,
                     valid_len=valid_len, plan=plan.get("attn"), **kw)
+            elif paged is not None:
+                out, new_cache = attn_lib.gqa_paged_decode(
+                    p["attn"], cache, h, tables=paged[0], lens=paged[1],
+                    plan=plan.get("attn"), **kw)
             else:
                 out, new_cache = attn_lib.gqa_decode(
                     p["attn"], cache, h, window=window,
@@ -287,7 +299,7 @@ def _apply_block(cfg: ArchConfig, sig, p, x, mode: str, cache,
 # Segment runners (scan when reps > 1)
 # ---------------------------------------------------------------------------
 def _run_segments(cfg, params, x, mode, caches, capacity, valid_len=None,
-                  plan=None):
+                  plan=None, paged=None):
     """caches: None or same structure as params['segments'] holding states.
 
     ``plan``: None or a nested list mirroring params['segments'] — one
@@ -312,7 +324,7 @@ def _run_segments(cfg, params, x, mode, caches, capacity, valid_len=None,
                 xc, c_new, aux = _apply_block(cfg, seg.sigs[pos],
                                               ptrees[pos], xc, mode, c,
                                               capacity, valid_len=valid_len,
-                                              plan=pe)
+                                              plan=pe, paged=paged)
                 aux_acc = aux_acc + aux
                 c_outs.append(c_new)
             return xc, aux_acc, c_outs
@@ -506,6 +518,122 @@ def decode_step(params, cfg: ArchConfig, caches, token, plan=None):
     x = constrain(x, ("dp", None, None))
     x, caches, _ = _run_segments(cfg, params, x, "decode", caches, None,
                                  plan=plan)
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    head = params.get("unembed", params["embed"])
+    logits = unembed(head, x)
+    logits = constrain(logits, ("dp", None, "model"))
+    return logits, caches
+
+
+# ---------------------------------------------------------------------------
+# Paged decode: shared block pools instead of per-slot dense caches
+# ---------------------------------------------------------------------------
+def supports_paged_decode(cfg: ArchConfig) -> bool:
+    """True when ``decode_step_paged`` covers this architecture: every
+    block is full (global) attention — GQA or MLA — so all per-layer
+    decode state is a KV (or latent) pool.  Windowed attention has ring
+    semantics and recurrent blocks carry non-KV state, neither of which
+    pages; encoder-decoder archs decode through ``models.encdec``."""
+    try:
+        kinds = set(cfg.blocks)
+    except Exception:
+        return False
+    return kinds == {ATTN} and not cfg.is_encoder_decoder
+
+
+def paged_cache_spec(cfg: ArchConfig, num_blocks: int):
+    """ShapeDtypeStruct pytree mirroring params['segments']: one block
+    pool per attention layer (scan-stacked segments get a leading reps
+    axis, same convention as ``cache_spec``)."""
+    if not supports_paged_decode(cfg):
+        raise ValueError(f"paged decode unsupported for blocks={cfg.blocks}")
+    dtype = _dtype(cfg.dtype)
+
+    def block_spec():
+        if cfg.mla is not None:
+            return attn_lib.mla_paged_spec(num_blocks, cfg.mla, dtype)
+        return attn_lib.gqa_paged_spec(num_blocks, cfg.n_kv_heads,
+                                       cfg.head_dim_, dtype)
+
+    def stack_spec(spec, reps):
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((reps, *s.shape), s.dtype), spec)
+
+    out = []
+    for seg in segments_of(cfg):
+        pos_specs = []
+        for _sig in seg.sigs:
+            s = block_spec()
+            pos_specs.append(s if seg.reps == 1 else stack_spec(s, seg.reps))
+        out.append(pos_specs)
+    return out
+
+
+def make_paged_caches(cfg: ArchConfig, num_blocks: int):
+    """Zero-initialised block pools (see ``paged_cache_spec``)."""
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        paged_cache_spec(cfg, num_blocks))
+
+
+def adopt_prefill(cfg: ArchConfig, paged_caches, dense_caches, blocks):
+    """Scatter one request's dense prefill caches into pool blocks.
+
+    ``dense_caches``: output of ``prefill`` for a single request (B=1,
+    capacity == padded prefill length S).  ``blocks``: (⌈S/BLOCK⌉,)
+    int32 physical block ids (logical order; ids past the real length
+    may be the scratch block).  Returns updated ``paged_caches``.
+    Layer-for-layer the adopt runs per-segment, vmapped over scanned
+    repeats, mirroring the structure conventions of ``cache_spec``.
+    """
+    blocks = jnp.asarray(blocks, jnp.int32)
+    if cfg.mla is not None:
+        adopt = attn_lib.mla_paged_adopt
+    else:
+        adopt = attn_lib.gqa_paged_adopt
+    out = []
+    segs = segments_of(cfg)
+    if len(segs) != len(paged_caches) or len(segs) != len(dense_caches):
+        raise ValueError("cache structure does not match config segments")
+    for seg, seg_p, seg_d in zip(segs, paged_caches, dense_caches):
+        pos_out = []
+        for pc, dc in zip(seg_p, seg_d):
+            if seg.reps == 1:
+                pos_out.append(adopt(pc, dc, blocks))
+            else:
+                # drop the scalar cache index from vmap (no reps axis
+                # semantics needed for adopt — only k/v rows matter)
+                if cfg.mla is None:
+                    def one(kp, vp, k, v):
+                        return adopt(attn_lib.PagedKVCache(kp, vp),
+                                     attn_lib.KVCache(k, v, None), blocks)
+                    new = jax.vmap(one)(pc.k_pool, pc.v_pool, dc.k, dc.v)
+                else:
+                    def one(pool, c_kv, k_rope):
+                        return adopt(attn_lib.PagedLatentCache(pool),
+                                     attn_lib.MLACache(c_kv, k_rope, None),
+                                     blocks)
+                    new = jax.vmap(one)(pc.pool, dc.c_kv, dc.k_rope)
+                pos_out.append(new)
+        out.append(pos_out)
+    return out
+
+
+def decode_step_paged(params, cfg: ArchConfig, caches, token, tables, lens,
+                      plan=None):
+    """Paged decode step: token (B,1) int32, block ``tables`` (B, NB)
+    int32, per-slot ``lens`` (B,) int32 → (logits (B,1,V), new pools).
+
+    Every attention layer appends the new token's KV into its pool at
+    ``tables[b, lens[b]//BLOCK]`` and attends over ``lens[b]+1`` tokens
+    through the paged Pallas kernel — bytes read scale with live
+    context, not allocated capacity.
+    """
+    tables = jnp.asarray(tables, jnp.int32)
+    lens = jnp.asarray(lens, jnp.int32)
+    x = embed(params["embed"], token)
+    x = constrain(x, ("dp", None, None))
+    x, caches, _ = _run_segments(cfg, params, x, "decode", caches, None,
+                                 plan=plan, paged=(tables, lens))
     x = apply_norm(cfg.norm, params["final_norm"], x)
     head = params.get("unembed", params["embed"])
     logits = unembed(head, x)

@@ -4,4 +4,6 @@ from repro.serve.frontend import ServeFrontend, StreamHandle  # noqa: F401
 from repro.serve.manager import (SwapEvent, TicketError,  # noqa: F401
                                  TicketManager, TicketMismatch,
                                  TicketRecord, load_ticket)
+from repro.serve.paging import (BlockPool, PoolError,  # noqa: F401
+                                blocks_needed)
 from repro.serve.ticket import PlanStats, build_decode_plan  # noqa: F401

@@ -33,6 +33,21 @@ story: hand the engine the ticket's masks and the decode projections are
 routed through the block-sparse Pallas kernel (``kernels.bsmm``), so
 decode compute/bandwidth scales with the live-tile count exactly as the
 paper's crossbar count scales with surviving 128×128 blocks.
+
+**Paged KV cache.**  For all-global-attention architectures the engine
+replaces the per-slot dense caches with per-generation *block pools*
+(``serve.paging.BlockPool`` over ``models.transformer`` paged caches):
+each slot holds a block table into a shared pool of ``BLOCK_TOKENS``-
+token KV blocks, decode attends through the paged Pallas kernel
+(``kernels.paged_attention``), and KV bytes/step scale with *live
+context* instead of allocated capacity — the KV-state analogue of the
+live-tile story above.  Admission becomes dynamic: a request is
+admitted when ``ceil((prompt + budget) / BLOCK)`` blocks are free, so a
+prompt longer than the dense ``capacity`` serves fine on an idle
+engine (the static ``oversize`` limit moves out to
+``(kv_blocks - 1) * BLOCK``); when blocks are short the request waits
+at the head of the FIFO queue and is admitted as finished requests
+release their blocks.
 """
 from __future__ import annotations
 
@@ -45,6 +60,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.paged_attention import BLOCK_TOKENS
+from repro.serve.paging import BlockPool, blocks_needed
 from repro.serve.ticket import PlanStats, build_decode_plan
 
 
@@ -136,6 +153,13 @@ class ServeReport:
     tps_p95: float = 0.0
     deadline_misses: int = 0
     swaps: int = 0                  # committed hot-swaps (rollbacks undo)
+    # paged-KV accounting (zeros when the engine runs dense caches)
+    paged: bool = False
+    kv_blocks: int = 0              # pool size per generation (incl. scratch)
+    kv_blocks_live: int = 0         # blocks holding live context right now
+    kv_blocks_peak: int = 0         # max simultaneous live blocks (all gens)
+    kv_block_bytes: int = 0         # KV bytes per block across all layers
+    kv_bytes_per_token: float = 0.0  # mean KV bytes read per decoded token
 
 
 @dataclass
@@ -156,6 +180,15 @@ class _Generation:
     cur: np.ndarray
     slot_caches: Any = None
     served: int = 0                 # requests prefilled on this ticket
+    # paged-KV state (None / unused when the engine runs dense caches)
+    pool: Optional[BlockPool] = None
+    paged_caches: Any = None        # block pools, one per attention layer
+    decode_paged: Optional[Callable] = None
+    adopt: Optional[Callable] = None
+    tables: Optional[np.ndarray] = None       # (slots, NB) int32
+    lens: Optional[np.ndarray] = None         # (slots,) int32 tokens written
+    slot_nblocks: Optional[np.ndarray] = None  # blocks allocated per slot
+    sized: dict = field(default_factory=dict)  # per-capacity jitted prefills
 
     def active_count(self) -> int:
         return sum(1 for r in self.slot_reqs if r is not None)
@@ -165,12 +198,17 @@ class _Generation:
         self.slot_gens[s] = None
 
 
-def _default_buckets(capacity: int) -> List[int]:
+def _default_buckets(limit: int) -> List[int]:
+    """Power-of-two prefill buckets capped at the largest *admissible*
+    prefill length.  ``max_new_tokens >= 1`` means no admitted prompt is
+    ever longer than ``limit - 1`` tokens, so a bucket at ``limit``
+    would compile a prefill closure no request can reach."""
+    top = max(limit - 1, 1)
     out, b = [], 8
-    while b < capacity:
+    while b < top:
         out.append(b)
         b *= 2
-    out.append(capacity)
+    out.append(top)
     return out
 
 
@@ -196,7 +234,19 @@ class ServeEngine:
 
     Oversized requests — ``len(prompt) + max_new_tokens > capacity`` —
     are rejected at ``submit`` (``SubmitRejected("oversize")``) rather
-    than silently decoding past the KV-cache capacity.
+    than silently decoding past the KV-cache capacity.  With paged KV
+    the static limit moves out to ``max_context`` and admission becomes
+    dynamic (see below).
+
+    ``paged`` (default None = auto) switches decode onto the paged KV
+    cache: auto-enables when the architecture supports it
+    (``transformer.supports_paged_decode``) and ``decode_fn`` is the
+    stock ``transformer.decode_step`` (custom decode fns keep dense
+    slot caches — they never learned the paged protocol).  ``kv_blocks``
+    sizes each generation's block pool (default: one scratch block +
+    enough blocks for every slot at dense ``capacity``, so the default
+    paged engine admits at least the dense engine's load); block id 0
+    is the scratch block idle table rows point at.
     """
 
     def __init__(self, *, params, cfg, prefill_fn, decode_fn,
@@ -208,7 +258,9 @@ class ServeEngine:
                  prefill_buckets: Optional[Sequence[int]] = None,
                  queue_limit: Optional[int] = None,
                  clock: Optional[Callable[[], float]] = None,
-                 heartbeat=None, heartbeat_worker: str = "engine"):
+                 heartbeat=None, heartbeat_worker: str = "engine",
+                 paged: Optional[bool] = None,
+                 kv_blocks: Optional[int] = None):
         if batch_slots < 1:
             raise ValueError(f"batch_slots must be >= 1, got {batch_slots}")
         if capacity < 2:
@@ -239,8 +291,38 @@ class ServeEngine:
             self._masked_prefill = supports_masked_prefill(cfg)
         except Exception:
             self._masked_prefill = False
+
+        # -- paged KV cache ---------------------------------------------
+        self._tfm = None
+        paged_ok = False
+        try:
+            from repro.models import transformer as _tfm
+            self._tfm = _tfm
+            paged_ok = (_tfm.supports_paged_decode(cfg)
+                        and decode_fn is _tfm.decode_step)
+        except Exception:
+            pass
+        if paged is None:
+            paged = paged_ok
+        elif paged and not paged_ok:
+            raise ValueError(
+                "paged=True needs a paged-capable architecture (all-global-"
+                "attention) and the stock transformer.decode_step decode_fn")
+        self.paged = bool(paged)
+        if self.paged:
+            if kv_blocks is None:
+                kv_blocks = self.slots * blocks_needed(capacity,
+                                                       BLOCK_TOKENS) + 1
+            if kv_blocks < 2:
+                raise ValueError(f"kv_blocks must be >= 2, got {kv_blocks}")
+            self.kv_blocks = int(kv_blocks)
+            self.max_context = (self.kv_blocks - 1) * BLOCK_TOKENS
+        else:
+            self.kv_blocks = 0
+            self.max_context = capacity
+
         self._buckets = sorted(prefill_buckets) if prefill_buckets \
-            else _default_buckets(capacity)
+            else _default_buckets(self.max_context)
 
         self.queue_limit = queue_limit
         self.clock = clock or time.perf_counter
@@ -260,6 +342,10 @@ class ServeEngine:
         self._busy_acc = 0
         self._deadline_misses = 0
         self._swaps = 0
+        self._kv_bytes = 0           # analytic KV bytes read by paged decode
+        self._kv_tokens = 0          # tokens decoded on the paged path
+        self._kv_peak = 0            # peak live blocks across generations
+        self._block_bytes = 0        # KV bytes per block across all layers
         self._t0: Optional[float] = None
         self._t_last: Optional[float] = None
         self._install_generation(params, masks, use_bsmm)
@@ -302,6 +388,25 @@ class ServeEngine:
             slot_reqs=[None] * self.slots,
             slot_gens=[None] * self.slots,
             cur=np.zeros((self.slots,), np.int32))
+        if self.paged:
+            tfm = self._tfm
+            gen.pool = BlockPool(self.kv_blocks)
+            gen.paged_caches = tfm.make_paged_caches(cfg, self.kv_blocks)
+            if not self._block_bytes:
+                spec = tfm.paged_cache_spec(cfg, self.kv_blocks)
+                total = sum(int(np.prod(s.shape)) * s.dtype.itemsize
+                            for s in jax.tree.leaves(spec))
+                self._block_bytes = total // self.kv_blocks
+            gen.decode_paged = jax.jit(
+                lambda p, caches, tok, tables, lens: tfm.decode_step_paged(
+                    p, cfg, caches, tok, tables, lens, **plankw))
+            gen.adopt = jax.jit(
+                lambda paged, dense, blocks: tfm.adopt_prefill(
+                    cfg, paged, dense, blocks))
+            nb = self.kv_blocks - 1     # one request may hold every block
+            gen.tables = np.zeros((self.slots, nb), np.int32)
+            gen.lens = np.zeros((self.slots,), np.int32)
+            gen.slot_nblocks = np.zeros((self.slots,), np.int64)
         self._next_gid += 1
         self._gens.append(gen)
         return gen.gid
@@ -376,12 +481,15 @@ class ServeEngine:
             raise SubmitRejected(
                 "bad_budget", f"request {req.uid}: max_new_tokens must be "
                 f">= 1, got {req.max_new_tokens}", req.uid)
-        if n + req.max_new_tokens > self.capacity:
+        if n + req.max_new_tokens > self.max_context:
+            what = (f"paged KV limit ((kv_blocks-1)*BLOCK = "
+                    f"{self.max_context})" if self.paged
+                    else f"KV-cache capacity ({self.capacity})")
             raise SubmitRejected(
                 "oversize",
                 f"request {req.uid}: prompt ({n}) + max_new_tokens "
-                f"({req.max_new_tokens}) exceeds KV-cache capacity "
-                f"({self.capacity}); shorten the request or raise capacity",
+                f"({req.max_new_tokens}) exceeds {what}; shorten the "
+                "request or raise capacity",
                 req.uid)
         if self.queue_limit is not None \
                 and len(self.queue) >= self.queue_limit:
@@ -455,13 +563,37 @@ class ServeEngine:
         for b in self._buckets:
             if b >= n:
                 return b
-        return self.capacity
+        return self._buckets[-1]
+
+    def _sized_prefill(self, gen: _Generation, masked: bool):
+        """Paged-mode prefill closures: the dense cache capacity is the
+        *padded prompt length* (``toks.shape[1]``, static at trace), not
+        the engine capacity — the cache only exists long enough to be
+        scattered into pool blocks, so sizing it to the prompt keeps
+        adopt cost linear in the prompt.  One jitted fn per generation;
+        jax retraces per bucket exactly like the dense closures."""
+        key = "masked" if masked else "exact"
+        fn = gen.sized.get(key)
+        if fn is None:
+            cfg, prefill_fn = self.cfg, self._prefill_fn
+            plankw = {} if gen.plan is None else {"plan": gen.plan}
+            if masked:
+                fn = jax.jit(lambda p, toks, vl: prefill_fn(
+                    p, cfg, {"tokens": toks}, toks.shape[1], valid_len=vl,
+                    **plankw))
+            else:
+                fn = jax.jit(lambda p, toks: prefill_fn(
+                    p, cfg, {"tokens": toks}, toks.shape[1], **plankw))
+            gen.sized[key] = fn
+        return fn
 
     def _prefill_request(self, gen: _Generation, req: Request, rng):
-        """Single-request prefill → (first sampled token, caches).
+        """Single-request prefill → (first sampled token, caches, S).
 
         ``rng`` is the request's sampling stream — shared with the
         decode loop so prefill and decode draws never reuse noise.
+        ``S`` is the dense cache length actually prefilled (the padded
+        prompt length in paged mode; the engine capacity otherwise).
         """
         prompt = np.asarray(req.prompt, np.int32)
         n = len(prompt)
@@ -473,18 +605,23 @@ class ServeEngine:
             logits, caches = gen.prefill_frames(
                 gen.params, jnp.asarray(prompt[None]),
                 jnp.asarray(frames[None]))
+            S = self.capacity
         elif self._masked_prefill:
             S = self._bucket(n)
             toks = np.zeros((1, S), np.int32)
             toks[0, :n] = prompt                       # right-pad
-            logits, caches = gen.prefill_masked(
-                gen.params, jnp.asarray(toks),
-                jnp.asarray([n], jnp.int32))
+            fn = self._sized_prefill(gen, True) if self.paged \
+                else gen.prefill_masked
+            logits, caches = fn(gen.params, jnp.asarray(toks),
+                                jnp.asarray([n], jnp.int32))
+            S = S if self.paged else self.capacity
         else:
-            logits, caches = gen.prefill_exact(
-                gen.params, jnp.asarray(prompt[None]))
+            fn = self._sized_prefill(gen, False) if self.paged \
+                else gen.prefill_exact
+            logits, caches = fn(gen.params, jnp.asarray(prompt[None]))
+            S = n if self.paged else self.capacity
         tok = self._sample_row(np.asarray(logits[0, -1]), rng)
-        return tok, caches
+        return tok, caches, S
 
     # -- lifecycle helpers -------------------------------------------------
     def _finish(self, req: Request, status: str,
@@ -526,6 +663,18 @@ class ServeEngine:
                 keep.append(req)
         self.queue = keep
 
+    def _free_slot(self, gen: _Generation, s: int) -> None:
+        """Release a slot AND its paged-KV state: blocks (plus any
+        unspent reservation) go back to the generation's pool, the
+        table row resets to the scratch block, the length to zero."""
+        req = gen.slot_reqs[s]
+        if gen.pool is not None and req is not None:
+            gen.pool.release(req.uid)
+            gen.tables[s, :] = 0
+            gen.lens[s] = 0
+            gen.slot_nblocks[s] = 0
+        gen.free_slot(s)
+
     def _expire_slots(self, out: List[Request]) -> None:
         # mid-decode cancellation: the slot is freed NOW and refilled
         # this same tick — an expired request never blocks admission
@@ -535,9 +684,27 @@ class ServeEngine:
                 if req is not None and self._expired(req):
                     self._deadline_misses += 1
                     self._finish(req, "expired", out)
-                    gen.free_slot(s)
+                    self._free_slot(gen, s)
 
     # -- the scheduler -----------------------------------------------------
+    def _adopt_request(self, gen: _Generation, req: Request, s: int,
+                       caches, n: int, S: int) -> None:
+        """Scatter a request's dense prefill caches into pool blocks and
+        point slot ``s``'s table row at them.  Blocks are drawn from the
+        request's reservation; table entries past the prompt (the padded
+        bucket tail) stay on the scratch block — pad keys land there or
+        in the last real block's tail, both masked by ``lens``."""
+        nb_real = blocks_needed(n, BLOCK_TOKENS)
+        nb_total = blocks_needed(S, BLOCK_TOKENS)
+        blocks = [gen.pool.alloc(req.uid) for _ in range(nb_real)]
+        blocks += [0] * (nb_total - nb_real)
+        gen.paged_caches = gen.adopt(gen.paged_caches, caches,
+                                     jnp.asarray(blocks, jnp.int32))
+        gen.tables[s, :] = 0
+        gen.tables[s, :nb_real] = blocks[:nb_real]
+        gen.lens[s] = n
+        gen.slot_nblocks[s] = nb_real
+
     def _refill(self, out: List[Request]) -> None:
         gen = self._gens[-1]            # admissions target: newest ticket
         for s in range(self.slots):
@@ -547,8 +714,22 @@ class ServeEngine:
                     self._deadline_misses += 1
                     self._finish(req, "expired", out)
                     continue
+                n = len(req.prompt)
+                if gen.pool is not None:
+                    # dynamic admission: the request enters a slot only
+                    # when its whole block budget can be reserved —
+                    # every later alloc is then guaranteed, so decode
+                    # never deadlocks mid-stream.  Short on blocks →
+                    # the request waits at the FIFO head (no reorder)
+                    # until finished requests release theirs.
+                    need = blocks_needed(n + req.max_new_tokens,
+                                         BLOCK_TOKENS)
+                    if not gen.pool.can_reserve(need):
+                        self.queue.appendleft(req)
+                        return
+                    gen.pool.reserve(req.uid, need)
                 rng = self._gen_for(req)
-                tok, caches = self._prefill_request(gen, req, rng)
+                tok, caches, S = self._prefill_request(gen, req, rng)
                 self._prefills += 1
                 gen.served += 1
                 req.generation = gen.gid
@@ -556,25 +737,60 @@ class ServeEngine:
                 self._emit_token(req, tok)
                 if ((req.eos_id is not None and tok == req.eos_id)
                         or req.max_new_tokens <= 1):
+                    if gen.pool is not None:
+                        gen.pool.release(req.uid)
                     self._finish(req, "done", out)   # done at prefill
                     continue
-                if gen.slot_caches is None:
-                    gen.slot_caches = self._empty_slot_caches(caches)
-                    if self._splice is None:
-                        self._splice = self._make_splice(caches)
-                gen.slot_caches = self._splice(gen.slot_caches, caches,
-                                               jnp.asarray(s, jnp.int32))
+                if gen.pool is not None:
+                    self._adopt_request(gen, req, s, caches, n, S)
+                else:
+                    if gen.slot_caches is None:
+                        gen.slot_caches = self._empty_slot_caches(caches)
+                        if self._splice is None:
+                            self._splice = self._make_splice(caches)
+                    gen.slot_caches = self._splice(gen.slot_caches, caches,
+                                                   jnp.asarray(s, jnp.int32))
                 gen.slot_reqs[s] = req
                 gen.slot_gens[s] = rng
                 gen.cur[s] = tok
+        self._kv_peak = max(self._kv_peak, self.kv_blocks_live)
 
     def _decode_gen(self, gen: _Generation, out: List[Request]) -> None:
         active = [s for s in range(self.slots)
                   if gen.slot_reqs[s] is not None]
         if not active:
             return
-        logits, gen.slot_caches = gen.decode(gen.params, gen.slot_caches,
-                                             jnp.asarray(gen.cur[:, None]))
+        if gen.pool is not None:
+            # alloc-on-append: the block the new token lands in
+            # (lens // BLOCK) must exist before the decode step writes
+            # it.  Draws come from the request's reservation, so they
+            # cannot fail.
+            for s in active:
+                req = gen.slot_reqs[s]
+                while gen.slot_nblocks[s] <= gen.lens[s] // BLOCK_TOKENS:
+                    pid = gen.pool.alloc(req.uid)
+                    gen.tables[s, gen.slot_nblocks[s]] = pid
+                    gen.slot_nblocks[s] += 1
+            self._kv_peak = max(self._kv_peak, self.kv_blocks_live)
+            # copy the host-side table/len arrays at the device boundary:
+            # jnp.asarray of a numpy array may alias its buffer on CPU,
+            # and the scheduler mutates these in place while the decode
+            # step is still dispatching (async) — aliasing would race
+            logits, gen.paged_caches = gen.decode_paged(
+                gen.params, gen.paged_caches,
+                jnp.asarray(gen.cur[:, None].copy()),
+                jnp.asarray(gen.tables.copy()), jnp.asarray(gen.lens.copy()))
+            # analytic bytes: the kernel gathers ceil((len+1)/BLOCK)
+            # live blocks per active row — bandwidth scales with live
+            # context, independent of capacity/kv_blocks
+            self._kv_bytes += self._block_bytes * sum(
+                blocks_needed(int(gen.lens[s]) + 1, BLOCK_TOKENS)
+                for s in active)
+            self._kv_tokens += len(active)
+            gen.lens[active] += 1
+        else:
+            logits, gen.slot_caches = gen.decode(
+                gen.params, gen.slot_caches, jnp.asarray(gen.cur[:, None]))
         self._decode_steps += 1
         self._busy_acc += len(active)
         logits_h = np.asarray(logits[:, 0])
@@ -586,7 +802,7 @@ class ServeEngine:
             if ((req.eos_id is not None and tok == req.eos_id)
                     or len(req.tokens) >= req.max_new_tokens):
                 self._finish(req, "done", out)
-                gen.free_slot(s)     # freed: refilled next tick
+                self._free_slot(gen, s)  # freed: refilled next tick
 
     def step(self) -> List[Request]:
         """One scheduler tick: deadline sweep, slot refill (newest
@@ -615,6 +831,11 @@ class ServeEngine:
         return not self.queue and all(g.active_count() == 0
                                       for g in self._gens)
 
+    @property
+    def kv_blocks_live(self) -> int:
+        """Blocks holding live context, summed over live generations."""
+        return sum(g.pool.live for g in self._gens if g.pool is not None)
+
     def run(self) -> List[Request]:
         """Serve everything in the queue to completion (continuous).
 
@@ -639,6 +860,32 @@ class ServeEngine:
             logits, caches = gen.prefill_frames(
                 gen.params, jnp.asarray(prompt[None]),
                 jnp.asarray(np.asarray(frames, np.float32)[None]))
+        elif len(prompt) + max_new > self.capacity:
+            # probe longer than the dense capacity (possible in paged
+            # mode, where admission allows it): verify through a
+            # right-sized dense prefill/decode pair instead
+            cap = len(prompt) + max_new
+            key = ("smoke", cap)
+            fns = gen.sized.get(key)
+            if fns is None:
+                cfg, prefill_fn = self.cfg, self._prefill_fn
+                decode_fn = self._decode_fn
+                plankw = {} if gen.plan is None else {"plan": gen.plan}
+                fns = (jax.jit(lambda p, toks: prefill_fn(
+                           p, cfg, {"tokens": toks}, cap, **plankw)),
+                       jax.jit(lambda p, caches, tok: decode_fn(
+                           p, cfg, caches, tok, **plankw)))
+                gen.sized[key] = fns
+            pf, dec = fns
+            logits, caches = pf(gen.params, jnp.asarray(prompt[None]))
+            tok = int(np.argmax(np.asarray(logits[0, -1])))
+            out = [tok]
+            for _ in range(max_new - 1):
+                logits, caches = dec(gen.params, caches,
+                                     jnp.asarray([[tok]], jnp.int32))
+                tok = int(np.argmax(np.asarray(logits[0, 0])))
+                out.append(tok)
+            return out
         else:
             logits, caches = gen.prefill_exact(gen.params,
                                                jnp.asarray(prompt[None]))
@@ -687,4 +934,11 @@ class ServeEngine:
             tps_p50=_pct(tps, 50), tps_p95=_pct(tps, 95),
             deadline_misses=self._deadline_misses,
             swaps=self._swaps,
+            paged=self.paged,
+            kv_blocks=self.kv_blocks,
+            kv_blocks_live=self.kv_blocks_live,
+            kv_blocks_peak=self._kv_peak,
+            kv_block_bytes=self._block_bytes,
+            kv_bytes_per_token=(self._kv_bytes / self._kv_tokens
+                                if self._kv_tokens else 0.0),
         )

@@ -268,6 +268,80 @@ def test_p112_engine_consistency(lm_masks):
 
 
 # ---------------------------------------------------------------------------
+# paged KV invariants: P113-P115
+# ---------------------------------------------------------------------------
+def test_p115_block_pool_accounting():
+    from repro.analysis import verify_block_pool
+    from repro.serve import BlockPool
+    pool = BlockPool(6)
+    pool.reserve(1, 2)
+    pool.alloc(1)
+    assert verify_block_pool(pool) == []
+    # seeded defect: a block tracked as both free and owned
+    pool._owned[1].append(pool._free[-1])
+    assert_code(verify_block_pool(pool), "P115", "error")
+    # seeded defect: a block leaks out of the accounting entirely
+    pool2 = BlockPool(6)
+    pool2._free.pop()
+    assert_code(verify_block_pool(pool2), "P115", "error")
+
+
+def test_p113_block_table_consistency():
+    from repro.analysis import verify_block_tables
+    from repro.serve import BlockPool
+    T = 128
+    pool = BlockPool(8)
+    pool.reserve(7, 3)
+    b0, b1 = pool.alloc(7), pool.alloc(7)
+    tables = np.zeros((2, 4), np.int32)
+    tables[0, :2] = [b0, b1]
+    lens = np.array([T + 5, 0], np.int32)
+    nbs = np.array([2, 0], np.int64)
+    uids = [7, None]
+    kw = dict(block_tokens=T)
+    assert verify_block_tables(pool, tables, lens, nbs, uids, **kw) == []
+    # logical order broken vs pool ownership
+    bad = tables.copy()
+    bad[0, :2] = [b1, b0]
+    assert_code(verify_block_tables(pool, bad, lens, nbs, uids, **kw),
+                "P113", "error")
+    # block count disagrees with the token count
+    short = lens.copy()
+    short[0] = 5                      # 5 tokens need 1 block, slot holds 2
+    assert_code(verify_block_tables(pool, tables, short, nbs, uids, **kw),
+                "P113", "error")
+    # inactive slot with leftover state
+    stale = lens.copy()
+    stale[1] = 4
+    assert_code(verify_block_tables(pool, tables, stale, nbs, uids, **kw),
+                "P113", "error")
+    # dead tail entry off the scratch block
+    tail = tables.copy()
+    tail[0, 3] = 5
+    assert_code(verify_block_tables(pool, tail, lens, nbs, uids, **kw),
+                "P113", "error")
+
+
+def test_p114_paged_reconstruction():
+    from repro.analysis import verify_paged_reconstruction
+    from repro.models import attention as attn
+    rng = np.random.default_rng(3)
+    T = attn.BLOCK_TOKENS
+    H, d, S = 2, 4, T + 3
+    k = jnp.asarray(rng.random((1, S, H, d)), jnp.float32)
+    v = jnp.asarray(rng.random((1, S, H, d)), jnp.float32)
+    dense = [[attn.KVCache(k, v, jnp.asarray(S, jnp.int32))]]
+    empty = attn.PagedKVCache(jnp.zeros((4, T, H, d), jnp.float32),
+                              jnp.zeros((4, T, H, d), jnp.float32))
+    blocks = jnp.asarray([1, 2], jnp.int32)
+    adopted = [[attn.gqa_paged_adopt(empty, dense[0][0], blocks)]]
+    assert verify_paged_reconstruction(adopted, dense, blocks, S) == []
+    # seeded defect: gathering in the wrong logical order
+    assert_code(verify_paged_reconstruction(adopted, dense, [2, 1], S),
+                "P114", "error")
+
+
+# ---------------------------------------------------------------------------
 # jaxpr auditor: J201-J207
 # ---------------------------------------------------------------------------
 def test_j201_dense_dot_on_covered_shape(plan, mask):

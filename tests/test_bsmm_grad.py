@@ -91,6 +91,57 @@ def test_sparse_dense_ragged_m_stays_on_kernel(monkeypatch):
                      np.ones((100, 128), np.float32))
 
 
+# -- fused bias+activation epilogue -----------------------------------------
+@pytest.mark.parametrize("act", [None, "relu", "gelu", "silu"])
+@pytest.mark.parametrize("with_bias", [True, False])
+def test_epilogue_fused_matches_unfused_oracle(act, with_bias):
+    """``plan_matmul(..., bias=b, act=a)`` fuses the epilogue into the
+    kernel flush; forward and all grads (incl. db) must match the
+    unfused two-pass oracle on live tiles."""
+    if act is None and not with_bias:
+        pytest.skip("no epilogue — identical to the plain path")
+    from repro.kernels.bsmm import _EPILOGUE_ACTS
+    rng = np.random.RandomState(11)
+    M, K, N = 24, 256, 384
+    mask = _random_mask(rng, K, N)
+    plan = make_tile_plan(mask)
+    x = jnp.asarray(rng.randn(M, K), jnp.float32)
+    w = jnp.asarray(rng.randn(K, N) * mask, jnp.float32)
+    b = jnp.asarray(rng.randn(N), jnp.float32) if with_bias else None
+    fn = _EPILOGUE_ACTS.get(act, lambda z: z)
+
+    def fused(x, w, b):
+        return plan_matmul(x, w, plan, bias=b, act=act)
+
+    def oracle(x, w, b):
+        z = plan_matmul(x, w, plan)
+        return fn(z if b is None else z + b)
+
+    np.testing.assert_allclose(np.asarray(fused(x, w, b)),
+                               np.asarray(oracle(x, w, b)), **TOL)
+    args = (x, w, b) if with_bias else (x, w)
+    loss_f = lambda *a: jnp.sum(jnp.sin(fused(*a, *(() if with_bias else (None,)))))
+    loss_o = lambda *a: jnp.sum(jnp.sin(oracle(*a, *(() if with_bias else (None,)))))
+    gf = jax.grad(loss_f, argnums=tuple(range(len(args))))(*args)
+    go = jax.grad(loss_o, argnums=tuple(range(len(args))))(*args)
+    names = ("dx", "dw", "db")[:len(args)]
+    for name, a, o in zip(names, gf, go):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(o),
+                                   rtol=1e-4, atol=2e-3, err_msg=name)
+
+
+def test_epilogue_rejects_unknown_activation():
+    rng = np.random.RandomState(12)
+    mask = np.ones((128, 128), np.float32)
+    plan = make_tile_plan(mask)
+    x = jnp.asarray(rng.randn(8, 128), jnp.float32)
+    w = jnp.asarray(rng.randn(128, 128), jnp.float32)
+    with pytest.raises(ValueError, match="unsupported epilogue act"):
+        plan_matmul(x, w, plan, act="tanh")
+    with pytest.raises(ValueError, match="unsupported epilogue act"):
+        plan_matmul(x, w, None, act="tanh")
+
+
 # -- model layers: plan path vs dense on pre-masked params ------------------
 # Inside a live tile the kernel's dw covers the whole tile (the
 # elementwise mask is the masked optimizer's job), so the comparison

@@ -76,7 +76,10 @@ def test_submit_rejections_carry_machine_readable_reasons(setup):
                            max_new_tokens=0))
     assert e.value.reason == "bad_budget"
     with pytest.raises(SubmitRejected) as e:
-        eng.submit(Request(uid=2, prompt=np.arange(CAP, dtype=np.int32),
+        # paged admission stretches the static limit to max_context
+        eng.submit(Request(uid=2,
+                           prompt=np.arange(eng.max_context,
+                                            dtype=np.int32) % 64,
                            max_new_tokens=4))
     assert e.value.reason == "oversize"
     eng.submit(Request(uid=3, prompt=np.arange(1, 8, dtype=np.int32),

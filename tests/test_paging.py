@@ -1,0 +1,356 @@
+"""Paged KV cache: block-pool discipline, paged-attention kernel vs its
+dense oracle, and paged-vs-dense serve-engine oracles (ragged batches,
+hot-swap mid-stream, long-prompt admission).
+
+The ``hypothesis`` property test soft-skips when the optional dev extra
+is absent (mirroring ``test_property.py``); a deterministic randomized
+lifecycle test covers the same pool discipline in the bare environment.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import verify_block_pool
+from repro.configs import get_arch, scaled_down
+from repro.kernels.paged_attention import (BLOCK_TOKENS, paged_attention,
+                                           paged_attention_ref, paged_gather)
+from repro.models import transformer as tfm
+from repro.serve import BlockPool, PoolError, Request, ServeEngine
+from repro.serve.engine import _default_buckets
+from repro.serve.paging import blocks_needed
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:            # pragma: no cover - depends on environment
+    HAVE_HYPOTHESIS = False
+
+CAP = 48     # engine capacity chosen < BLOCK_TOKENS so paging is load-bearing
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = scaled_down(get_arch("llama3.2-3b"), dtype="float32")
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _engine(cfg, params, slots=3, capacity=CAP, **kw):
+    return ServeEngine(params=params, cfg=cfg, prefill_fn=tfm.prefill,
+                       decode_fn=tfm.decode_step, batch_slots=slots,
+                       capacity=capacity, **kw)
+
+
+def _run(eng, reqs):
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run()
+    assert all(r.done for r in done)
+    return {r.uid: r.tokens for r in done}
+
+
+def _ragged_requests(cfg, n=7, seed=1, max_new=6):
+    rng = np.random.RandomState(seed)
+    return [Request(uid=i,
+                    prompt=rng.randint(1, cfg.vocab_size,
+                                       size=rng.randint(4, 14)
+                                       ).astype(np.int32),
+                    max_new_tokens=max_new)
+            for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# BlockPool discipline
+# ---------------------------------------------------------------------------
+def _assert_pool_clean(pool):
+    pool.check()
+    findings = verify_block_pool(pool, where="test")
+    assert not findings, [str(f) for f in findings]
+
+
+def test_pool_reserve_alloc_release_roundtrip():
+    pool = BlockPool(8)
+    assert pool.available == 7          # block 0 is scratch
+    pool.reserve(1, 3)
+    assert pool.available == 4 and pool.outstanding == 3
+    a, b = pool.alloc(1), pool.alloc(1)
+    assert a != b and 0 not in (a, b)
+    assert pool.owned(1) == (a, b)      # logical allocation order
+    assert pool.live == 2 and pool.peak == 2
+    _assert_pool_clean(pool)
+    freed = pool.release(1)
+    assert freed == (a, b)
+    assert pool.live == 0 and pool.available == 7 and pool.outstanding == 0
+    _assert_pool_clean(pool)
+
+
+def test_pool_rejects_misuse():
+    pool = BlockPool(4)
+    with pytest.raises(PoolError, match="cannot reserve"):
+        pool.reserve(1, 4)              # only 3 non-scratch blocks
+    pool.reserve(1, 1)
+    with pytest.raises(PoolError, match="already admitted"):
+        pool.reserve(1, 1)
+    with pytest.raises(PoolError, match="not admitted"):
+        pool.alloc(9)
+    pool.alloc(1)
+    with pytest.raises(PoolError, match="exhausted"):
+        pool.alloc(1)                   # reservation was 1 block
+    with pytest.raises(PoolError, match="not admitted"):
+        pool.release(9)
+    with pytest.raises(ValueError, match="positive"):
+        pool.reserve(2, 0)
+
+
+def test_pool_reservations_guarantee_allocs():
+    """Two half-admitted requests can never strand each other: once a
+    reservation fits, every alloc it covers must succeed."""
+    pool = BlockPool(5)                 # 4 usable blocks
+    pool.reserve(1, 2)
+    pool.reserve(2, 2)
+    assert not pool.can_reserve(1)      # fully reserved
+    # interleave the draw-downs; none may raise
+    pool.alloc(1)
+    pool.alloc(2)
+    pool.alloc(2)
+    pool.alloc(1)
+    assert pool.live == 4
+    _assert_pool_clean(pool)
+
+
+def _pool_lifecycle(ops, num_blocks):
+    """Replay (kind, uid, n) ops against a BlockPool, checking balance
+    after every step; returns how many ops were admissible."""
+    pool = BlockPool(num_blocks)
+    admitted = 0
+    for kind, uid, n in ops:
+        if kind == "reserve":
+            if uid in pool._owned or not pool.can_reserve(n):
+                continue
+            pool.reserve(uid, n)
+        elif kind == "alloc":
+            if pool._reserved.get(uid, 0) <= 0:
+                continue
+            pid = pool.alloc(uid)
+            assert pid not in pool.reserved_ids
+        else:
+            if uid not in pool._owned:
+                continue
+            pool.release(uid)
+        admitted += 1
+        _assert_pool_clean(pool)
+        assert pool.live + len(pool._free) + len(pool.reserved_ids) \
+            == pool.num_blocks
+    return admitted
+
+
+def test_pool_randomized_lifecycle():
+    """Deterministic random op soup — always runs, even without the
+    hypothesis extra."""
+    rng = np.random.RandomState(0)
+    for trial in range(20):
+        num_blocks = int(rng.randint(2, 12))
+        ops = [(("reserve", "alloc", "release")[rng.randint(3)],
+                int(rng.randint(4)), int(rng.randint(1, 4)))
+               for _ in range(60)]
+        assert _pool_lifecycle(ops, num_blocks) > 0 or num_blocks == 2
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=50, deadline=None)
+    @given(
+        num_blocks=st.integers(min_value=2, max_value=16),
+        ops=st.lists(
+            st.tuples(st.sampled_from(["reserve", "alloc", "release"]),
+                      st.integers(min_value=0, max_value=5),
+                      st.integers(min_value=1, max_value=5)),
+            max_size=80),
+    )
+    def test_pool_property_no_leak_no_double_alloc(num_blocks, ops):
+        """Any admissible op sequence keeps the pool balanced: every
+        block tracked exactly once, reservations never exceed free."""
+        _pool_lifecycle(ops, num_blocks)
+else:       # keep the suite honest about what it skipped
+    @pytest.mark.skip(reason="hypothesis dev extra not installed")
+    def test_pool_property_no_leak_no_double_alloc():
+        pass
+
+
+def test_blocks_needed_is_ceil_div():
+    assert blocks_needed(1, 128) == 1
+    assert blocks_needed(128, 128) == 1
+    assert blocks_needed(129, 128) == 2
+    assert blocks_needed(256, 128) == 2
+
+
+# ---------------------------------------------------------------------------
+# _default_buckets: never compile a prefill no request can reach
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("limit", [8, 48, 64, 96, 127, 128, 129, 512, 1920])
+def test_default_buckets_capped_at_admissible_prefill(limit):
+    buckets = _default_buckets(limit)
+    assert buckets == sorted(buckets)
+    # max_new_tokens >= 1 → longest admissible prompt is limit - 1
+    assert buckets[-1] == max(limit - 1, 1)
+    assert all(b <= limit - 1 for b in buckets) or limit <= 2
+
+
+def test_engine_buckets_cover_paged_max_context(setup):
+    """A paged engine's buckets stretch to max_context (kv_blocks-driven),
+    not the dense per-slot capacity."""
+    cfg, params = setup
+    eng = _engine(cfg, params, slots=2, kv_blocks=5)
+    assert eng.paged and eng.max_context == 4 * BLOCK_TOKENS
+    assert eng._buckets[-1] == eng.max_context - 1
+
+
+# ---------------------------------------------------------------------------
+# paged-attention kernel vs exact dense oracle
+# ---------------------------------------------------------------------------
+def _pool_setup(rng, B, Hq, Hkv, hd, dv, T, NB, P):
+    q = jnp.asarray(rng.standard_normal((B, Hq, hd)), jnp.float32)
+    k_pool = jnp.asarray(rng.standard_normal((P, T, Hkv, hd)), jnp.float32)
+    v_pool = jnp.asarray(rng.standard_normal((P, T, Hkv, dv)), jnp.float32)
+    # distinct live blocks per sequence, dead tail on scratch block 0
+    perm = rng.permutation(P - 1)[:B * NB].reshape(B, NB) + 1
+    lengths = rng.integers(1, NB * T + 1, size=B)
+    tables = np.zeros((B, NB), np.int32)
+    for b in range(B):
+        nb = blocks_needed(int(lengths[b]), T)
+        tables[b, :nb] = perm[b, :nb]
+    return q, k_pool, v_pool, jnp.asarray(tables), \
+        jnp.asarray(lengths, jnp.int32)
+
+
+def test_paged_kernel_matches_ref_gqa():
+    rng = np.random.default_rng(0)
+    T = BLOCK_TOKENS
+    q, k_pool, v_pool, tables, lengths = _pool_setup(
+        rng, B=3, Hq=4, Hkv=2, hd=16, dv=16, T=T, NB=3, P=10)
+    scale = 16 ** -0.5
+    got = paged_attention(q, k_pool, v_pool, tables, lengths, scale=scale)
+    want = paged_attention_ref(q, k_pool, v_pool, tables, lengths,
+                               scale=scale)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_paged_kernel_matches_ref_mla_fused_v():
+    """v_pool=None + v_dim: values are the first v_dim key lanes (the
+    absorbed-MLA layout, one pool read per block)."""
+    rng = np.random.default_rng(1)
+    T = BLOCK_TOKENS
+    q, k_pool, _, tables, lengths = _pool_setup(
+        rng, B=2, Hq=3, Hkv=1, hd=24, dv=24, T=T, NB=2, P=6)
+    scale = 24 ** -0.5
+    got = paged_attention(q, k_pool, None, tables, lengths,
+                          scale=scale, v_dim=16)
+    want = paged_attention_ref(q, k_pool, None, tables, lengths,
+                               scale=scale, v_dim=16)
+    assert got.shape == (2, 3, 16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_paged_kernel_ignores_dead_block_contents():
+    """Entries past the live length point at scratch; poisoning every
+    dead block (including scratch) must not change the output."""
+    rng = np.random.default_rng(2)
+    T = BLOCK_TOKENS
+    q, k_pool, v_pool, tables, lengths = _pool_setup(
+        rng, B=2, Hq=2, Hkv=2, hd=8, dv=8, T=T, NB=3, P=8)
+    lengths = jnp.asarray([T + 5, 3], jnp.int32)    # 2 and 1 live blocks
+    tables = jnp.asarray([[1, 2, 0], [3, 0, 0]], jnp.int32)
+    scale = 8 ** -0.5
+    base = paged_attention(q, k_pool, v_pool, tables, lengths, scale=scale)
+    live = {1, 2, 3}
+    poison = np.asarray(k_pool).copy()
+    poisonv = np.asarray(v_pool).copy()
+    for p in range(8):
+        if p not in live:
+            poison[p] = 1e4
+            poisonv[p] = 1e4
+    got = paged_attention(q, jnp.asarray(poison), jnp.asarray(poisonv),
+                          tables, lengths, scale=scale)
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(got))
+
+
+def test_paged_gather_logical_order():
+    pool = jnp.arange(4 * 2 * 1 * 1, dtype=jnp.float32).reshape(4, 2, 1, 1)
+    tables = jnp.asarray([[3, 1]], jnp.int32)
+    dense = paged_gather(pool, tables)
+    assert dense.shape == (1, 4, 1, 1)
+    np.testing.assert_array_equal(
+        np.asarray(dense).ravel(), [6., 7., 2., 3.])
+
+
+# ---------------------------------------------------------------------------
+# serve engine: paged vs dense oracles
+# ---------------------------------------------------------------------------
+def test_paged_engine_matches_dense_greedy(setup):
+    """Ragged batch over 3 slots: greedy tokens identical paged vs dense,
+    and the report's pool accounting balances after drain."""
+    cfg, params = setup
+    reqs = _ragged_requests(cfg)
+    dense = _run(_engine(cfg, params, paged=False),
+                 [Request(uid=r.uid, prompt=r.prompt.copy(),
+                          max_new_tokens=r.max_new_tokens) for r in reqs])
+    eng = _engine(cfg, params)
+    assert eng.paged
+    paged = _run(eng, reqs)
+    assert dense == paged
+    rep = eng.report
+    assert rep.paged and rep.kv_blocks_live == 0 and rep.kv_blocks_peak >= 3
+    assert rep.kv_bytes_per_token > 0
+    for gen in eng.generations:
+        _assert_pool_clean(gen.pool)
+
+
+def test_paged_hot_swap_mid_stream(setup):
+    """Hot-swap mid-decode: requests admitted pre-swap stay bit-identical
+    to the no-swap run; post-swap requests land on the new generation."""
+    cfg, params = setup
+    reqs = _ragged_requests(cfg, n=4)
+    baseline = _run(_engine(cfg, params, slots=2),
+                    [Request(uid=r.uid, prompt=r.prompt.copy(),
+                             max_new_tokens=r.max_new_tokens) for r in reqs])
+
+    params2 = tfm.init_params(jax.random.PRNGKey(7), cfg)
+    eng = _engine(cfg, params, slots=2)
+    assert eng.paged
+    for r in reqs:
+        eng.submit(r)
+    steps = 0
+    while not eng.idle:
+        eng.step()
+        steps += 1
+        if steps == 2:
+            eng.swap(params2)
+    done = {r.uid: (r.tokens, r.generation) for r in eng._finished}
+    assert len(done) == len(reqs)
+    for uid, (toks, gid) in done.items():
+        if gid == 0:
+            assert toks == baseline[uid]
+    assert any(gid == 1 for _, gid in done.values()), \
+        "no request decoded on the swapped-in generation"
+    for gen in eng.generations:
+        _assert_pool_clean(gen.pool)
+
+
+def test_long_prompt_admitted_past_dense_capacity(setup):
+    """prompt + budget > capacity completes on an idle paged engine and
+    matches a big-capacity dense oracle (the tentpole's acceptance)."""
+    cfg, params = setup
+    rng = np.random.RandomState(3)
+    prompt = rng.randint(1, cfg.vocab_size, size=60).astype(np.int32)
+    eng = _engine(cfg, params, slots=2)
+    assert eng.paged and 60 + 8 > eng.capacity <= eng.max_context
+    got = _run(eng, [Request(uid=0, prompt=prompt.copy(),
+                             max_new_tokens=8)])
+    assert len(got[0]) == 8
+    assert eng.report.kv_blocks_peak >= blocks_needed(60 + 8, BLOCK_TOKENS)
+
+    oracle = _run(_engine(cfg, params, slots=2, capacity=128, paged=False),
+                  [Request(uid=0, prompt=prompt.copy(), max_new_tokens=8)])
+    assert got == oracle

@@ -145,7 +145,8 @@ def test_more_requests_than_slots_all_complete(setup):
 # ---------------------------------------------------------------------------
 def test_oversized_request_rejected(setup):
     cfg, params = setup
-    eng = _engine(cfg, params)
+    # dense caches: the static capacity limit still applies
+    eng = _engine(cfg, params, paged=False)
     with pytest.raises(ValueError, match="capacity"):
         eng.submit(Request(uid=0,
                            prompt=np.arange(CAP - 3, dtype=np.int32),
@@ -153,6 +154,17 @@ def test_oversized_request_rejected(setup):
     # right at the boundary is fine
     eng.submit(Request(uid=1, prompt=np.arange(CAP - 4, dtype=np.int32),
                        max_new_tokens=4))
+    # paged KV: the same request is admissible (limit is max_context),
+    # but a request beyond (kv_blocks - 1) * BLOCK is still rejected
+    eng = _engine(cfg, params)
+    assert eng.paged and eng.max_context > CAP
+    eng.submit(Request(uid=2, prompt=np.arange(CAP - 3, dtype=np.int32),
+                       max_new_tokens=4))
+    with pytest.raises(ValueError, match="paged KV limit"):
+        eng.submit(Request(uid=3,
+                           prompt=np.arange(eng.max_context,
+                                            dtype=np.int32) % 100,
+                           max_new_tokens=4))
 
 
 def test_degenerate_requests_rejected(setup):
