@@ -1,0 +1,117 @@
+"""Fleet scaling: scheduling throughput + router overhead vs engines.
+
+One CPU container runs every engine, so wall-clock cannot show real
+multi-engine speedup — the engines' jitted steps execute serially
+inside ``FleetRouter.pump``.  What the fleet layer CAN prove here is a
+*scheduling* claim and a *cost* claim:
+
+  * **scheduling throughput** — with E engines, each router tick pumps
+    E schedulers, so a fixed request burst drains in monotonically
+    fewer ticks (and monotonically more tokens per tick) as E grows.
+    That is the quantity that turns into real tokens/s the moment each
+    engine owns its own accelerator.
+  * **router overhead** — the router's own bookkeeping (dispatch,
+    health sweep, finish accounting; ``FleetRouter.dispatch_s``) must
+    stay under 5% of the time spent inside engine steps
+    (``FleetRouter.step_s``), or the control plane is eating the
+    scale-out it exists to provide.
+
+Wall-clock tokens/s and queue-wait (TTFT) percentiles are recorded for
+completeness but are CPU/interpret-mode numbers — scheduling-only, not
+a hardware claim (the README says so next to BENCH_fleet.json).
+
+Both claims are asserted at record time, same as the other benches, so
+a regression cannot silently write a JSON that contradicts the README.
+``benchmarks/run.py fleet --json`` persists to ``BENCH_fleet.json``.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from benchmarks.common import Timer, csv_line
+from repro.configs import get_arch, scaled_down
+from repro.models import transformer as tfm
+from repro.serve import ServeEngine
+from repro.serve.fleet import FleetRouter
+
+ENGINE_SWEEP = (1, 2, 4)
+REQUESTS = 12
+PROMPT_LEN = 16
+BUDGET = 8
+SLOTS = 2          # per-engine decode slots: 1 engine must run waves
+
+
+def _measure(cfg, params, n_engines: int) -> Dict:
+    engines = [ServeEngine(params=params, cfg=cfg, prefill_fn=tfm.prefill,
+                           decode_fn=tfm.decode_step, batch_slots=SLOTS,
+                           capacity=64)
+               for _ in range(n_engines)]
+    router = FleetRouter(engines)
+    rng = np.random.default_rng(0)
+    ticks = 0
+    with Timer() as t:
+        for _ in range(REQUESTS):
+            prompt = rng.integers(1, cfg.vocab_size,
+                                  size=PROMPT_LEN).astype(np.int32)
+            router.submit(prompt, max_new_tokens=BUDGET)
+        while not router.idle:           # drain, counting router ticks
+            router.pump(1)
+            ticks += 1
+    rep = router.report
+    assert rep.requests == REQUESTS
+    assert rep.tokens_generated == REQUESTS * BUDGET
+    overhead = router.dispatch_s / max(router.step_s, 1e-9)
+    return {
+        "engines": n_engines,
+        "requests": REQUESTS,
+        "tokens": rep.tokens_generated,
+        "ticks": ticks,
+        "tokens_per_tick": rep.tokens_generated / ticks,
+        "wall_s": t.us / 1e6,
+        "tokens_per_s": rep.tokens_per_s,
+        "ttft_p50_ms": rep.ttft_p50 * 1e3,
+        "ttft_p95_ms": rep.ttft_p95 * 1e3,
+        "tps_p50": rep.tps_p50,
+        "tps_p95": rep.tps_p95,
+        "dispatch_s": router.dispatch_s,
+        "step_s": router.step_s,
+        "dispatch_overhead": overhead,
+        "timing_basis": "cpu-scheduling-only",
+        "interpret": True,
+        "backend": jax.default_backend(),
+    }
+
+
+def run() -> List[Dict]:
+    cfg = scaled_down(get_arch("llama3.2-3b"), dtype="float32")
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    records: List[Dict] = []
+    for n in ENGINE_SWEEP:
+        rec = _measure(cfg, params, n)
+        rec["name"] = f"fleet_engines_{n}"
+        records.append(rec)
+        print(csv_line(
+            rec["name"], rec["wall_s"] * 1e6 / rec["tokens"],
+            f"ticks={rec['ticks']};tok_per_tick={rec['tokens_per_tick']:.2f};"
+            f"ttft_p50_ms={rec['ttft_p50_ms']:.1f};"
+            f"ttft_p95_ms={rec['ttft_p95_ms']:.1f};"
+            f"dispatch_overhead={rec['dispatch_overhead']:.4f}"))
+
+    # the headline claims, checked at record time
+    for prev, cur in zip(records, records[1:]):
+        assert cur["ticks"] <= prev["ticks"], \
+            "more engines must drain the burst in no more router ticks"
+        assert cur["tokens_per_tick"] >= prev["tokens_per_tick"], \
+            "scheduling throughput (tokens/tick) must be monotone in engines"
+    for rec in records:
+        assert rec["dispatch_overhead"] < 0.05, \
+            f"router dispatch overhead {rec['dispatch_overhead']:.4f} " \
+            f"is >= 5% of engine step time at {rec['engines']} engines"
+    return records
+
+
+if __name__ == "__main__":
+    run()

@@ -9,6 +9,7 @@ Prints ``name,us_per_call,derived`` CSV (one line per measurement).
   kernels_bench   — block-sparse train-step (fwd+bwd) tile-skip scaling
   recipes_bench   — staged recipe (paper-quant) per-stage trajectory
   paging_bench    — paged-KV decode bytes/step vs capacity & live context
+  fleet_bench     — fleet scheduling throughput + router overhead vs engines
   roofline        — corrected roofline table from the dry-run cache
 
 Run all: ``PYTHONPATH=src python -m benchmarks.run``
@@ -17,7 +18,9 @@ JSON:    ``PYTHONPATH=src python -m benchmarks.run kernels --json``
          writes ``BENCH_kernels.json``;
          ``... recipes --json`` writes ``BENCH_recipes.json`` (per-stage
          accuracy/sparsity/live-tile records for the tiny CNN recipe);
-         ``... paging --json`` writes ``BENCH_paging.json``.
+         ``... paging --json`` writes ``BENCH_paging.json``;
+         ``... fleet --json`` writes ``BENCH_fleet.json`` (timings are
+         CPU scheduling-only — see the module docstring).
 """
 import argparse
 import json
@@ -26,14 +29,16 @@ import platform
 # benches whose run() returns machine-readable records --json can dump
 _JSON_BENCHES = {"kernels": "BENCH_kernels.json",
                  "recipes": "BENCH_recipes.json",
-                 "paging": "BENCH_paging.json"}
+                 "paging": "BENCH_paging.json",
+                 "fleet": "BENCH_fleet.json"}
 
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("which", nargs="?", default="all",
                     choices=["all", "fig5", "fig6", "fig7", "fig8",
-                             "kernels", "recipes", "paging", "roofline"])
+                             "kernels", "recipes", "paging", "fleet",
+                             "roofline"])
     ap.add_argument("--json", nargs="?", const="", default=None,
                     metavar="PATH",
                     help="write the bench's records to PATH (default "
@@ -61,6 +66,9 @@ def main() -> None:
     if which in ("all", "paging"):
         from benchmarks import paging_bench
         mods.append(paging_bench)
+    if which in ("all", "fleet"):
+        from benchmarks import fleet_bench
+        mods.append(fleet_bench)
     if which in ("all", "roofline"):
         from benchmarks import roofline
         mods.append(roofline)

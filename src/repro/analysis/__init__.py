@@ -5,9 +5,10 @@ Three analyzers, one structured ``Finding`` model with stable rule
 codes (``findings.RULES``):
 
 * ``recipe_lint`` — R001–R009, recipe programs vs family capabilities;
-* ``invariants``  — P101–P115, tile plans / decode plans / crossbar
-  stats / paged-KV pools re-derived from their sources and compared;
-* ``jaxpr_audit`` — J201–J207, abstract traces of jitted hot paths
+* ``invariants``  — P101–P116, tile plans / decode plans / crossbar
+  stats / paged-KV pools / fleet accounting re-derived from their
+  sources and compared;
+* ``jaxpr_audit`` — J201–J208, abstract traces of jitted hot paths
   (dense routing misses, x64 promotions, host callbacks) plus a
   compiled-HLO cross-check.
 
@@ -22,8 +23,10 @@ from repro.analysis.invariants import (verify_block_pool,
                                        verify_mask_accounting,
                                        verify_paged_engine,
                                        verify_paged_reconstruction,
-                                       verify_tile_plan, verify_xbar_stats)
+                                       verify_tile_plan, verify_fleet,
+                                       verify_xbar_stats)
 from repro.analysis.jaxpr_audit import (audit_closure, audit_compiled,
+                                        audit_engine_sharding,
                                         audit_hlo_text, collect_covered,
                                         iter_eqns, unambiguous_covered)
 from repro.analysis.lint import lint_all, lint_arch
@@ -35,8 +38,9 @@ __all__ = [
     "verify_tile_plan", "verify_decode_plan", "verify_xbar_stats",
     "verify_mask_accounting", "verify_engine", "verify_block_pool",
     "verify_block_tables", "verify_paged_engine",
-    "verify_paged_reconstruction",
+    "verify_paged_reconstruction", "verify_fleet",
     "audit_closure", "audit_compiled", "audit_hlo_text",
+    "audit_engine_sharding",
     "collect_covered", "unambiguous_covered", "iter_eqns",
     "lint_arch", "lint_all",
 ]

@@ -70,6 +70,9 @@ RULES: Dict[str, str] = {
             "reconstruct the dense oracle cache",
     "P115": "BlockPool accounting does not balance (free + live + "
             "scratch vs capacity, or reservations exceed free)",
+    "P116": "fleet accounting broken (a submitted uid finished zero or "
+            "multiple times across engines, or merged report totals "
+            "disagree with the per-engine sums)",
     # jaxpr auditor -------------------------------------------------------
     "J201": "dense dot_general on a weight shape a TilePlan covers "
             "(missed block-sparse routing)",
@@ -82,6 +85,9 @@ RULES: Dict[str, str] = {
     "J206": "compiled artifact contains f64 tensors (HLO cross-check)",
     "J207": "collective traffic in a hot-path artifact (HLO "
             "cross-check)",
+    "J208": "sharded engine's jitted hot path traced on a >1-device "
+            "mesh with replicated-only params (missing NamedSharding "
+            "placement — GSPMD runs every device dense)",
 }
 
 

@@ -7,7 +7,7 @@ builders (``make_tile_plan``, ``build_decode_plan``, ``xbar_stats``,
 the engine's generation bookkeeping) surfaces as a structured finding
 rather than as silently-wrong serving math.
 
-Rule codes P101–P115; see ``analysis.findings.RULES``.
+Rule codes P101–P116; see ``analysis.findings.RULES``.
 """
 from __future__ import annotations
 
@@ -599,4 +599,77 @@ def verify_paged_engine(engine, *, where: str = "engine") -> List[Finding]:
         findings.extend(verify_block_tables(
             g.pool, g.tables, g.lens, g.slot_nblocks, uids,
             block_tokens=BLOCK_TOKENS, where=f"{gwhere}/tables"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# Fleet accounting: each uid finishes once, merged totals balance
+# ---------------------------------------------------------------------------
+def verify_fleet(router, *, where: str = "fleet") -> List[Finding]:
+    """``FleetRouter`` accounting identities (P116), re-derived from the
+    logical records and per-engine reports.
+
+    A failover moves a request between engines: the invariants below
+    say the move is loss- and duplication-free — every submitted uid
+    reaches a terminal state in exactly one engine (once the router is
+    idle), and the merged report's totals equal the per-engine sums
+    (every token was generated by exactly one engine; every finish was
+    booked by exactly one engine).  Live engines additionally get the
+    cross-generation checks (P112/P113/P115) via ``verify_engine``.
+    """
+    findings: List[Finding] = []
+    rep = router.report
+
+    # each uid finishes at most once (exactly once when drained)
+    seen: Dict[Any, int] = {}
+    for rec in router.finished:
+        seen[rec.uid] = seen.get(rec.uid, 0) + 1
+    for uid, n in seen.items():
+        if n > 1:
+            findings.append(error(
+                "P116", f"{where}/uid{uid}",
+                f"request finished {n} times across engines"))
+    for rec in router.finished:
+        if not rec.done:
+            findings.append(error(
+                "P116", f"{where}/uid{rec.uid}",
+                f"finished list holds a non-terminal record "
+                f"(status={rec.status!r})"))
+    if router.idle:
+        rejected = {rec.uid for rec in router.rejected}
+        lost = [uid for uid, rec in router.records.items()
+                if not rec.done and uid not in rejected
+                and uid not in seen]
+        if lost:
+            findings.append(error(
+                "P116", where,
+                f"router is idle but {len(lost)} submitted uid(s) never "
+                f"finished (lost in dispatch/failover): {lost[:8]}"))
+
+    # merged totals == per-engine sums
+    per = rep.per_engine
+    eng_tokens = sum(p.tokens_generated for p in per)
+    if eng_tokens != rep.tokens_generated:
+        findings.append(error(
+            "P116", where,
+            f"merged tokens_generated={rep.tokens_generated} but the "
+            f"engines generated {eng_tokens} (a token was double-booked "
+            f"or dropped)"))
+    eng_requests = sum(p.requests for p in per)
+    if eng_requests != len(router.finished):
+        findings.append(error(
+            "P116", where,
+            f"engines finished {eng_requests} requests but the router "
+            f"booked {len(router.finished)} logical finishes (a request "
+            f"finished in zero or multiple engines)"))
+    if rep.requests != len(router.finished):
+        findings.append(error(
+            "P116", where,
+            f"report.requests={rep.requests} disagrees with the "
+            f"finished list ({len(router.finished)})"))
+
+    for i, fe in enumerate(router.frontends):
+        if i in router.live:
+            findings.extend(
+                verify_engine(fe.engine, where=f"{where}/engine{i}"))
     return findings

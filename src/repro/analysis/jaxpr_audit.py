@@ -22,7 +22,7 @@ The compiled-artifact cross-check (``audit_compiled``) reuses
 ``launch.hlo_analysis`` to confirm at the HLO level what the trace
 promised (J206, J207).
 
-Rule codes J201–J207; see ``analysis.findings.RULES``.
+Rule codes J201–J208; see ``analysis.findings.RULES``.
 """
 from __future__ import annotations
 
@@ -191,6 +191,51 @@ def audit_closure(fn, args: Iterable[Any], *,
             f"plan covers {len(covered)} projection shape(s) but the "
             f"trace contains no pallas_call — block-sparse routing is "
             f"disabled for this whole path"))
+    return findings
+
+
+def audit_engine_sharding(engine, *, where: str = "engine") -> List[Finding]:
+    """J208: a ``ServeEngine`` on a >1-device mesh whose hot-path
+    params never got a ``NamedSharding`` placement.
+
+    The jitted prefill/decode closures pick their GSPMD partitioning up
+    from their operands — params that were never ``device_put`` with
+    the rules' NamedShardings leave every device running the full dense
+    computation (correct outputs, none of the mesh's speedup, N× the
+    memory).  No NamedSharding at all is an error; NamedShardings that
+    are all fully replicated (no mesh axis appears in any spec) is a
+    warning — legal for degenerate configs, almost certainly a
+    divisibility bug at real scale.
+    """
+    import jax
+
+    from jax.sharding import NamedSharding
+
+    findings: List[Finding] = []
+    mesh = getattr(engine, "mesh", None)
+    if mesh is None or mesh.size <= 1:
+        return findings
+    for g in engine.generations:
+        gwhere = f"{where}/gen{g.gid}"
+        leaves = [l for l in jax.tree.leaves(g.params)
+                  if hasattr(l, "sharding")]
+        named = [l for l in leaves
+                 if isinstance(l.sharding, NamedSharding)]
+        if not named:
+            findings.append(error(
+                "J208", gwhere,
+                f"engine mesh has {mesh.size} devices but none of the "
+                f"{len(leaves)} param leaves carries a NamedSharding — "
+                f"the jitted hot paths run fully replicated"))
+            continue
+        partitioned = [l for l in named
+                       if any(s is not None for s in l.sharding.spec)]
+        if not partitioned:
+            findings.append(warning(
+                "J208", gwhere,
+                f"all {len(named)} NamedSharding'd param leaves are "
+                f"fully replicated on a {mesh.size}-device mesh — no "
+                f"dimension divided (shape/mesh mismatch?)"))
     return findings
 
 

@@ -29,6 +29,7 @@ from repro.analysis.invariants import (_walk_plan_leaves, verify_decode_plan,
                                        verify_engine, verify_mask_accounting,
                                        verify_tile_plan)
 from repro.analysis.jaxpr_audit import (audit_closure, audit_compiled,
+                                        audit_engine_sharding,
                                         unambiguous_covered)
 from repro.analysis.recipe_lint import lint_recipe_for_family
 
@@ -216,6 +217,9 @@ def _lint_serving(report: Report, name: str, adapter, spec, params,
     # engines also get pool/table balance checks here (P113/P115)
     eng.swap(masked, masks)
     report.extend(verify_engine(eng, where=f"{name}/engine"))
+    # sharding placement (J208) — a no-op on this 1-device lint engine,
+    # load-bearing when the driver lints a mesh-backed engine
+    report.extend(audit_engine_sharding(eng, where=f"{name}/engine"))
 
     if hlo:
         report.extend(audit_compiled(prefill, pargs,

@@ -292,6 +292,7 @@ class LMAdapter(ModelAdapter):
         self.bsmm_interpret = bsmm_interpret
         self.last_plan_stats = PlanStats()
         self.last_metrics: Dict[str, float] = {}
+        self.last_comm_stats: Dict[str, float] = {}
 
     # -- protocol ----------------------------------------------------------
     def init_params(self, rng):
@@ -333,9 +334,16 @@ class LMAdapter(ModelAdapter):
                                     min(self.warmup, max(steps // 2, 1)),
                                     steps))
         opt = adamw(sched)
+        compressor = None
         if masks is not None:
             opt = masked(opt, masks)
             params = apply_masks(params, masks)
+            # data-parallel gradient exchange only ships live
+            # coordinates: the masked optimizer already zeroes pruned
+            # grads and re-masks params, so dropping them on the wire
+            # is bitwise-neutral (adamw has no global-norm coupling)
+            from repro.distributed.compression import MaskAwareCompressor
+            compressor = MaskAwareCompressor(masks)
         plan, self.last_plan_stats = (
             lm_train_plan(masks, interpret=self.bsmm_interpret)
             if masks is not None and self.use_bsmm else (None, PlanStats()))
@@ -348,7 +356,7 @@ class LMAdapter(ModelAdapter):
                                    prefetch=0),
             ckpt_dir=ckpt_dir, ckpt_every=ckpt_every, async_ckpt=async_ckpt,
             microbatch=self.microbatch, remat=self.remat, donate=False,
-            step_deadline_s=self.step_deadline_s)
+            step_deadline_s=self.step_deadline_s, compressor=compressor)
 
     def train(self, params, masks=None, steps=None, *, start_step: int = 0,
               ckpt_dir: Optional[str] = None,
@@ -360,6 +368,15 @@ class LMAdapter(ModelAdapter):
                                     quantize_bits=quantize_bits)
         self.last_metrics = trainer.run(steps or self.steps,
                                         log_every=self.log_every)
+        self.last_comm_stats = {}
+        if "sent_fraction" in self.last_metrics:
+            sf = float(self.last_metrics["sent_fraction"])
+            total = sum(int(np.asarray(l).size)
+                        for l in jax.tree.leaves(params) if l is not None)
+            self.last_comm_stats = {
+                "sent_fraction": sf,
+                "bytes_per_step": int(round(sf * total)) * 4,
+            }
         return trainer.state.params
 
     def evaluate(self, params, masks=None) -> float:

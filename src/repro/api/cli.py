@@ -154,7 +154,9 @@ def cmd_prune(args) -> int:
                "sparsity_before": e.sparsity_before,
                "sparsity_after": e.sparsity_after,
                "accuracy": e.accuracy, "accepted": e.accepted,
-               "live_tile_fraction": live},
+               "live_tile_fraction": live,
+               "comm_sent_fraction": e.comm_sent_fraction,
+               "comm_bytes_per_step": e.comm_bytes_per_step},
               args.json,
               f"round {e.iteration} [{e.stage}] sparsity "
               f"{e.sparsity_before:.3f}->{e.sparsity_after:.3f} "
@@ -330,6 +332,29 @@ def _report_dict(rep) -> dict:
             "kv_bytes_per_token": rep.kv_bytes_per_token}
 
 
+def _fleet_report_dict(rep) -> dict:
+    """FleetReport → JSON payload (merged + per-engine)."""
+    return {"engines": rep.engines, "live_engines": rep.live_engines,
+            "requests": rep.requests, "tokens": rep.tokens_generated,
+            "failovers": rep.failovers, "redispatched": rep.redispatched,
+            "swaps": rep.swaps, "tokens_per_s": rep.tokens_per_s,
+            "ttft_p50_ms": rep.ttft_p50 * 1e3,
+            "ttft_p95_ms": rep.ttft_p95 * 1e3,
+            "tps_p50": rep.tps_p50, "tps_p95": rep.tps_p95,
+            "deadline_misses": rep.deadline_misses,
+            "per_engine": [_report_dict(p) for p in rep.per_engine]}
+
+
+def _serve_mesh(args):
+    """--mesh DxM → a virtual-device test mesh (None when unset)."""
+    spec = getattr(args, "mesh", None)
+    if not spec:
+        return None
+    from repro.launch.mesh import make_test_mesh
+    d, m = (int(x) for x in spec.lower().split("x"))
+    return make_test_mesh(d, m)
+
+
 def _latency_line(rep) -> str:
     return (f"ttft p50/p95 {rep.ttft_p50 * 1e3:.1f}/"
             f"{rep.ttft_p95 * 1e3:.1f}ms | per-request tok/s p50/p95 "
@@ -382,11 +407,36 @@ def cmd_serve(args) -> int:
     else:
         params = adapter.init_params(jax.random.PRNGKey(args.seed))
         masks = None
-    engine = ServeEngine(params=params, cfg=adapter.cfg,
-                         prefill_fn=prefill_fn, decode_fn=decode_fn,
-                         batch_slots=args.slots, capacity=args.capacity,
-                         temperature=args.temperature, masks=masks)
+    mesh = _serve_mesh(args)
+
+    def mk_engine():
+        return ServeEngine(params=params, cfg=adapter.cfg,
+                           prefill_fn=prefill_fn, decode_fn=decode_fn,
+                           batch_slots=args.slots, capacity=args.capacity,
+                           temperature=args.temperature, masks=masks,
+                           mesh=mesh)
+
     rng = np.random.RandomState(args.seed)
+    if args.engines > 1:
+        from repro.serve import FleetRouter
+        router = FleetRouter([mk_engine() for _ in range(args.engines)])
+        for i in range(args.requests):
+            plen = (args.prompt_len if args.prompt_len
+                    else rng.randint(4, 16))
+            prompt = rng.randint(0, 200, size=plen)
+            router.submit(prompt.astype(np.int32), uid=i,
+                          max_new_tokens=args.max_new,
+                          frames=_request_frames(adapter, i))
+        router.drain()
+        rep = router.report
+        _emit({"event": "serve_fleet", "arch": args.arch,
+               **_fleet_report_dict(rep)},
+              args.json,
+              f"{args.arch}: fleet of {rep.engines} served "
+              f"{rep.requests} requests, {rep.tokens_generated} tokens "
+              f"| {rep.tokens_per_s:.1f} tok/s | {_latency_line(rep)}")
+        return EXIT_OK
+    engine = mk_engine()
     for i in range(args.requests):
         plen = args.prompt_len if args.prompt_len else rng.randint(4, 16)
         prompt = rng.randint(0, 200, size=plen)
@@ -415,6 +465,8 @@ def cmd_serve_daemon(args) -> int:
          "deadline_s": 2.0}              # admit (frames auto for audio)
         {"op": "pump", "steps": 4}       # advance the scheduler
         {"op": "swap", "name": "b", "ticket": "/path/to/ticket"}
+        {"op": "kill", "engine": 1}      # fleet only: fail an engine,
+                                         # re-dispatch its requests
         {"op": "status"}                 # health + live report
         {"op": "drain"}                  # serve everything queued
         {"op": "shutdown"}               # drain and exit 0
@@ -452,12 +504,26 @@ def cmd_serve_daemon(args) -> int:
     heartbeat = (HeartbeatMonitor(args.heartbeat_dir,
                                   deadline_s=args.heartbeat_deadline)
                  if args.heartbeat_dir else None)
-    engine = ServeEngine(params=params, cfg=adapter.cfg,
-                         prefill_fn=prefill_fn, decode_fn=decode_fn,
-                         batch_slots=args.slots, capacity=args.capacity,
-                         temperature=args.temperature, masks=masks,
-                         heartbeat=heartbeat)
-    frontend = ServeFrontend(engine, max_queue=args.max_queue)
+    mesh = _serve_mesh(args)
+    fleet = args.engines > 1
+
+    def mk_engine(hb=None):
+        return ServeEngine(params=params, cfg=adapter.cfg,
+                           prefill_fn=prefill_fn, decode_fn=decode_fn,
+                           batch_slots=args.slots,
+                           capacity=args.capacity,
+                           temperature=args.temperature, masks=masks,
+                           heartbeat=hb, mesh=mesh)
+
+    if fleet:
+        from repro.serve import FleetRouter
+        router = FleetRouter([mk_engine() for _ in range(args.engines)],
+                             monitor=heartbeat, max_queue=args.max_queue)
+        front, engine = router, router.frontends[0].engine
+    else:
+        engine = mk_engine(hb=heartbeat)
+        router = None
+        front = ServeFrontend(engine, max_queue=args.max_queue)
     rng = np.random.RandomState(args.seed)
     next_uid = [0]
 
@@ -478,10 +544,13 @@ def cmd_serve_daemon(args) -> int:
                   f"tokens={r.tokens}")
 
     _emit({"event": "ready", "arch": args.arch, "ticket": args.ticket,
-           "slots": args.slots, "bsmm": engine.report.bsmm_enabled,
+           "slots": args.slots, "engines": args.engines,
+           "mesh": getattr(args, "mesh", None),
+           "bsmm": engine.report.bsmm_enabled,
            "generation": engine.current_generation},
           args.json,
           f"daemon ready: {args.arch} slots={args.slots} "
+          f"engines={args.engines} "
           + (f"ticket={args.ticket}" if args.ticket else "(unpruned)"))
 
     stream = open(args.script) if args.script else sys.stdin
@@ -505,7 +574,7 @@ def cmd_serve_daemon(args) -> int:
                     prompt = rng.randint(
                         1, 200, size=int(cmd.get("prompt_len", 8)))
                 try:
-                    handle = frontend.submit(
+                    handle = front.submit(
                         np.asarray(prompt, np.int32), uid=uid,
                         max_new_tokens=int(cmd.get("max_new_tokens",
                                                    args.max_new)),
@@ -523,45 +592,78 @@ def cmd_serve_daemon(args) -> int:
                           args.json,
                           f"admitted uid={uid} ({handle.status})")
             elif op == "pump":
-                emit_done(frontend.pump(int(cmd.get("steps", 1))))
+                emit_done(front.pump(int(cmd.get("steps", 1))))
             elif op == "drain":
-                emit_done(frontend.drain())
+                emit_done(front.drain())
+            elif op == "kill":
+                if router is None:
+                    _emit({"event": "error",
+                           "reason": "kill needs --engines > 1"},
+                          args.json, "error: kill needs --engines > 1")
+                else:
+                    idx = int(cmd.get("engine", 0))
+                    recs = router.kill(idx)
+                    _emit({"event": "killed", "engine": idx,
+                           "live": sorted(router.live),
+                           "redispatched": len(recs)},
+                          args.json,
+                          f"killed engine {idx}: {len(recs)} requests "
+                          f"re-dispatched, live={sorted(router.live)}")
             elif op == "swap":
                 name = cmd.get("name") or cmd.get("ticket")
                 try:
                     if name not in manager.tickets:
                         manager.register(name, cmd["ticket"])
-                    ev = manager.swap(frontend, name)
-                    _emit({"event": "swap", "ticket": name,
-                           "accepted": ev.accepted,
-                           "generation": ev.gid, "reason": ev.reason,
-                           "skipped_tile_fraction":
-                               ev.skipped_tile_fraction},
-                          args.json,
+                    ev = manager.swap(front, name)
+                    skipped = (
+                        (ev.events[-1].skipped_tile_fraction
+                         if ev.events else 0.0)
+                        if router is not None
+                        else ev.skipped_tile_fraction)
+                    payload = {"event": "swap", "ticket": name,
+                               "accepted": ev.accepted,
+                               "generation": ev.gid, "reason": ev.reason,
+                               "skipped_tile_fraction": skipped}
+                    if router is not None:
+                        payload["engines"] = len(ev.events)
+                        payload["rolled_back"] = ev.rolled_back
+                    _emit(payload, args.json,
                           f"swap {name}: "
                           + ("accepted" if ev.accepted
                              else f"REJECTED — {ev.reason}")
                           + f" (gen {ev.gid}, skipped tiles "
-                            f"{ev.skipped_tile_fraction:.0%})")
+                            f"{skipped:.0%})")
                 except (TicketError, KeyError) as e:
                     _emit({"event": "swap_rejected", "ticket": name,
                            "reason": getattr(e, "reason", "bad_request"),
                            "detail": str(e)},
                           args.json, f"swap rejected: {e}")
             elif op == "status":
-                rep = engine.report
-                _emit({"event": "status",
-                       "healthy": engine.health.healthy,
-                       "health_reason": engine.health.reason,
-                       "active_ticket": manager.active,
-                       "generation": engine.current_generation,
-                       "waiting": len(frontend.waiting),
-                       **_report_dict(rep)},
-                      args.json,
-                      f"status: healthy={engine.health.healthy} "
-                      f"gen={engine.current_generation} "
-                      f"waiting={len(frontend.waiting)} | "
-                      f"{_latency_line(rep)}")
+                if router is not None:
+                    rep = router.report
+                    _emit({"event": "status",
+                           "active_ticket": manager.active,
+                           "waiting": sum(len(fe.waiting)
+                                          for fe in router.frontends),
+                           **_fleet_report_dict(rep)},
+                          args.json,
+                          f"status: {rep.live_engines}/{rep.engines} "
+                          f"engines live | failovers {rep.failovers} | "
+                          f"{_latency_line(rep)}")
+                else:
+                    rep = engine.report
+                    _emit({"event": "status",
+                           "healthy": engine.health.healthy,
+                           "health_reason": engine.health.reason,
+                           "active_ticket": manager.active,
+                           "generation": engine.current_generation,
+                           "waiting": len(front.waiting),
+                           **_report_dict(rep)},
+                          args.json,
+                          f"status: healthy={engine.health.healthy} "
+                          f"gen={engine.current_generation} "
+                          f"waiting={len(front.waiting)} | "
+                          f"{_latency_line(rep)}")
             elif op == "shutdown":
                 break
             else:
@@ -570,11 +672,19 @@ def cmd_serve_daemon(args) -> int:
     finally:
         if stream is not sys.stdin:
             stream.close()
-    emit_done(frontend.drain())
-    rep = engine.report
-    _emit({"event": "report", **_report_dict(rep)}, args.json,
-          f"served {rep.requests} requests, {rep.tokens_generated} "
-          f"tokens | {_latency_line(rep)} | swaps {rep.swaps}")
+    emit_done(front.drain())
+    if router is not None:
+        rep = router.report
+        _emit({"event": "report", **_fleet_report_dict(rep)}, args.json,
+              f"fleet served {rep.requests} requests, "
+              f"{rep.tokens_generated} tokens | failovers "
+              f"{rep.failovers} (redispatched {rep.redispatched}) | "
+              f"{_latency_line(rep)} | swaps {rep.swaps}")
+    else:
+        rep = engine.report
+        _emit({"event": "report", **_report_dict(rep)}, args.json,
+              f"served {rep.requests} requests, {rep.tokens_generated} "
+              f"tokens | {_latency_line(rep)} | swaps {rep.swaps}")
     _emit({"event": "shutdown"}, args.json, "daemon shutdown clean")
     return EXIT_OK
 
@@ -743,6 +853,14 @@ def build_parser() -> argparse.ArgumentParser:
                    help="fixed prompt length (default: random 4-15); "
                         "paged engines admit lengths past --capacity")
     p.add_argument("--temperature", type=float, default=0.0)
+    p.add_argument("--engines", type=int, default=1,
+                   help="fleet size: front N engines with a FleetRouter "
+                        "(least-loaded dispatch)")
+    p.add_argument("--mesh", default=None,
+                   help="per-engine DxM test mesh (e.g. 1x2): shard "
+                        "params/caches/plans over D*M devices — launch "
+                        "with XLA_FLAGS=--xla_force_host_platform_"
+                        "device_count=N for virtual CPU devices")
     p.set_defaults(fn=cmd_serve)
 
     p = sub.add_parser("serve-daemon",
@@ -763,6 +881,13 @@ def build_parser() -> argparse.ArgumentParser:
                    help="HeartbeatMonitor root: engine ticks beat here "
                         "and stale beats close the admission gate")
     p.add_argument("--heartbeat-deadline", type=float, default=30.0)
+    p.add_argument("--engines", type=int, default=1,
+                   help="fleet size: FleetRouter over N engines with "
+                        "heartbeat failover; adds the kill op "
+                        '({"op": "kill", "engine": 1})')
+    p.add_argument("--mesh", default=None,
+                   help="per-engine DxM test mesh (e.g. 1x2); see "
+                        "`serve --mesh`")
     p.add_argument("--script", default=None,
                    help="read ops from this file instead of stdin")
     p.set_defaults(fn=cmd_serve_daemon)

@@ -304,9 +304,19 @@ class PruningSession:
         s_before = sparsity_fraction(masks)
         s_after = sparsity_fraction(cand)
         ok = acc >= baseline - self._gate(stage)
+        comm = getattr(adapter, "last_comm_stats", None) or {}
+        if comm:
+            log.info("iter %d retrain comm: %.1f%% of grads on the wire "
+                     "(%.1f KiB/step)", state["itr"],
+                     100.0 * comm["sent_fraction"],
+                     comm["bytes_per_step"] / 1024.0)
         event = PruneEvent(state["itr"], stage.granularity, s_before,
                            s_after, acc, ok, stage=stage.name,
-                           stage_idx=state["stage_idx"], kind="prune")
+                           stage_idx=state["stage_idx"], kind="prune",
+                           comm_sent_fraction=float(
+                               comm.get("sent_fraction", 0.0)),
+                           comm_bytes_per_step=int(
+                               comm.get("bytes_per_step", 0)))
         self._emit(event, history)
         fresh.append(event)
         if ok:

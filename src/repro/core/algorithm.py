@@ -53,6 +53,12 @@ class PruneEvent:
     stage: str = ""
     stage_idx: int = 0
     kind: str = "prune"              # prune | quantize | ablate
+    # data-parallel retrain comm accounting (mask-aware gradient
+    # compression): fraction of grad coordinates shipped per exchange
+    # and the resulting bytes on the wire per step (0 when the adapter
+    # retrains without a compressor)
+    comm_sent_fraction: float = 0.0
+    comm_bytes_per_step: int = 0
 
 
 @dataclass

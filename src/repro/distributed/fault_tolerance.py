@@ -77,17 +77,21 @@ def elastic_restore(ckpt_dir: str, template, new_mesh,
 
 @dataclass
 class HeartbeatMonitor:
+    """File-based liveness; ``clock`` is injectable so the serving
+    fleet's failover tests can drive dead/revived transitions without
+    real sleeps (the router and its engines share one clock)."""
     root: str
     deadline_s: float = 60.0
+    clock: Callable[[], float] = time.time
 
     def beat(self, worker: str):
         os.makedirs(self.root, exist_ok=True)
         path = os.path.join(self.root, f"{worker}.hb")
         with open(path, "w") as f:
-            f.write(str(time.time()))
+            f.write(str(self.clock()))
 
     def dead_workers(self) -> List[str]:
-        now = time.time()
+        now = self.clock()
         dead = []
         if not os.path.isdir(self.root):
             return dead
@@ -118,7 +122,7 @@ class HeartbeatMonitor:
                 last = float(f.read().strip())
             except ValueError:
                 return None
-        return time.time() - last
+        return self.clock() - last
 
 
 @dataclass

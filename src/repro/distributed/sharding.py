@@ -37,9 +37,19 @@ def _last_key(path: str) -> str:
     return path.split("/")[-1]
 
 
+# attention projections whose sharded dim is n_heads*head_dim — a shard
+# narrower than head_dim splits a head across devices, which the repo
+# never allows (see cache_spec: involuntary SPMD remat in the attention
+# einsums, and on multi-axis CPU meshes XLA's repartition of the RoPE'd
+# k path is numerically unstable)
+_HEAD_COL = {"wq", "wk", "wv", "w_uq", "w_uk", "w_uv"}
+_HEAD_ROW = {"wo"}
+
+
 @dataclass
 class ShardingRules:
     mesh: Mesh
+    head_dim: Optional[int] = None
 
     def __post_init__(self):
         names = self.mesh.axis_names
@@ -56,6 +66,15 @@ class ShardingRules:
         if self.tp_axis and dim % self.tp_size == 0 and dim >= self.tp_size:
             return self.tp_axis
         return None
+
+    def _tp_if_heads(self, dim: int):
+        """'model' iff it divides dim AND shards land on head boundaries
+        (no-op guard when ``head_dim`` is unknown)."""
+        ax = self._tp_if(dim)
+        if ax and self.head_dim \
+                and (dim // self.tp_size) % self.head_dim != 0:
+            return None
+        return ax
 
     def _dp_if(self, dim: int):
         if self.dp_axes and dim % self.dp_size == 0:
@@ -82,14 +101,16 @@ class ShardingRules:
         if name in _REPLICATED or nd == 1:
             return P(*([None] * nd))
         if name in _COL_PARALLEL:
+            tp = self._tp_if_heads if name in _HEAD_COL else self._tp_if
             spec = [None] * nd
-            spec[-1] = self._tp_if(shape[-1])
+            spec[-1] = tp(shape[-1])
             if spec[-1] is None and nd >= 2:
                 spec[-2] = self._tp_if(shape[-2])
             return P(*spec)
         if name in _ROW_PARALLEL:
+            tp = self._tp_if_heads if name in _HEAD_ROW else self._tp_if
             spec = [None] * nd
-            spec[-2] = self._tp_if(shape[-2])
+            spec[-2] = tp(shape[-2])
             if spec[-2] is None:
                 spec[-1] = self._tp_if(shape[-1])
             return P(*spec)
@@ -203,6 +224,46 @@ class ShardingRules:
             mk, cache_tree, is_leaf=lambda x: x is None)
 
     # ------------------------------------------------------------------
+    def plan_spec(self, name: str, shape: Tuple[int, ...]) -> P:
+        """PartitionSpec for one TilePlan index array.
+
+        The compacted dispatch arrays are per-tile-column (forward
+        ``idx``/``counts``: one row per N tile) or per-tile-row
+        (transposed ``idx_t``/``counts_t``: one row per K tile) — the
+        same axes the col-/row-parallel weight specs cut, so axis 0
+        shards over 'model' when it divides and replicates otherwise.
+        The flat live-tile coordinates (``kk``/``nn``) index the whole
+        bitmap and stay replicated."""
+        if not shape:
+            return P()
+        spec = [None] * len(shape)
+        if name in ("idx", "counts", "idx_t", "counts_t"):
+            spec[0] = self._tp_if(shape[0])
+        return P(*spec)
+
+    def shard_plan(self, plan_tree):
+        """Device-put every TilePlan's index arrays with NamedShardings
+        (static int fields and None leaves pass through untouched)."""
+        fields = ("idx", "counts", "idx_t", "counts_t", "kk", "nn")
+
+        def put(tp):
+            if tp is None or not hasattr(tp, "_replace"):
+                return tp
+            upd = {}
+            for f in fields:
+                arr = getattr(tp, f, None)
+                if arr is None:
+                    continue
+                sh = NamedSharding(self.mesh,
+                                   self.plan_spec(f, np.shape(arr)))
+                upd[f] = jax.device_put(jnp.asarray(arr), sh)
+            return tp._replace(**upd)
+
+        return jax.tree.map(
+            put, plan_tree,
+            is_leaf=lambda x: x is None or hasattr(x, "_replace"))
+
+    # ------------------------------------------------------------------
     def activation_constrainer(self):
         """Returns f(x, tag_tuple) for transformer.set_constrain_fn."""
         mesh = self.mesh
@@ -224,13 +285,24 @@ class ShardingRules:
         return constrain
 
 
+_INSTALLED: Optional[ShardingRules] = None
+
+
 def install(rules: Optional[ShardingRules]):
     """Activate activation constraints + MoE grouping (None → reset)."""
+    global _INSTALLED
     from repro.models import hooks
 
+    _INSTALLED = rules
     if rules is None:
         hooks.set_constrain_fn(lambda x, tags: x)
         hooks.set_moe_groups(1)
     else:
         hooks.set_constrain_fn(rules.activation_constrainer())
         hooks.set_moe_groups(rules.dp_size)
+
+
+def installed() -> Optional[ShardingRules]:
+    """The rules currently installed (so scoped installers — the
+    sharded ``ServeEngine`` traces — can save/restore around a trace)."""
+    return _INSTALLED

@@ -19,4 +19,23 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 def make_cpu_mesh():
     """Trivial 1-device mesh for smoke tests (keeps the same code path)."""
-    return jax.make_mesh((1, 1), ("data", "model"))
+    return make_test_mesh()
+
+
+def make_test_mesh(data: int = 1, model: int = 1):
+    """(data, model) mesh over host-platform (virtual) devices.
+
+    Sized for test/CI runs launched with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (the flag
+    must be set before jax initialises — subprocess it, never set it
+    in-process after import).  ``(1, 1)`` is the old ``make_cpu_mesh``
+    smoke path and needs no flag.
+    """
+    need = data * model
+    have = jax.device_count()
+    if have < need:
+        raise ValueError(
+            f"test mesh ({data}x{model}) needs {need} devices, found "
+            f"{have}; launch with XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={need}")
+    return jax.make_mesh((data, model), ("data", "model"))

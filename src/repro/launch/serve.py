@@ -1,16 +1,21 @@
 """Production serving launcher (control plane over the batched engine).
 
     PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --smoke \
-        [--requests N] [--pruned FRAC] [--deadline S] [--heartbeat-dir D]
+        [--requests N] [--pruned FRAC] [--deadline S] [--heartbeat-dir D] \
+        [--engines N] [--mesh DxM]
 
 Requests are admitted through ``serve.frontend.ServeFrontend``: a
 bounded intake queue backs onto the engine's capacity check, deadlines
 cancel expired slots mid-decode, and (with ``--heartbeat-dir``) the
 engine's per-tick heartbeat gates admission when the decode loop
-wedges.  Same mesh/sharding story as train.py: ``--smoke`` runs the
-reduced config on CPU; the full configs' serve_step lowering for the
-production meshes is proven by ``repro.launch.dryrun`` (prefill_32k /
-decode_32k / long_500k cells).
+wedges.  ``--engines N`` fronts N engines with a ``FleetRouter``
+(least-loaded dispatch + heartbeat failover); ``--mesh DxM`` runs each
+engine sharded over a (data, model) test mesh (virtual devices on CPU —
+launch with ``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
+Same mesh/sharding story as train.py: ``--smoke`` runs the reduced
+config on CPU; the full configs' serve_step lowering for the production
+meshes is proven by ``repro.launch.dryrun`` (prefill_32k / decode_32k /
+long_500k cells).
 """
 from __future__ import annotations
 
@@ -24,10 +29,15 @@ from repro.core import algorithm as alg
 from repro.core.masks import apply_masks, lm_prunable, make_masks, \
     sparsity_fraction
 from repro.distributed.fault_tolerance import HeartbeatMonitor
-from repro.distributed.sharding import ShardingRules, install
-from repro.launch.mesh import make_cpu_mesh, make_production_mesh
+from repro.launch.mesh import make_production_mesh, make_test_mesh
 from repro.models import transformer as tfm
-from repro.serve import ServeEngine, ServeFrontend
+from repro.serve import FleetRouter, ServeEngine, ServeFrontend
+
+
+def parse_mesh(spec):
+    """'2x4' → (data=2, model=4)."""
+    d, m = (int(x) for x in spec.lower().split("x"))
+    return d, m
 
 
 def main():
@@ -42,17 +52,22 @@ def main():
                          "requests free their slot mid-decode)")
     ap.add_argument("--heartbeat-dir", default=None,
                     help="HeartbeatMonitor root for decode-loop liveness")
+    ap.add_argument("--engines", type=int, default=1,
+                    help="fleet size (FleetRouter over N engines)")
+    ap.add_argument("--mesh", default=None,
+                    help="per-engine DxM test mesh, e.g. 1x2 (needs "
+                         "D*M virtual/physical devices)")
     ap.add_argument("--multi-pod", action="store_true")
     args = ap.parse_args()
 
     n_dev = len(jax.devices())
-    if args.smoke or n_dev == 1:
+    if args.smoke or n_dev == 1 or args.mesh:
         cfg = scaled_down(get_arch(args.arch), dtype="float32")
-        mesh = make_cpu_mesh()
+        mesh = (make_test_mesh(*parse_mesh(args.mesh)) if args.mesh
+                else make_test_mesh())
     else:  # pragma: no cover
         cfg = get_arch(args.arch)
         mesh = make_production_mesh(multi_pod=args.multi_pod)
-    install(ShardingRules(mesh))
 
     params = tfm.init_params(jax.random.PRNGKey(0), cfg)
     masks = None
@@ -66,22 +81,49 @@ def main():
         print(f"serving at {sparsity_fraction(masks):.1%} sparsity "
               f"(crossbar-aware)")
 
-    heartbeat = (HeartbeatMonitor(args.heartbeat_dir, deadline_s=30.0)
-                 if args.heartbeat_dir else None)
-    with mesh:
-        engine = ServeEngine(params=params, cfg=cfg,
-                             prefill_fn=tfm.prefill,
-                             decode_fn=tfm.decode_step,
-                             batch_slots=8, capacity=256, masks=masks,
-                             heartbeat=heartbeat)
-        frontend = ServeFrontend(engine)
-        rng = np.random.RandomState(0)
+    monitor = (HeartbeatMonitor(args.heartbeat_dir, deadline_s=30.0)
+               if args.heartbeat_dir else None)
+
+    def make_engine(heartbeat=None, worker="engine"):
+        # engines install the rules scoped around their own traces, so
+        # a fleet of sharded engines coexists in one process
+        return ServeEngine(params=params, cfg=cfg,
+                           prefill_fn=tfm.prefill,
+                           decode_fn=tfm.decode_step,
+                           batch_slots=8, capacity=256, masks=masks,
+                           heartbeat=heartbeat, heartbeat_worker=worker,
+                           mesh=mesh)
+
+    rng = np.random.RandomState(0)
+    if args.engines > 1:
+        router = FleetRouter([make_engine() for _ in range(args.engines)],
+                             monitor=monitor)
         for i in range(args.requests):
-            frontend.submit(
+            router.submit(
                 rng.randint(0, 200, rng.randint(4, 32)).astype(np.int32),
                 uid=i, max_new_tokens=args.max_new,
                 deadline_s=args.deadline)
-        frontend.drain()
+        router.drain()
+        rep = router.report
+        print(f"fleet: {rep.live_engines}/{rep.engines} engines, "
+              f"{rep.requests} requests, {rep.tokens_generated} tokens "
+              f"({rep.tokens_per_s:.1f} tok/s, "
+              f"failovers {rep.failovers}, "
+              f"redispatched {rep.redispatched})")
+        print(f"latency: ttft p50/p95 {rep.ttft_p50 * 1e3:.1f}/"
+              f"{rep.ttft_p95 * 1e3:.1f}ms | per-request tok/s p50/p95 "
+              f"{rep.tps_p50:.1f}/{rep.tps_p95:.1f} | "
+              f"deadline misses {rep.deadline_misses}")
+        return
+
+    engine = make_engine(heartbeat=monitor)
+    frontend = ServeFrontend(engine)
+    for i in range(args.requests):
+        frontend.submit(
+            rng.randint(0, 200, rng.randint(4, 32)).astype(np.int32),
+            uid=i, max_new_tokens=args.max_new,
+            deadline_s=args.deadline)
+    frontend.drain()
     rep = engine.report
     print(f"served {rep.requests} requests, {rep.tokens_generated} tokens "
           f"in {rep.decode_steps} decode steps "

@@ -26,7 +26,7 @@ from repro.configs import get_arch, scaled_down
 from repro.data import DataPipeline, SyntheticLM
 from repro.distributed.fault_tolerance import SkipStraggler, Supervisor
 from repro.distributed.sharding import ShardingRules, install
-from repro.launch.mesh import make_cpu_mesh, make_production_mesh
+from repro.launch.mesh import make_production_mesh, make_test_mesh
 from repro.models import encdec
 from repro.models import transformer as tfm
 from repro.optim import adamw, masked, warmup_cosine
@@ -50,7 +50,7 @@ def main():
     n_dev = len(jax.devices())
     if args.smoke or n_dev == 1:
         cfg = scaled_down(get_arch(args.arch), dtype="float32")
-        mesh = make_cpu_mesh()
+        mesh = make_test_mesh()
     else:  # pragma: no cover — real-pod path, proven by the dry-run
         cfg = get_arch(args.arch)
         mesh = make_production_mesh(multi_pod=args.multi_pod)

@@ -1,9 +1,11 @@
 from repro.serve.engine import (EngineHealth, Request,  # noqa: F401
                                 ServeEngine, ServeReport, SubmitRejected)
+from repro.serve.fleet import (FleetRecord, FleetReport,  # noqa: F401
+                               FleetRouter)
 from repro.serve.frontend import ServeFrontend, StreamHandle  # noqa: F401
-from repro.serve.manager import (SwapEvent, TicketError,  # noqa: F401
-                                 TicketManager, TicketMismatch,
-                                 TicketRecord, load_ticket)
+from repro.serve.manager import (FleetSwapEvent, SwapEvent,  # noqa: F401
+                                 TicketError, TicketManager,
+                                 TicketMismatch, TicketRecord, load_ticket)
 from repro.serve.paging import (BlockPool, PoolError,  # noqa: F401
                                 blocks_needed)
 from repro.serve.ticket import PlanStats, build_decode_plan  # noqa: F401

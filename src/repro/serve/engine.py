@@ -260,11 +260,25 @@ class ServeEngine:
                  clock: Optional[Callable[[], float]] = None,
                  heartbeat=None, heartbeat_worker: str = "engine",
                  paged: Optional[bool] = None,
-                 kv_blocks: Optional[int] = None):
+                 kv_blocks: Optional[int] = None,
+                 mesh=None, rules=None):
         if batch_slots < 1:
             raise ValueError(f"batch_slots must be >= 1, got {batch_slots}")
         if capacity < 2:
             raise ValueError(f"capacity must be >= 2, got {capacity}")
+        # -- SPMD: a (data, model) Mesh + ShardingRules shard every
+        # generation's params, tile plans and slot/paged KV caches with
+        # NamedShardings, and the jitted closures trace with the rules'
+        # activation constrainer installed (scoped — it never leaks
+        # into other engines' traces).  GSPMD then partitions the same
+        # scheduler code; on a 1-device mesh all specs are replicated
+        # and the engine is bit-identical to the meshless path.
+        self.mesh = mesh
+        if rules is None and mesh is not None:
+            from repro.distributed.sharding import ShardingRules
+            rules = ShardingRules(mesh,
+                                  head_dim=getattr(cfg, "head_dim", None))
+        self.rules = rules
         self.cfg = cfg
         self.capacity = capacity
         self.slots = batch_slots
@@ -350,6 +364,35 @@ class ServeEngine:
         self._t_last: Optional[float] = None
         self._install_generation(params, masks, use_bsmm)
 
+    # -- SPMD plumbing -----------------------------------------------------
+    def _constrained(self, fn):
+        """Wrap a closure body so ITS traces see this engine's
+        activation constraints.  The previously installed rules are
+        restored afterwards, so engines with different meshes (or none)
+        coexist in one process — including the single-device oracle an
+        engine is verified against."""
+        if self.rules is None:
+            return fn
+        rules = self.rules
+
+        def wrapped(*args):
+            from repro.distributed import sharding as _sharding
+            prev = _sharding.installed()
+            _sharding.install(rules)
+            try:
+                return fn(*args)
+            finally:
+                _sharding.install(prev)
+
+        return wrapped
+
+    def _shard_caches(self, caches):
+        """NamedShardings for freshly created slot/paged cache arrays
+        (decode outputs inherit the placement GSPMD propagates)."""
+        if self.rules is None:
+            return caches
+        return jax.device_put(caches, self.rules.cache_shardings(caches))
+
     # -- generations (the hot-swap machinery) ------------------------------
     def _install_generation(self, params, masks, use_bsmm) -> int:
         # the ticket's TilePlans drive BOTH serving paths: prefill
@@ -364,45 +407,51 @@ class ServeEngine:
         elif use_bsmm and plan is None:
             raise ValueError("use_bsmm=True needs masks with routable "
                              "dense projections")
+        if self.rules is not None:
+            params = jax.device_put(params,
+                                    self.rules.params_shardings(params))
+            if plan is not None:
+                plan = self.rules.shard_plan(plan)
         cfg, capacity = self.cfg, self.capacity
         prefill_fn, decode_fn = self._prefill_fn, self._decode_fn
         plankw = {} if plan is None else {"plan": plan}
         gen = _Generation(
             gid=self._next_gid, params=params, masks=masks, plan=plan,
             plan_stats=stats,
-            prefill_exact=jax.jit(
+            prefill_exact=jax.jit(self._constrained(
                 lambda p, toks: prefill_fn(p, cfg, {"tokens": toks},
-                                           capacity, **plankw)),
-            prefill_masked=jax.jit(
+                                           capacity, **plankw))),
+            prefill_masked=jax.jit(self._constrained(
                 lambda p, toks, vl: prefill_fn(p, cfg, {"tokens": toks},
                                                capacity, valid_len=vl,
-                                               **plankw)),
-            prefill_frames=jax.jit(
+                                               **plankw))),
+            prefill_frames=jax.jit(self._constrained(
                 lambda p, toks, fr: prefill_fn(p, cfg,
                                                {"tokens": toks,
                                                 "frames": fr},
-                                               capacity, **plankw)),
-            decode=jax.jit(
+                                               capacity, **plankw))),
+            decode=jax.jit(self._constrained(
                 lambda p, caches, tok: decode_fn(p, cfg, caches, tok,
-                                                 **plankw)),
+                                                 **plankw))),
             slot_reqs=[None] * self.slots,
             slot_gens=[None] * self.slots,
             cur=np.zeros((self.slots,), np.int32))
         if self.paged:
             tfm = self._tfm
             gen.pool = BlockPool(self.kv_blocks)
-            gen.paged_caches = tfm.make_paged_caches(cfg, self.kv_blocks)
+            gen.paged_caches = self._shard_caches(
+                tfm.make_paged_caches(cfg, self.kv_blocks))
             if not self._block_bytes:
                 spec = tfm.paged_cache_spec(cfg, self.kv_blocks)
                 total = sum(int(np.prod(s.shape)) * s.dtype.itemsize
                             for s in jax.tree.leaves(spec))
                 self._block_bytes = total // self.kv_blocks
-            gen.decode_paged = jax.jit(
+            gen.decode_paged = jax.jit(self._constrained(
                 lambda p, caches, tok, tables, lens: tfm.decode_step_paged(
-                    p, cfg, caches, tok, tables, lens, **plankw))
-            gen.adopt = jax.jit(
+                    p, cfg, caches, tok, tables, lens, **plankw)))
+            gen.adopt = jax.jit(self._constrained(
                 lambda paged, dense, blocks: tfm.adopt_prefill(
-                    cfg, paged, dense, blocks))
+                    cfg, paged, dense, blocks)))
             nb = self.kv_blocks - 1     # one request may hold every block
             gen.tables = np.zeros((self.slots, nb), np.int32)
             gen.lens = np.zeros((self.slots,), np.int32)
@@ -466,6 +515,28 @@ class ServeEngine:
     # -- health ------------------------------------------------------------
     def set_health(self, healthy: bool, reason: str = "ok") -> None:
         self.health = EngineHealth(healthy, reason)
+
+    def evict_all(self) -> List[Request]:
+        """Failover drain: remove every queued and in-slot request
+        WITHOUT finishing it.  Slots free, paged blocks (and unspent
+        reservations) return to their pools, and the requests come back
+        unfinished (status ``"evicted"``, emitted tokens kept) so a
+        fleet router can re-dispatch them onto surviving engines —
+        re-prefilling from prompt + emitted tokens continues a greedy
+        stream exactly where this engine left it."""
+        out: List[Request] = []
+        for gen in self._gens:
+            for s in range(self.slots):
+                req = gen.slot_reqs[s]
+                if req is not None:
+                    self._free_slot(gen, s)
+                    req.status = "evicted"
+                    out.append(req)
+        while self.queue:
+            req = self.queue.popleft()
+            req.status = "evicted"
+            out.append(req)
+        return out
 
     # -- request intake ----------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -542,7 +613,8 @@ class ServeEngine:
             shape = list(leaf.shape)
             shape[a] = self.slots
             return jnp.zeros(tuple(shape), leaf.dtype)
-        return jax.tree.map(mk, proto, self._cache_axes(proto))
+        return self._shard_caches(
+            jax.tree.map(mk, proto, self._cache_axes(proto)))
 
     def _make_splice(self, proto):
         """Jitted: copy a single-request prefill cache into slot lanes."""
@@ -578,12 +650,12 @@ class ServeEngine:
             cfg, prefill_fn = self.cfg, self._prefill_fn
             plankw = {} if gen.plan is None else {"plan": gen.plan}
             if masked:
-                fn = jax.jit(lambda p, toks, vl: prefill_fn(
+                fn = jax.jit(self._constrained(lambda p, toks, vl: prefill_fn(
                     p, cfg, {"tokens": toks}, toks.shape[1], valid_len=vl,
-                    **plankw))
+                    **plankw)))
             else:
-                fn = jax.jit(lambda p, toks: prefill_fn(
-                    p, cfg, {"tokens": toks}, toks.shape[1], **plankw))
+                fn = jax.jit(self._constrained(lambda p, toks: prefill_fn(
+                    p, cfg, {"tokens": toks}, toks.shape[1], **plankw)))
             gen.sized[key] = fn
         return fn
 
@@ -871,10 +943,11 @@ class ServeEngine:
                 cfg, prefill_fn = self.cfg, self._prefill_fn
                 decode_fn = self._decode_fn
                 plankw = {} if gen.plan is None else {"plan": gen.plan}
-                fns = (jax.jit(lambda p, toks: prefill_fn(
-                           p, cfg, {"tokens": toks}, cap, **plankw)),
-                       jax.jit(lambda p, caches, tok: decode_fn(
-                           p, cfg, caches, tok, **plankw)))
+                fns = (jax.jit(self._constrained(lambda p, toks: prefill_fn(
+                           p, cfg, {"tokens": toks}, cap, **plankw))),
+                       jax.jit(self._constrained(
+                           lambda p, caches, tok: decode_fn(
+                               p, cfg, caches, tok, **plankw))))
                 gen.sized[key] = fns
             pf, dec = fns
             logits, caches = pf(gen.params, jnp.asarray(prompt[None]))

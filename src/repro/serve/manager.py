@@ -130,6 +130,27 @@ class SwapEvent:
     expected: Tuple[int, ...] = ()
     observed: Tuple[int, ...] = ()
     skipped_tile_fraction: float = 0.0
+    engine: Optional[int] = None    # fleet swaps: which engine index
+
+
+@dataclass
+class FleetSwapEvent:
+    """Outcome of one all-or-nothing fleet-wide swap.
+
+    ``accepted`` iff EVERY live engine verified the candidate; when any
+    engine's smoke-decode disagrees with the fingerprint, the engines
+    already swapped are rolled back (``rolled_back``) and the fleet
+    keeps serving the previous ticket everywhere — the fleet never
+    splits across tickets."""
+    ticket: str
+    accepted: bool
+    events: List[SwapEvent] = field(default_factory=list)
+    rolled_back: int = 0
+    reason: str = "ok"
+
+    @property
+    def gid(self) -> int:
+        return self.events[0].gid if self.events else -1
 
 
 class TicketManager:
@@ -246,36 +267,77 @@ class TicketManager:
                 f"(have: {sorted(self.tickets)})")
         return self.tickets[name]
 
-    def swap(self, target, name: str) -> SwapEvent:
-        """Hot-swap a registered ticket into a live engine/front-end.
-
-        Installs the candidate as a new generation (traffic keeps
-        flowing), smoke-decodes the probe THROUGH that generation, and
-        rolls back if the output disagrees with the fingerprint
-        recorded at registration.  The scheduler is not stepped between
-        install and verdict, so a rolled-back generation never serves a
-        request."""
-        engine: ServeEngine = getattr(target, "engine", target)
-        rec = self._require(name)
+    def _swap_engine(self, engine: ServeEngine, name: str,
+                     rec: TicketRecord,
+                     engine_idx: Optional[int] = None) -> SwapEvent:
+        """Install + verify on ONE engine (no manager state touched)."""
         gid = engine.swap(rec.params, masks=rec.masks)
         observed = tuple(engine.smoke_decode(self.probe_prompt,
                                              self.probe_tokens, gid=gid,
                                              frames=self.probe_frames))
         if observed != rec.fingerprint:
             engine.rollback(gid)
-            ev = SwapEvent(
+            return SwapEvent(
                 ticket=name, gid=gid, accepted=False,
                 reason="smoke-decode disagrees with recorded accuracy "
                        "fingerprint — rolled back",
                 expected=rec.fingerprint, observed=observed,
-                skipped_tile_fraction=(
-                    engine.report.skipped_tile_fraction))
-        else:
+                skipped_tile_fraction=engine.report.skipped_tile_fraction,
+                engine=engine_idx)
+        return SwapEvent(
+            ticket=name, gid=gid, accepted=True,
+            expected=rec.fingerprint, observed=observed,
+            skipped_tile_fraction=engine.report.skipped_tile_fraction,
+            engine=engine_idx)
+
+    def swap(self, target, name: str):
+        """Hot-swap a registered ticket into a live engine/front-end —
+        or across a whole fleet.
+
+        Single engine: installs the candidate as a new generation
+        (traffic keeps flowing), smoke-decodes the probe THROUGH that
+        generation, and rolls back if the output disagrees with the
+        fingerprint recorded at registration.  The scheduler is not
+        stepped between install and verdict, so a rolled-back
+        generation never serves a request.  Returns a ``SwapEvent``.
+
+        Fleet (``target`` exposes ``swap_targets()``, e.g.
+        ``serve.fleet.FleetRouter``): the same install+verify fans over
+        every live engine, ALL-OR-NOTHING — the first verification
+        failure rolls back every engine already swapped, so the fleet
+        never serves two tickets at once.  Zero-drain either way:
+        in-flight requests finish on the generation that prefilled
+        them.  Returns a ``FleetSwapEvent``."""
+        rec = self._require(name)
+        targets = getattr(target, "swap_targets", None)
+        if targets is not None:
+            committed: List[Tuple[ServeEngine, int]] = []
+            events: List[SwapEvent] = []
+            accepted = True
+            for idx, engine in targets():
+                ev = self._swap_engine(engine, name, rec, engine_idx=idx)
+                events.append(ev)
+                if not ev.accepted:
+                    accepted = False
+                    break
+                committed.append((engine, ev.gid))
+            if accepted:
+                self.active = name
+                fev = FleetSwapEvent(ticket=name, accepted=True,
+                                     events=events)
+            else:
+                for engine, gid in reversed(committed):
+                    engine.rollback(gid)
+                fev = FleetSwapEvent(
+                    ticket=name, accepted=False, events=events,
+                    rolled_back=len(committed),
+                    reason=f"engine {events[-1].engine} failed "
+                           "verification — fleet rolled back")
+            self.history.append(fev)
+            return fev
+        engine: ServeEngine = getattr(target, "engine", target)
+        ev = self._swap_engine(engine, name, rec)
+        if ev.accepted:
             self.active = name
-            ev = SwapEvent(
-                ticket=name, gid=gid, accepted=True,
-                expected=rec.fingerprint, observed=observed,
-                skipped_tile_fraction=(
-                    engine.report.skipped_tile_fraction))
         self.history.append(ev)
         return ev

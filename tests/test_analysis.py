@@ -341,8 +341,72 @@ def test_p114_paged_reconstruction():
                 "P114", "error")
 
 
+def test_p116_fleet_accounting():
+    from repro.analysis import verify_fleet
+    from repro.serve import FleetRecord, FleetReport
+
+    def rec(uid, toks, status="done"):
+        r = FleetRecord(uid=uid, prompt=np.zeros(2, np.int32),
+                        max_new_tokens=4, seq=uid)
+        r.tokens = list(toks)
+        r.status = status
+        return r
+
+    def router(finished, records, per, tokens):
+        return SimpleNamespace(
+            finished=finished, records=records, rejected=[], idle=True,
+            live=set(), frontends=[],
+            report=FleetReport(engines=len(per), live_engines=len(per),
+                               requests=len(finished),
+                               tokens_generated=tokens, per_engine=per))
+
+    a, b = rec(0, [1, 2]), rec(1, [3])
+    per = [SimpleNamespace(tokens_generated=2, requests=1),
+           SimpleNamespace(tokens_generated=1, requests=1)]
+    healthy = router([a, b], {0: a, 1: b}, per, 3)
+    assert verify_fleet(healthy) == []
+    # seeded defect: one uid finished twice across engines
+    assert_code(verify_fleet(router([a, a, b], {0: a, 1: b}, per, 3)),
+                "P116", "error")
+    # seeded defect: a submitted request vanished (idle but never done)
+    lost = rec(2, [], status="running")
+    assert_code(
+        verify_fleet(router([a, b], {0: a, 1: b, 2: lost}, per, 3)),
+        "P116", "error")
+    # seeded defect: merged token total disagrees with per-engine sums
+    inflated = [SimpleNamespace(tokens_generated=2, requests=1),
+                SimpleNamespace(tokens_generated=2, requests=1)]
+    assert_code(verify_fleet(router([a, b], {0: a, 1: b}, inflated, 3)),
+                "P116", "error")
+
+
+def test_p116_live_fleet_clean():
+    """A real two-engine fleet drained to idle verifies clean."""
+    from repro.analysis import verify_fleet
+    from repro.api.registry import make_adapter
+    from repro.serve import FleetRouter, ServeEngine
+
+    ad = make_adapter("llama3.2-3b", scale="tiny")
+    params = ad.init_params(jax.random.PRNGKey(0))
+    prefill_fn, decode_fn = ad.serve_fns()
+
+    def eng():
+        return ServeEngine(params=params, cfg=ad.cfg,
+                           prefill_fn=prefill_fn, decode_fn=decode_fn,
+                           batch_slots=2, capacity=48)
+
+    router = FleetRouter([eng(), eng()])
+    rng = np.random.RandomState(0)
+    for i in range(4):
+        router.submit(rng.randint(1, ad.cfg.vocab_size, 5)
+                      .astype(np.int32), uid=i, max_new_tokens=4)
+    router.drain()
+    assert verify_fleet(router) == []
+    TESTED.add("P116")
+
+
 # ---------------------------------------------------------------------------
-# jaxpr auditor: J201-J207
+# jaxpr auditor: J201-J208
 # ---------------------------------------------------------------------------
 def test_j201_dense_dot_on_covered_shape(plan, mask):
     covered = collect_covered({"mlp": {"up": plan}})
@@ -423,6 +487,29 @@ def test_audit_compiled_clean():
     from repro.analysis import audit_compiled
     out = audit_compiled(lambda x: x * 2, [jnp.ones((4,), jnp.float32)])
     assert out == []
+
+
+def test_j208_sharding_placement():
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    from repro.analysis import audit_engine_sharding
+
+    w = jnp.zeros((4, 4), jnp.float32)
+    # >1-device mesh, params without any NamedSharding: error
+    eng = SimpleNamespace(
+        mesh=SimpleNamespace(size=2),
+        generations=[SimpleNamespace(gid=0, params={"w": w})])
+    assert_code(audit_engine_sharding(eng), "J208", "error")
+    # NamedShardings present but all fully replicated: warning
+    mesh1 = Mesh(np.array(jax.devices()[:1]), ("model",))
+    wr = jax.device_put(w, NamedSharding(mesh1, P()))
+    eng2 = SimpleNamespace(
+        mesh=SimpleNamespace(size=2),
+        generations=[SimpleNamespace(gid=1, params={"w": wr})])
+    assert_code(audit_engine_sharding(eng2), "J208", "warning")
+    # 1-device mesh (or no mesh): nothing to place, silent
+    eng3 = SimpleNamespace(mesh=mesh1, generations=eng.generations)
+    assert audit_engine_sharding(eng3) == []
+    assert audit_engine_sharding(SimpleNamespace(mesh=None)) == []
 
 
 def test_unambiguous_covered_drops_shape_collisions(plan):

@@ -92,6 +92,26 @@ def test_heartbeat_monitor(tmp_path):
     assert mon.dead_workers() == ["worker0"]
 
 
+def test_heartbeat_monitor_injectable_clock(tmp_path):
+    """No real sleeps: dead/revived transitions driven by a fake clock."""
+    t = [0.0]
+    mon = HeartbeatMonitor(str(tmp_path), deadline_s=5.0,
+                           clock=lambda: t[0])
+    assert mon.age("w0") is None         # never beat
+    mon.beat("w0")
+    mon.beat("w1")
+    t[0] = 4.0
+    assert mon.age("w0") == 4.0
+    assert mon.dead_workers() == []
+    t[0] = 6.0
+    mon.beat("w1")
+    assert mon.dead_workers() == ["w0"]
+    t[0] = 7.0                            # w0's beats resume (flap)
+    mon.beat("w0")
+    assert mon.dead_workers() == []
+    assert mon.age("w0") == 0.0
+
+
 def test_skip_straggler_escalates():
     escalations = []
     pol = SkipStraggler(deadline_s=1.0, budget=2, window=100,

@@ -1,0 +1,221 @@
+"""Fleet router: least-loaded dispatch, failover drain, flap
+re-admission, all-or-nothing fleet hot-swap, and accounting (P116)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.analysis import verify_fleet
+from repro.api import structured_prune
+from repro.configs import PruneConfig, get_arch, scaled_down
+from repro.core import lottery
+from repro.core.masks import lm_prunable
+from repro.distributed.fault_tolerance import HeartbeatMonitor
+from repro.models import transformer as tfm
+from repro.serve import ServeEngine, TicketManager
+from repro.serve.fleet import FleetRouter
+from repro.serve.manager import SwapEvent, TicketManager as _TM
+
+CAP = 96
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = scaled_down(get_arch("llama3.2-3b"), dtype="float32")
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    masks = structured_prune(params, [("filter", 0.2)],
+                             prunable=lm_prunable, cfg=PruneConfig())
+    return cfg, params, masks
+
+
+def _engine(cfg, params, slots=2, **kw):
+    return ServeEngine(params=params, cfg=cfg, prefill_fn=tfm.prefill,
+                       decode_fn=tfm.decode_step, batch_slots=slots,
+                       capacity=CAP, **kw)
+
+
+def _prompt(i):
+    return np.arange(1 + i, 9 + i, dtype=np.int32)
+
+
+def _submit_all(router, n, budget=8):
+    return [router.submit(_prompt(i), uid=i, max_new_tokens=budget)
+            for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# dispatch
+# ---------------------------------------------------------------------------
+def test_least_loaded_dispatch_balances(setup):
+    cfg, params, _ = setup
+    router = FleetRouter([_engine(cfg, params) for _ in range(2)])
+    recs = _submit_all(router, 4)
+    assert [r.engine for r in recs] == [0, 1, 0, 1]
+    done = router.drain()
+    assert {r.uid for r in done} == {0, 1, 2, 3}
+    assert all(len(r.tokens) == 8 for r in done)
+    assert verify_fleet(router) == []
+
+
+def test_single_engine_fleet_matches_plain_engine(setup):
+    cfg, params, _ = setup
+    router = FleetRouter([_engine(cfg, params)])
+    _submit_all(router, 2)
+    fleet_tokens = {r.uid: list(r.tokens) for r in router.drain()}
+
+    eng = _engine(cfg, params)
+    solo = {i: list(eng.smoke_decode(_prompt(i), 8)) for i in range(2)}
+    assert fleet_tokens == solo
+
+
+# ---------------------------------------------------------------------------
+# failover
+# ---------------------------------------------------------------------------
+def test_failover_oracle_matches_never_failed_fleet(setup):
+    cfg, params, _ = setup
+    n_req = 6
+
+    killed = FleetRouter([_engine(cfg, params) for _ in range(2)])
+    _submit_all(killed, n_req)
+    killed.pump(3)                        # engine 0 is mid-decode now
+    moved = killed.kill(0)
+    assert moved and any(r.tokens for r in moved), \
+        "kill must catch in-flight requests with tokens already emitted"
+    killed.drain()
+
+    clean = FleetRouter([_engine(cfg, params) for _ in range(2)])
+    _submit_all(clean, n_req)
+    clean.drain()
+
+    got = {r.uid: list(r.tokens) for r in killed.finished}
+    want = {r.uid: list(r.tokens) for r in clean.finished}
+    assert got == want                     # zero loss, zero dup, bit-exact
+    assert len(killed.finished) == n_req
+    assert killed.report.failovers == 1
+    assert killed.report.redispatched == len(moved)
+    assert all(r.redispatches == 1 for r in moved)
+    assert killed.live == {1}
+    assert verify_fleet(killed) == []
+    assert verify_fleet(clean) == []
+
+
+def test_heartbeat_failover_and_flap_readmission(setup, tmp_path):
+    cfg, params, _ = setup
+    t = [0.0]
+    clock = lambda: t[0]
+    monitor = HeartbeatMonitor(root=str(tmp_path / "hb"), deadline_s=5.0,
+                               clock=clock)
+    engines = [_engine(cfg, params, clock=clock) for _ in range(2)]
+    router = FleetRouter(engines, monitor=monitor)
+    _submit_all(router, 4, budget=12)
+    router.pump(1)                        # both engines beat at t=0
+
+    t[0] = 6.0                            # engine0 wedges; engine1 beats
+    monitor.beat("engine1")
+    router.pump(1)
+    assert router.live == {1}
+    assert router.report.failovers == 1
+
+    t[0] = 7.0                            # engine0's beats resume
+    monitor.beat("engine0")
+    router.pump(1)                        # flap re-admission
+    assert router.live == {0, 1}
+    rec = router.submit(_prompt(9), uid=9, max_new_tokens=4)
+    assert rec.engine == 0                # re-admitted engine takes load
+
+    router.drain()
+    assert {r.uid for r in router.finished} == {0, 1, 2, 3, 9}
+    assert all(r.status == "done" for r in router.finished)
+    assert verify_fleet(router) == []
+
+
+# ---------------------------------------------------------------------------
+# fleet hot-swap
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def ticket(setup, tmp_path_factory):
+    cfg, params, masks = setup
+    root = tmp_path_factory.mktemp("fleet_tickets")
+    meta = {"arch": cfg.name, "recipe": {"name": "paper"},
+            "quantize_bits": None}
+    lottery.export_ticket(str(root / "a"), lottery.snapshot(params),
+                          masks, meta=meta)
+    return str(root / "a")
+
+
+def _manager(cfg, params):
+    return TicketManager(cfg=cfg, params_template=params,
+                         prunable=lm_prunable, prefill_fn=tfm.prefill,
+                         decode_fn=tfm.decode_step, probe_tokens=6)
+
+
+def test_fleet_swap_all_or_nothing_accepts(setup, ticket):
+    cfg, params, _ = setup
+    mgr = _manager(cfg, params)
+    mgr.register("a", ticket)
+    router = FleetRouter([_engine(cfg, params) for _ in range(2)])
+
+    ev = mgr.swap(router, "a")
+    assert ev.accepted and ev.rolled_back == 0
+    assert [e.engine for e in ev.events] == [0, 1]
+    assert all(e.accepted for e in ev.events)
+    assert mgr.active == "a"
+    for fe in router.frontends:
+        assert len(fe.engine.generations) == 2
+
+    # traffic lands on the swapped-in generation everywhere
+    recs = _submit_all(router, 2, budget=4)
+    router.drain()
+    assert all(r.status == "done" for r in recs)
+    assert verify_fleet(router) == []
+
+
+def test_fleet_swap_rolls_back_every_engine_on_late_failure(
+        setup, ticket, monkeypatch):
+    cfg, params, _ = setup
+    mgr = _manager(cfg, params)
+    mgr.register("a", ticket)
+    router = FleetRouter([_engine(cfg, params) for _ in range(2)])
+
+    orig = _TM._swap_engine
+
+    def flaky(self, engine, name, rec, engine_idx=None):
+        ev = orig(self, engine, name, rec, engine_idx=engine_idx)
+        if engine_idx == 1 and ev.accepted:
+            engine.rollback(ev.gid)       # the shim owns its own undo
+            return SwapEvent(ticket=name, gid=ev.gid, accepted=False,
+                             reason="injected verification failure",
+                             engine=engine_idx)
+        return ev
+
+    monkeypatch.setattr(_TM, "_swap_engine", flaky)
+    ev = mgr.swap(router, "a")
+    assert not ev.accepted
+    assert ev.rolled_back == 1            # engine 0 was already committed
+    assert "rolled back" in ev.reason
+    assert mgr.active is None
+    for fe in router.frontends:           # fleet never splits: old ticket
+        assert len(fe.engine.generations) == 1
+
+    recs = _submit_all(router, 2, budget=4)
+    router.drain()
+    assert all(r.status == "done" for r in recs)
+    assert verify_fleet(router) == []
+
+
+# ---------------------------------------------------------------------------
+# reporting + overhead
+# ---------------------------------------------------------------------------
+def test_report_merges_logical_records_and_overhead_is_small(setup):
+    cfg, params, _ = setup
+    router = FleetRouter([_engine(cfg, params) for _ in range(2)])
+    _submit_all(router, 4)
+    router.drain()
+    rep = router.report
+    assert rep.requests == 4 == len(router.finished)
+    assert rep.tokens_generated == 32
+    assert rep.tokens_generated == sum(p.tokens_generated
+                                       for p in rep.per_engine)
+    assert rep.ttft_p50 > 0 and rep.ttft_p95 >= rep.ttft_p50
+    assert rep.tokens_per_s > 0
+    # router bookkeeping must be dwarfed by the engine steps it fronts
+    assert 0 < router.dispatch_s < router.step_s

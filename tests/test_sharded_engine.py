@@ -1,0 +1,187 @@
+"""Sharded ServeEngine oracle: mesh-backed serving is bit-exact.
+
+Two layers, matching ``tests/test_sharding.py``'s split:
+
+* a subprocess run that forces 8 host-platform devices (XLA_FLAGS must
+  be set before jax imports, so it cannot run in-process) and checks
+  greedy outputs on (1,2) and (2,1) meshes against the single-device
+  engine — dense AND pruned-ticket generations, dense AND paged KV;
+* in-process tests that only run when the interpreter already has >1
+  device (CI's virtual-device job exports
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=8``) and are
+  skipped on the default single-device run.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import pytest
+
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+
+multi_device = pytest.mark.skipif(
+    jax.device_count() < 2,
+    reason="needs >1 device (CI virtual-device job forces 8)")
+
+
+ORACLE_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.environ["JAX_PLATFORMS"] = "cpu"
+    import sys
+    sys.path.insert(0, "src")
+    import numpy as np
+    import jax
+    from repro.analysis import audit_engine_sharding
+    from repro.api import structured_prune
+    from repro.api.registry import make_adapter
+    from repro.configs import PruneConfig
+    from repro.core.masks import lm_prunable
+    from repro.launch.mesh import make_test_mesh
+    from repro.models import transformer as tfm
+    from repro.serve.engine import Request, ServeEngine
+
+    ad = make_adapter("llama3.2-3b", scale="tiny")
+    cfg = ad.cfg
+    params = ad.init_params(jax.random.PRNGKey(0))
+    masks = structured_prune(params, [("filter", 0.2)],
+                             prunable=lm_prunable, cfg=PruneConfig())
+    rng = np.random.RandomState(1)
+    prompts = [rng.randint(1, cfg.vocab_size,
+                           size=rng.randint(4, 14)).astype(np.int32)
+               for _ in range(3)]
+
+    def run(mesh, paged, m):
+        eng = ServeEngine(params=params, cfg=cfg, prefill_fn=tfm.prefill,
+                          decode_fn=tfm.decode_step, batch_slots=2,
+                          capacity=48, paged=paged, masks=m, mesh=mesh)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(uid=i, prompt=p, max_new_tokens=6))
+        out = {r.uid: r.tokens for r in eng.run()}
+        return eng, out
+
+    for paged in (False, True):
+        for m in (None, masks):
+            tag = f"paged={paged} masks={m is not None}"
+            _, base = run(None, paged, m)
+            assert len(base) == len(prompts), tag
+            for dxm in ((1, 2), (2, 1)):
+                eng, got = run(make_test_mesh(*dxm), paged, m)
+                assert got == base, (tag, dxm, got, base)
+                finds = audit_engine_sharding(eng)
+                assert not [f for f in finds if f.severity == "error"], \\
+                    (tag, dxm, finds)
+                if dxm == (1, 2):   # model axis live: params partitioned
+                    assert finds == [], (tag, dxm, finds)
+            print("OK", tag)
+    print("SHARDED_ENGINE_OK")
+""")
+
+
+def test_sharded_engine_oracle_subprocess():
+    """(1,2) and (2,1) meshes reproduce the single-device engine's
+    greedy streams bit-exactly, dense + pruned, dense + paged KV."""
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", ORACLE_SCRIPT],
+                         capture_output=True, text=True, env=env,
+                         cwd=os.path.dirname(os.path.dirname(
+                             os.path.abspath(__file__))), timeout=600)
+    assert "SHARDED_ENGINE_OK" in out.stdout, \
+        out.stdout[-2000:] + out.stderr[-2000:]
+
+
+# ---------------------------------------------------------------------------
+# in-process (CI virtual-device job)
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def setup():
+    import numpy as np
+
+    from repro.api.registry import make_adapter
+
+    ad = make_adapter("llama3.2-3b", scale="tiny")
+    params = ad.init_params(jax.random.PRNGKey(0))
+    prompt = np.arange(1, 9, dtype=np.int32)
+    return ad.cfg, params, prompt
+
+
+def _engine(cfg, params, mesh=None, **kw):
+    from repro.models import transformer as tfm
+    from repro.serve.engine import ServeEngine
+
+    return ServeEngine(params=params, cfg=cfg, prefill_fn=tfm.prefill,
+                       decode_fn=tfm.decode_step, batch_slots=2,
+                       capacity=48, mesh=mesh, **kw)
+
+
+@multi_device
+@pytest.mark.parametrize("dxm", [(1, 2), (2, 1)])
+def test_mesh_engine_matches_single_device(setup, dxm):
+    from repro.launch.mesh import make_test_mesh
+
+    cfg, params, prompt = setup
+    want = _engine(cfg, params).smoke_decode(prompt, 6)
+    got = _engine(cfg, params,
+                  mesh=make_test_mesh(*dxm)).smoke_decode(prompt, 6)
+    assert got == want
+
+
+@multi_device
+def test_mesh_engine_params_carry_named_shardings(setup):
+    from jax.sharding import NamedSharding
+
+    from repro.launch.mesh import make_test_mesh
+
+    cfg, params, prompt = setup
+    eng = _engine(cfg, params, mesh=make_test_mesh(1, 2))
+    leaves = [l for l in jax.tree.leaves(eng.generations[-1].params)
+              if hasattr(l, "sharding")]
+    assert leaves and all(isinstance(l.sharding, NamedSharding)
+                          for l in leaves)
+    assert any(any(s is not None for s in l.sharding.spec)
+               for l in leaves), "model axis should partition params"
+
+
+@multi_device
+def test_two_meshes_coexist_in_one_process(setup):
+    """Scoped constrainer install: engines on different meshes in one
+    process must not poison each other's traces."""
+    from repro.launch.mesh import make_test_mesh
+
+    cfg, params, prompt = setup
+    want = _engine(cfg, params).smoke_decode(prompt, 6)
+    a = _engine(cfg, params, mesh=make_test_mesh(1, 2))
+    b = _engine(cfg, params, mesh=make_test_mesh(2, 1))
+    assert a.smoke_decode(prompt, 6) == want
+    assert b.smoke_decode(prompt, 6) == want
+    assert a.smoke_decode(prompt, 6) == want   # a again, after b traced
+
+
+def test_head_boundary_guard_in_param_spec():
+    """Regression for the (2,4)-mesh wk bug: a column-parallel attention
+    projection must never shard below head_dim granularity."""
+    from repro.distributed.sharding import ShardingRules
+
+    class FakeMesh:
+        def __init__(self, shape):
+            self.axis_names = tuple(shape)
+            self.shape = dict(shape)
+
+    r = ShardingRules(FakeMesh({"data": 2, "model": 4}), head_dim=32)
+    # wk (d_model=128, n_kv=2·32=64): 64/4 = 16 < head_dim — the head
+    # dim must stay whole, so sharding falls back to the in-dim
+    assert tuple(r.param_spec("segments/0/0/attn/wk", (128, 64))) \
+        == ("model", None)
+    # wq (128, 128): 128/4 = 32 = head_dim — sharding is safe
+    assert tuple(r.param_spec("segments/0/0/attn/wq", (128, 128))) \
+        == (None, "model")
+    # wo row-parallel gets the same guard on its (head-shaped) in-dim
+    assert tuple(r.param_spec("segments/0/0/attn/wo", (64, 128))) \
+        == (None, "model")
+    # without head_dim metadata the old (unguarded) behaviour remains
+    r2 = ShardingRules(FakeMesh({"data": 2, "model": 4}))
+    assert tuple(r2.param_spec("segments/0/0/attn/wk", (128, 64))) \
+        == (None, "model")
