@@ -28,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import Timer, csv_line
+from repro.core.perf_model import bsmm_train_cost
 from repro.kernels.bsmm import default_interpret, make_tile_plan, plan_matmul
 
 DENSITIES = (1.0, 0.5, 0.25, 0.0625)
@@ -85,6 +86,9 @@ def run(M: int = 256, K: int = 512, N: int = 512, b: int = 128,
         dx_frac = plan.nmax / Nt
         dw_frac = plan.live_tiles / plan.total_tiles
         predicted_cost = (fwd_frac + dx_frac + dw_frac) / 3.0
+        # the K306-audited analytic model: per-kernel passes/FLOPs/HBM
+        # bytes for this exact plan (what the TPU regen compares against)
+        cost = bsmm_train_cost(plan, M, bm=b)
         rec = {
             "name": f"bsmm_train_density_{density}",
             "shape": [M, K, N],
@@ -99,6 +103,10 @@ def run(M: int = 256, K: int = 512, N: int = 512, b: int = 128,
             "measured_saving": 1.0 - us_sparse / us_dense,
             "measured_saving_vs_full_plan": 1.0 - us_sparse / us_full_plan,
             "predicted_saving": 1.0 - predicted_cost,
+            "predicted_cost": {
+                k: {"passes": c.passes, "flops": c.flops,
+                    "hbm_bytes": c.hbm_bytes}
+                for k, c in cost.items()},
             "interpret": interpret,
             "backend": jax.default_backend(),
         }

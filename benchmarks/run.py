@@ -44,6 +44,9 @@ def main() -> None:
                     help="write the bench's records to PATH (default "
                          "BENCH_<bench>.json; needs `kernels` or "
                          "`recipes` in the run)")
+    ap.add_argument("--force", action="store_true",
+                    help="allow an interpret-mode run to overwrite a "
+                         "record produced on a real backend")
     opts = ap.parse_args()
     which, json_path = opts.which, opts.json
     print("name,us_per_call,derived")
@@ -92,12 +95,35 @@ def main() -> None:
                 "in one run (`all` produces several); drop the PATH to "
                 "get the default BENCH_<bench>.json names, or run one "
                 "bench at a time")
+        import os
+
         import jax
+
+        from repro.kernels.bsmm import default_interpret
+        interpret = bool(default_interpret())
         for bench, recs in records.items():
             path = json_path or _JSON_BENCHES[bench]
+            # kernel-timing benches: refuse to clobber a real-backend
+            # record with an interpret-mode (CPU emulation) one — the
+            # numbers are not comparable (TPU bring-up runbook step 3
+            # regenerates these non-interpret on hardware)
+            if bench in ("kernels", "paging") and interpret \
+                    and not opts.force and os.path.exists(path):
+                try:
+                    with open(path) as f:
+                        prev = json.load(f)
+                except (OSError, ValueError):
+                    prev = {}
+                if prev.get("interpret_mode") is False:
+                    raise SystemExit(
+                        f"{path} holds a non-interpret "
+                        f"({prev.get('backend')}) record; this run is "
+                        f"interpret-mode and would bury it. Re-run "
+                        f"with --force to overwrite anyway.")
             payload = {
                 "bench": bench,
                 "backend": jax.default_backend(),
+                "interpret_mode": interpret,
                 "python": platform.python_version(),
                 "jax": jax.__version__,
                 "records": recs,

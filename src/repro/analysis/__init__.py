@@ -10,13 +10,24 @@ codes (``findings.RULES``):
   sources and compared;
 * ``jaxpr_audit`` — J201–J208, abstract traces of jitted hot paths
   (dense routing misses, x64 promotions, host callbacks) plus a
-  compiled-HLO cross-check.
+  compiled-HLO cross-check;
+* ``kernel_audit`` — K300–K306, every registered Pallas kernel's
+  declarative ``KernelSpec`` (the object its ``pallas_call`` is built
+  from) evaluated exhaustively over small concrete grids: output-tile
+  coverage, index-map/block-table bounds, ``pl.when`` liveness vs the
+  truth source, f32 accumulators, VMEM budget, perf-model agreement.
 
-``lint.lint_arch`` runs all three against a registered arch; the CLI
-surface is ``python -m repro.api lint [--arch NAME | --all]``.
+``lint.lint_arch`` runs the first three against a registered arch and
+``lint.lint_kernels`` the fourth; the CLI surface is ``python -m
+repro.api lint [--arch NAME | --all] [--kernels]`` with ``--explain
+CODE`` documenting any rule from the central registry.
 """
 from repro.analysis.findings import (RULES, SEVERITIES, Finding, Report,
-                                     error, info, warning)
+                                     error, explain, info, rules_markdown,
+                                     warning)
+from repro.analysis.kernel_audit import (AuditCase, audit_case,
+                                         audit_kernel_spec, audit_kernels,
+                                         default_cases)
 from repro.analysis.invariants import (verify_block_pool,
                                        verify_block_tables,
                                        verify_decode_plan, verify_engine,
@@ -29,11 +40,14 @@ from repro.analysis.jaxpr_audit import (audit_closure, audit_compiled,
                                         audit_engine_sharding,
                                         audit_hlo_text, collect_covered,
                                         iter_eqns, unambiguous_covered)
-from repro.analysis.lint import lint_all, lint_arch
+from repro.analysis.lint import lint_all, lint_arch, lint_kernels
 from repro.analysis.recipe_lint import lint_recipe, lint_recipe_for_family
 
 __all__ = [
     "RULES", "SEVERITIES", "Finding", "Report", "error", "warning", "info",
+    "explain", "rules_markdown",
+    "AuditCase", "audit_case", "audit_kernel_spec", "audit_kernels",
+    "default_cases",
     "lint_recipe", "lint_recipe_for_family",
     "verify_tile_plan", "verify_decode_plan", "verify_xbar_stats",
     "verify_mask_accounting", "verify_engine", "verify_block_pool",
@@ -42,5 +56,5 @@ __all__ = [
     "audit_closure", "audit_compiled", "audit_hlo_text",
     "audit_engine_sharding",
     "collect_covered", "unambiguous_covered", "iter_eqns",
-    "lint_arch", "lint_all",
+    "lint_arch", "lint_all", "lint_kernels",
 ]

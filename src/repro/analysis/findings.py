@@ -1,19 +1,24 @@
-"""Shared finding model for the sparsity lint.
+"""Shared finding model + the central rule registry for the sparsity
+lint.
 
 Every analyzer — the recipe linter, the invariant verifier, the jaxpr
-auditor — reports through one structured ``Finding(severity, code,
-where, msg)`` so the CLI, CI gate, and tests consume a single surface.
+auditor, the kernel auditor — reports through one structured
+``Finding(severity, code, where, msg)`` so the CLI, CI gate, and tests
+consume a single surface.
 
-Rule codes are STABLE identifiers (documented in the README's rule
-table and asserted by ``tests/test_analysis.py``): a code never changes
-meaning, new rules get new codes.  ``RULES`` maps every code to its
-one-line contract; emitting an unregistered code is itself a bug
+Rule codes are STABLE identifiers: a code never changes meaning, new
+rules get new codes.  ``RULES`` maps every code to a ``Rule`` (code →
+one-line title → docstring); it is the single source of truth — the
+README's rule table is *generated* from it (``rules_markdown``, a test
+asserts they agree), ``lint --explain CODE`` prints ``explain(code)``,
+and emitting an unregistered code is itself a bug
 (``Finding.__post_init__`` raises).
 
 Severities:
   error   — the sparsity contract is broken: a silently-dense hot path,
             a plan inconsistent with its mask, a recipe that cannot
-            run.  The CLI exits nonzero on any error finding.
+            run, a kernel launch that reads out of bounds.  The CLI
+            exits nonzero on any error finding.
   warning — legal but almost certainly unintended (QAT before pruning,
             unreachable sparsity targets, f64 in a hot trace).
   info    — measurements worth surfacing (HLO collective traffic).
@@ -26,69 +31,239 @@ from typing import Dict, Iterable, List, Tuple
 
 SEVERITIES = ("error", "warning", "info")
 
-# ---------------------------------------------------------------------------
-# The rule-code registry.  README's "Static analysis" table is generated
-# from this dict; tests assert every emitted code is registered.
-# ---------------------------------------------------------------------------
-RULES: Dict[str, str] = {
+
+@dataclass(frozen=True)
+class Rule:
+    """One registered rule: stable ``code``, one-line ``title`` (the
+    README table row), and a ``doc`` paragraph (``lint --explain``)."""
+    code: str
+    title: str
+    doc: str
+
+    @property
+    def family(self) -> str:
+        return {"R": "recipe linter", "P": "invariant verifier",
+                "J": "jaxpr auditor", "K": "kernel auditor"}.get(
+                    self.code[:1], "unknown")
+
+
+_ALL_RULES: Tuple[Rule, ...] = (
     # recipe linter -------------------------------------------------------
-    "R001": "recipe/stage does not validate (construction failed)",
-    "R002": "prune granularity unknown to the target family",
-    "R003": "non-monotonic target_sparsity: stage target already met "
-            "by an earlier stage (dead stage)",
-    "R004": "non-positive retrain budget (0 silently falls back to the "
-            "adapter default — it does NOT mean 'no retraining')",
-    "R005": "quantize stage before any prune stage (QAT calibrates a "
-            "dense model)",
-    "R006": "prune stage after a quantize stage (invalidates the QAT "
-            "calibration the quantize gate accepted)",
-    "R007": "target_sparsity unreachable within max_rounds at the "
-            "stage rate",
-    "R008": "duplicate stage names (resume + event attribution are "
-            "keyed by stage identity)",
-    "R009": "recipe commits no masks (no prune stage)",
+    Rule("R001", "recipe/stage does not validate (construction failed)",
+         "The recipe or one of its stages failed to construct at all — "
+         "bad stage kind, malformed field, or a validation error raised "
+         "by Recipe/Stage.  Nothing downstream can run until it builds."),
+    Rule("R002", "prune granularity unknown to the target family",
+         "A prune stage names a granularity the target family's "
+         "strategy registry does not provide (e.g. 'expert' on a dense "
+         "model).  The session would fail at stage entry."),
+    Rule("R003", "non-monotonic target_sparsity: stage target already "
+         "met by an earlier stage (dead stage)",
+         "Stage targets must increase: a stage whose target_sparsity "
+         "was already reached by an earlier stage commits no masks and "
+         "silently does nothing."),
+    Rule("R004", "non-positive retrain budget (0 silently falls back "
+         "to the adapter default — it does NOT mean 'no retraining')",
+         "retrain_steps <= 0 does not disable retraining; the adapter "
+         "substitutes its own default budget.  Say what you mean with "
+         "an explicit positive budget."),
+    Rule("R005", "quantize stage before any prune stage (QAT "
+         "calibrates a dense model)",
+         "Quantization-aware calibration on the dense network is "
+         "invalidated by the pruning that follows — the gate accepted "
+         "ranges the pruned weights no longer have."),
+    Rule("R006", "prune stage after a quantize stage (invalidates the "
+         "QAT calibration the quantize gate accepted)",
+         "Pruning after an accepted quantize stage changes the weight "
+         "distribution the quantize gate validated; re-order or "
+         "re-quantize."),
+    Rule("R007", "target_sparsity unreachable within max_rounds at the "
+         "stage rate",
+         "Pruning fraction p per round reaches at most 1-(1-p)^rounds; "
+         "a target beyond that leaves the stage spinning its full "
+         "round budget and still failing its own exit condition."),
+    Rule("R008", "duplicate stage names (resume + event attribution "
+         "are keyed by stage identity)",
+         "Mid-stage resume and PruneEvent attribution key on the stage "
+         "name; duplicates make resume ambiguous."),
+    Rule("R009", "recipe commits no masks (no prune stage)",
+         "A recipe without any prune stage produces a dense ticket — "
+         "legal, but the entire pipeline exists to prune; almost "
+         "certainly a mistake."),
     # invariant verifier --------------------------------------------------
-    "P101": "TilePlan indices/counts malformed or out of bounds",
-    "P102": "TilePlan counts disagree with the mask's tile bitmap",
-    "P103": "TilePlan live-index set disagrees with the mask's tile "
-            "bitmap",
-    "P104": "TilePlan kmax/nmax below the max live count",
-    "P105": "transposed plan (idx_t/counts_t) is not the exact "
-            "transpose of the forward plan",
-    "P106": "flat live-tile coords (kk/nn) disagree with the bitmap",
-    "P107": "live/total tile accounting disagrees with the bitmap",
-    "P108": "geometry mismatch: mask shape vs tile/crossbar geometry",
-    "P109": "decode plan disagrees with the mask's tile reduction "
-            "(missing, extra, or stale plan entry)",
-    "P110": "PlanStats totals disagree with the per-projection plans",
-    "P111": "packing/XbarStats accounting disagrees with the mask",
-    "P112": "cross-generation inconsistency inside a ServeEngine",
-    "P113": "paged block table disagrees with the pool's ownership "
-            "(unallocated, double-referenced, out-of-bounds, or "
-            "off-scratch dead entry)",
-    "P114": "paged cache gathered in logical block order does not "
-            "reconstruct the dense oracle cache",
-    "P115": "BlockPool accounting does not balance (free + live + "
-            "scratch vs capacity, or reservations exceed free)",
-    "P116": "fleet accounting broken (a submitted uid finished zero or "
-            "multiple times across engines, or merged report totals "
-            "disagree with the per-engine sums)",
+    Rule("P101", "TilePlan indices/counts malformed or out of bounds",
+         "idx/counts array shapes must match the tile grid and every "
+         "index must be a valid tile row — re-derived from the mask's "
+         "tile bitmap."),
+    Rule("P102", "TilePlan counts disagree with the mask's tile bitmap",
+         "counts[j] must equal the number of live K tiles in column j "
+         "of the independently recomputed bitmap."),
+    Rule("P103", "TilePlan live-index set disagrees with the mask's "
+         "tile bitmap",
+         "The set of live indices idx[j, :counts[j]] must be exactly "
+         "the bitmap's live rows for column j — no missing, no extra, "
+         "no stale entries."),
+    Rule("P104", "TilePlan kmax/nmax below the max live count",
+         "The grid's last dimension is kmax/nmax; a cap below the "
+         "true max live count silently drops tiles from the "
+         "accumulation."),
+    Rule("P105", "transposed plan (idx_t/counts_t) is not the exact "
+         "transpose of the forward plan",
+         "The dx backward runs off idx_t/counts_t; they must describe "
+         "the same bitmap transposed, or forward and backward see "
+         "different sparsity."),
+    Rule("P106", "flat live-tile coords (kk/nn) disagree with the "
+         "bitmap",
+         "The dw kernel materialises exactly the tiles listed in "
+         "kk/nn; they must be the bitmap's nonzero coordinates in "
+         "row-major order."),
+    Rule("P107", "live/total tile accounting disagrees with the bitmap",
+         "live_tiles/total_tiles feed the perf model and reports; they "
+         "must equal the bitmap's popcount and size."),
+    Rule("P108", "geometry mismatch: mask shape vs tile/crossbar "
+         "geometry",
+         "A mask whose shape does not tile evenly at the configured "
+         "crossbar geometry cannot be planned; the builder must have "
+         "refused or fallen back explicitly."),
+    Rule("P109", "decode plan disagrees with the mask's tile reduction "
+         "(missing, extra, or stale plan entry)",
+         "Per-projection decode plans are re-derived from the masks "
+         "and compared entry-by-entry."),
+    Rule("P110", "PlanStats totals disagree with the per-projection "
+         "plans",
+         "Aggregated live/total tile counts must equal the sum over "
+         "the plan leaves they claim to summarise."),
+    Rule("P111", "packing/XbarStats accounting disagrees with the mask",
+         "Crossbar packing statistics (cells, xbars needed, savings) "
+         "are recomputed from the raw mask and compared."),
+    Rule("P112", "cross-generation inconsistency inside a ServeEngine",
+         "After a hot-swap every generation must keep self-consistent "
+         "params/masks/plans/caches; stale cross-links between "
+         "generations corrupt in-flight decodes."),
+    Rule("P113", "paged block table disagrees with the pool's "
+         "ownership (unallocated, double-referenced, out-of-bounds, "
+         "or off-scratch dead entry)",
+         "Every live table entry must point at a block the pool "
+         "assigned to that slot, and dead entries must point at the "
+         "scratch block so the kernel's masked DMA stays in bounds."),
+    Rule("P114", "paged cache gathered in logical block order does not "
+         "reconstruct the dense oracle cache",
+         "Adopting a dense prefill into the pool and gathering it back "
+         "through the table must be bit-exact."),
+    Rule("P115", "BlockPool accounting does not balance (free + live + "
+         "scratch vs capacity, or reservations exceed free)",
+         "The pool's free list, per-slot ownership, scratch block, and "
+         "reservation counters must partition capacity exactly."),
+    Rule("P116", "fleet accounting broken (a submitted uid finished "
+         "zero or multiple times across engines, or merged report "
+         "totals disagree with the per-engine sums)",
+         "Failover must neither lose nor duplicate requests, and the "
+         "merged fleet report must equal the sum of its engines."),
     # jaxpr auditor -------------------------------------------------------
-    "J201": "dense dot_general on a weight shape a TilePlan covers "
-            "(missed block-sparse routing)",
-    "J202": "float64 value in a hot-path trace (accidental x64 "
-            "promotion)",
-    "J203": "host callback inside a hot-path trace",
-    "J204": "hot-path closure is not jitted (per-call retrace/dispatch)",
-    "J205": "plan covers projections but the traced closure issues no "
-            "pallas_call at all (whole-path routing miss)",
-    "J206": "compiled artifact contains f64 tensors (HLO cross-check)",
-    "J207": "collective traffic in a hot-path artifact (HLO "
-            "cross-check)",
-    "J208": "sharded engine's jitted hot path traced on a >1-device "
-            "mesh with replicated-only params (missing NamedSharding "
-            "placement — GSPMD runs every device dense)",
-}
+    Rule("J201", "dense dot_general on a weight shape a TilePlan "
+         "covers (missed block-sparse routing)",
+         "The traced hot path multiplies by a weight whose shape a "
+         "plan covers, but through a dense dot_general — the "
+         "block-sparse routing was silently skipped."),
+    Rule("J202", "float64 value in a hot-path trace (accidental x64 "
+         "promotion)",
+         "A f64 intermediate in a jitted hot path usually means a "
+         "Python float or numpy default dtype leaked into the trace; "
+         "on TPU it doubles bandwidth or fails to lower."),
+    Rule("J203", "host callback inside a hot-path trace",
+         "io_callback/pure_callback/debug print in a decode or train "
+         "step synchronises with the host every call."),
+    Rule("J204", "hot-path closure is not jitted (per-call "
+         "retrace/dispatch)",
+         "The closure could not be traced as a jitted computation; "
+         "every invocation would pay Python dispatch."),
+    Rule("J205", "plan covers projections but the traced closure "
+         "issues no pallas_call at all (whole-path routing miss)",
+         "A plan exists for this path yet the trace contains zero "
+         "Pallas kernels — the entire path fell back to dense."),
+    Rule("J206", "compiled artifact contains f64 tensors (HLO "
+         "cross-check)",
+         "The optimized HLO still carries f64 after compilation — the "
+         "promotion survived XLA simplification."),
+    Rule("J207", "collective traffic in a hot-path artifact (HLO "
+         "cross-check)",
+         "all-reduce/all-gather/permute ops in the compiled hot path; "
+         "surfaced as info so sharded configs can budget interconnect "
+         "traffic deliberately."),
+    Rule("J208", "sharded engine's jitted hot path traced on a "
+         ">1-device mesh with replicated-only params (missing "
+         "NamedSharding placement — GSPMD runs every device dense)",
+         "A mesh-backed engine whose params carry no NamedSharding "
+         "gives GSPMD nothing to partition: every device computes the "
+         "full dense model."),
+    # kernel auditor ------------------------------------------------------
+    Rule("K300", "kernel spec malformed (grid/blocks inconsistent with "
+         "declared shapes)",
+         "The KernelSpec itself is unusable: grid rank disagrees with "
+         "dimension_semantics, a block shape does not match its "
+         "operand's rank or does not tile it evenly, or an index map "
+         "does not evaluate over the grid.  Remaining K-rules are "
+         "skipped for that kernel."),
+    Rule("K301", "output-tile coverage not exact (skipped or "
+         "multiply-written output tiles)",
+         "Enumerating the grid, the output index map must write every "
+         "output tile exactly once: constant along 'arbitrary' grid "
+         "axes (the revolving accumulator), and a bijection from the "
+         "parallel axes onto the full output tile grid — no tile "
+         "skipped on a ragged edge, none double-written."),
+    Rule("K302", "input index map or block-table gather out of bounds",
+         "Every grid cell's index map — including pl.when-guarded "
+         "cells, whose DMA still happens — must land inside the "
+         "declared operand shape.  Catches a block-table entry past "
+         "the pool and an index map shifted off the edge."),
+    Rule("K303", "pl.when guard disagrees with the plan's liveness "
+         "(dead blocks read, or live blocks masked off)",
+         "For gather kernels, the multiset of blocks the *unguarded* "
+         "cells read must equal the live set derived independently "
+         "from the truth source (tile bitmap, block table + lengths). "
+         "A guard that is too loose streams dead/scratch blocks into "
+         "the accumulation; too tight drops live work."),
+    Rule("K304", "accumulator/softmax scratch not float32, or scratch "
+         "shape mismatched",
+         "Streaming accumulators and softmax running state must be "
+         "f32 VMEM (bf16 accumulation loses the exactness the oracle "
+         "tests assert), and an accumulator's shape must match the "
+         "output block it flushes into."),
+    Rule("K305", "VMEM footprint estimate exceeds the backend budget",
+         "Double-buffered input/output blocks plus scratch at the "
+         "planned tile shape must fit the per-backend budget declared "
+         "in configs.base.VMEM_BUDGET_BYTES — a launch that audits "
+         "red here would OOM VMEM on real hardware."),
+    Rule("K306", "kernel spec cost disagrees with the perf model's "
+         "passes/FLOPs/bytes prediction",
+         "The auditor derives passes/flops/bytes by enumerating the "
+         "spec's grid and guard under the no-elision traffic model and "
+         "compares against core.perf_model's analytic KernelCost "
+         "prediction from plan metadata — so the perf model and the "
+         "kernels cannot silently diverge."),
+)
+
+# The rule-code registry.  README's "Static analysis" table is generated
+# from this dict (``rules_markdown``); tests assert every emitted code
+# is registered and every registered code has a seeded-defect test.
+RULES: Dict[str, Rule] = {r.code: r for r in _ALL_RULES}
+
+
+def rules_markdown() -> str:
+    """The README rules table, generated from the registry."""
+    lines = ["| Code | Checks |", "|------|--------|"]
+    for r in _ALL_RULES:
+        lines.append(f"| {r.code} | {r.title} |")
+    return "\n".join(lines)
+
+
+def explain(code: str) -> str:
+    """Human-readable account of one rule (``lint --explain CODE``)."""
+    rule = RULES.get(code.upper())
+    if rule is None:
+        known = ", ".join(sorted(RULES))
+        raise KeyError(f"unknown rule code {code!r}; known: {known}")
+    return f"{rule.code} [{rule.family}]\n  {rule.title}\n\n{rule.doc}"
 
 
 @dataclass(frozen=True)

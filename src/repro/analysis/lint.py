@@ -226,6 +226,18 @@ def _lint_serving(report: Report, name: str, adapter, spec, params,
                                      where=f"{name}/prefill.hlo"))
 
 
+def lint_kernels(*, backend: str = "tpu") -> Report:
+    """K300–K306 over every registered Pallas kernel's canonical audit
+    case (``analysis.kernel_audit``): BlockSpec/grid coverage, bounds,
+    guard/liveness agreement, accumulator dtypes, VMEM budget, and the
+    perf-model cross-check.  Pure host numpy — no tracing, no device."""
+    from repro.analysis.kernel_audit import audit_kernels
+
+    report = Report()
+    report.extend(audit_kernels(backend=backend))
+    return report
+
+
 def lint_all(names: Optional[Sequence[str]] = None, *,
              scale: str = "tiny", seed: int = 0,
              hlo: bool = False) -> Dict[str, Report]:

@@ -219,11 +219,47 @@ def cmd_recipes(args) -> int:
 
 def cmd_lint(args) -> int:
     """Static sparsity lint; exits 1 on any error-severity finding."""
-    from repro.analysis import lint_arch
+    from repro.analysis import lint_arch, lint_kernels
     from repro.api.registry import list_adaptable
 
-    names = list_adaptable() if args.all else [args.arch]
+    if args.explain is not None:
+        from repro.analysis.findings import RULES, explain
+        code = args.explain.upper()
+        if code not in RULES:
+            _emit({"error": "unknown rule", "code": code,
+                   "known": sorted(RULES)}, args.json,
+                  f"unknown rule {code}; known: "
+                  f"{', '.join(sorted(RULES))}")
+            return EXIT_UNSUPPORTED
+        rule = RULES[code]
+        _emit({"code": rule.code, "family": rule.family,
+               "title": rule.title, "doc": rule.doc}, args.json,
+              explain(code))
+        return EXIT_OK
+
+    if not (args.all or args.arch or args.kernels):
+        print("lint: one of --arch, --all, --kernels, or --explain "
+              "is required")
+        return EXIT_UNSUPPORTED
+
     any_error = False
+    # the kernel audit (K3xx) is part of the full gate: on by default
+    # for --all, opt-in alongside --arch, standalone via bare --kernels
+    if args.kernels or args.all:
+        rep = lint_kernels()
+        any_error = not rep.ok
+        summary = rep.summary()
+        _emit({"arch": "kernels", **rep.to_dict()}, args.json,
+              f"{'kernels':28s} findings={summary['findings']} "
+              f"errors={summary['error']} "
+              f"warnings={summary['warning']} "
+              f"{'OK' if rep.ok else 'FAIL'}")
+        if not args.json:
+            for f in rep.findings:
+                print(f"  {f}")
+
+    names = (list_adaptable() if args.all
+             else [args.arch] if args.arch else [])
     for name in names:
         rep = lint_arch(name, recipe=args.recipe, scale=args.scale,
                         seed=args.seed, hlo=args.hlo)
@@ -786,11 +822,18 @@ def build_parser() -> argparse.ArgumentParser:
                        help="static sparsity lint: recipe programs, "
                             "tile-plan invariants, and jitted hot-path "
                             "traces (exit 1 on error findings)")
-    g = p.add_mutually_exclusive_group(required=True)
+    g = p.add_mutually_exclusive_group(required=False)
     g.add_argument("--arch", default=None,
                    help="any name from `python -m repro.api archs`")
     g.add_argument("--all", action="store_true",
-                   help="lint every registered arch")
+                   help="lint every registered arch (implies --kernels)")
+    g.add_argument("--explain", default=None, metavar="CODE",
+                   help="print the registry entry for one rule code "
+                        "(e.g. --explain K301) and exit")
+    p.add_argument("--kernels", action="store_true",
+                   help="audit every registered Pallas kernel's "
+                        "BlockSpec/grid geometry (K3xx); on by default "
+                        "with --all, standalone without --arch")
     p.add_argument("--recipe", default=None,
                    help="recipe to lint instead of the family default: "
                         "a registered name or a path to a recipe .json")

@@ -33,6 +33,27 @@ SLSTM = "slstm"          # xLSTM scalar-LSTM block
 # ---------------------------------------------------------------------------
 MXU_TILE = 128
 
+# ---------------------------------------------------------------------------
+# Per-backend VMEM budget for kernel launch geometry (bytes).  The
+# kernel auditor (analysis.kernel_audit, rule K305) bounds every
+# registered kernel's estimated VMEM residency — double-buffered
+# input/output blocks plus scratch — against this.  TPU: ~16 MiB of
+# VMEM per TensorCore (v4/v5 class).  CPU runs the kernels in
+# interpret mode against host memory, but mirrors the TPU budget so a
+# tile shape that audits green here also fits when interpret is turned
+# off on real hardware.
+# ---------------------------------------------------------------------------
+VMEM_BUDGET_BYTES = {
+    "tpu": 16 * 2 ** 20,
+    "cpu": 16 * 2 ** 20,
+}
+
+
+def vmem_budget(backend: str = "tpu") -> int:
+    """VMEM byte budget for ``backend`` (unknown backends get the TPU
+    budget — the conservative target every kernel must fit)."""
+    return VMEM_BUDGET_BYTES.get(backend, VMEM_BUDGET_BYTES["tpu"])
+
 
 @dataclass(frozen=True)
 class MoEConfig:

@@ -160,3 +160,111 @@ def iso_perf_xbars(unpruned: Sequence[LayerPerf],
         "pruned_xbars": need_pruned,
         "savings": 1.0 - need_pruned / max(need_unpruned, 1e-9),
     }
+
+
+# ---------------------------------------------------------------------------
+# Analytic per-kernel cost model for the TPU Pallas kernels.
+#
+# These predictors compute, from a plan's *metadata* (live-tile counts,
+# sequence lengths) what each kernel should cost under the documented
+# "no-elision, guarded-skip" traffic model:
+#
+#   * passes    — grid cells whose pl.when work gate is open;
+#   * flops     — MXU flops those cells issue;
+#   * hbm_bytes — every unguarded cell re-streams its input blocks
+#                 (no revolving-window elision credit) and every output
+#                 tile is written exactly once.
+#
+# analysis.kernel_audit (rule K306) independently derives the same
+# three numbers by exhaustively enumerating the kernel's actual
+# grid/index maps/guard from its KernelSpec and compares — so the perf
+# model and the kernels cannot silently diverge.  The model is
+# deliberately simple and exact under its stated assumptions; it is a
+# consistency oracle, not a wall-clock simulator.
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class KernelCost:
+    """Predicted cost of one kernel launch under the no-elision model."""
+    passes: int         # unguarded grid cells
+    flops: float        # MXU flops
+    hbm_bytes: float    # input-block reads + output-tile writes
+
+
+def bsmm_fwd_cost(plan, M: int, *, bm: int, dtype_bytes: int = 4,
+                  fused: bool = False) -> KernelCost:
+    """Forward bsmm: (M/bm) row blocks × the plan's live tiles."""
+    t = plan.tile
+    Nt = int(plan.counts.shape[0])
+    passes = (M // bm) * int(plan.live_tiles)
+    flops = passes * 2.0 * bm * t * t
+    in_bytes = passes * (bm * t + t * t) * dtype_bytes
+    if fused:
+        in_bytes += passes * t * dtype_bytes        # (1, bn) bias block
+    out_bytes = (M // bm) * Nt * bm * t * dtype_bytes
+    return KernelCost(passes, flops, float(in_bytes + out_bytes))
+
+
+def bsmm_dx_cost(plan, M: int, *, bm: int,
+                 dtype_bytes: int = 4) -> KernelCost:
+    """dx backward: transposed plan, same live-tile count, (M, K) out."""
+    t = plan.tile
+    Kt = int(plan.counts_t.shape[0])
+    passes = (M // bm) * int(plan.live_tiles)
+    flops = passes * 2.0 * bm * t * t
+    in_bytes = passes * (bm * t + t * t) * dtype_bytes
+    out_bytes = (M // bm) * Kt * bm * t * dtype_bytes
+    return KernelCost(passes, flops, float(in_bytes + out_bytes))
+
+
+def bsmm_dw_cost(plan, M: int, *, bm: int,
+                 dtype_bytes: int = 4) -> KernelCost:
+    """dw backward: only the L live (t, t) grad tiles are built."""
+    t = plan.tile
+    L = int(plan.live_tiles)
+    passes = L * (M // bm)
+    flops = passes * 2.0 * bm * t * t
+    in_bytes = passes * 2 * bm * t * dtype_bytes    # x + g blocks
+    out_bytes = L * t * t * dtype_bytes
+    return KernelCost(passes, flops, float(in_bytes + out_bytes))
+
+
+def bsmm_train_cost(plan, M: int, *, bm: int, dtype_bytes: int = 4,
+                    fused: bool = False) -> Dict[str, KernelCost]:
+    """One value_and_grad step: forward + dx + dw kernel costs."""
+    return {"fwd": bsmm_fwd_cost(plan, M, bm=bm, dtype_bytes=dtype_bytes,
+                                 fused=fused),
+            "dx": bsmm_dx_cost(plan, M, bm=bm, dtype_bytes=dtype_bytes),
+            "dw": bsmm_dw_cost(plan, M, bm=bm, dtype_bytes=dtype_bytes)}
+
+
+def paged_decode_cost(lengths, *, nb: int, block_tokens: int,
+                      n_q_heads: int, n_kv_heads: int, head_dim: int,
+                      v_dim: int, fused_v: bool,
+                      dtype_bytes: int = 4) -> KernelCost:
+    """Paged decode attention: Σ_b live blocks of each sequence.
+
+    ``lengths`` are live context lengths (≥ 1), ``nb`` the table
+    width; a sequence touches ``ceil(len / block_tokens)`` blocks.
+    """
+    T = block_tokens
+    Hq, Hkv, hd, dv = n_q_heads, n_kv_heads, head_dim, v_dim
+    passes = sum(min(nb, -(-int(n) // T)) for n in lengths)
+    flops = passes * (2.0 * Hq * T * hd + 2.0 * Hq * T * dv)
+    kv_block = T * Hkv * hd + (0 if fused_v else T * Hkv * dv)
+    in_bytes = passes * (Hq * hd + kv_block) * dtype_bytes
+    out_bytes = len(lengths) * Hq * dv * dtype_bytes
+    return KernelCost(passes, flops, float(in_bytes + out_bytes))
+
+
+def flash_cost(*, batch: int, n_q_heads: int, seq: int, head_dim: int,
+               bq: int, bk: int, causal: bool,
+               dtype_bytes: int = 4) -> KernelCost:
+    """Flash attention: causal skips fully-masked (i, j) block pairs."""
+    nq, nk = seq // bq, seq // bk
+    pairs = sum(1 for i in range(nq) for j in range(nk)
+                if not causal or j * bk <= i * bq + bq - 1)
+    passes = batch * n_q_heads * pairs
+    flops = passes * 4.0 * bq * bk * head_dim
+    in_bytes = passes * (bq + 2 * bk) * head_dim * dtype_bytes
+    out_bytes = batch * n_q_heads * nq * bq * head_dim * dtype_bytes
+    return KernelCost(passes, flops, float(in_bytes + out_bytes))

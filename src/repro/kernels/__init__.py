@@ -1,3 +1,13 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+#
+# Every Pallas kernel here exports a declarative KernelSpec builder
+# (kernels.spec) that its pallas_call is constructed from, so
+# analysis.kernel_audit can statically verify the executed launch
+# geometry.  This __init__ re-exports only the numpy-only spec layer;
+# the kernel modules themselves import jax and are imported directly.
+from repro.kernels.spec import (AUDITED_KERNELS, BlockMap, KernelSpec,
+                                ScratchSpec)
+
+__all__ = ["AUDITED_KERNELS", "BlockMap", "KernelSpec", "ScratchSpec"]

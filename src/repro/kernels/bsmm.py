@@ -33,6 +33,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.configs.base import MXU_TILE
 from repro.kernels.compat import CompilerParams
+from repro.kernels.spec import BlockMap, KernelSpec, ScratchSpec
 
 
 class GeometryError(ValueError):
@@ -179,59 +180,69 @@ def bsmm_pallas(x, w, tile_mask: np.ndarray, *, bm: int = MXU_TILE,
                          interpret=interpret)
 
 
+def bsmm_fwd_spec(idx, counts, kmax: int, *, M: int, K: int, N: int,
+                  bm: int, bk: int, bn: int, dtype=jnp.float32,
+                  fused: bool = False) -> KernelSpec:
+    """Launch geometry of the forward bsmm (optionally with the fused
+    bias epilogue).  The returned spec's index maps ARE the ones the
+    ``pallas_call`` executes — ``_bsmm_compact`` builds from it."""
+    idx = np.asarray(idx, np.int32)
+    counts = np.asarray(counts, np.int32)
+    inputs = [
+        BlockMap("x", (bm, bk),
+                 lambda i, j, k, cnt, idx: (i, idx[j, k]),
+                 (M, K), dtype, gather=True),
+        BlockMap("w", (bk, bn),
+                 lambda i, j, k, cnt, idx: (idx[j, k], j),
+                 (K, N), dtype, gather=True),
+    ]
+    if fused:
+        inputs.append(BlockMap("bias", (1, bn),
+                               lambda i, j, k, cnt, idx: (0, j),
+                               (1, N), dtype))
+    return KernelSpec(
+        name="bsmm_fwd_epilogue" if fused else "bsmm_fwd",
+        grid=(M // bm, N // bn, kmax),
+        dims=("parallel", "parallel", "arbitrary"),
+        inputs=tuple(inputs),
+        outputs=(BlockMap("out", (bm, bn),
+                          lambda i, j, k, cnt, idx: (i, j),
+                          (M, N), dtype),),
+        scratch=(ScratchSpec((bm, bn), jnp.float32, "accumulator"),),
+        scalars=(counts, idx),
+        guard=lambda i, j, k, cnt, idx: bool(k < cnt[j]),
+        cell_flops=2.0 * bm * bk * bn,
+        notes="live K-tile accumulation per output column",
+    )
+
+
 def _bsmm_compact(x, w, idx, counts, kmax: int, *, bm: int, bk: int,
                   bn: int, interpret: bool, bias=None,
                   act: Optional[str] = None):
     M, K = x.shape
     N = w.shape[1]
-    grid = (M // bm, N // bn, kmax)
     fused = bias is not None or act is not None
+    spec = bsmm_fwd_spec(idx, counts, kmax, M=M, K=K, N=N, bm=bm, bk=bk,
+                         bn=bn, dtype=x.dtype, fused=fused)
+    body = functools.partial(_bsmm_epilogue_kernel, act=act) if fused \
+        else _bsmm_kernel
+    kernel = pl.pallas_call(
+        body,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=spec.num_scalar_prefetch,
+            grid=spec.grid,
+            in_specs=spec.pallas_in_specs(),
+            out_specs=spec.pallas_out_specs()[0],
+            scratch_shapes=spec.pallas_scratch(),
+        ),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        compiler_params=CompilerParams(dimension_semantics=spec.dims),
+        interpret=interpret,
+    )
     if fused:
         b = jnp.zeros((1, N), x.dtype) if bias is None \
             else jnp.asarray(bias).reshape(1, N)
-        kernel = pl.pallas_call(
-            functools.partial(_bsmm_epilogue_kernel, act=act),
-            grid_spec=pltpu.PrefetchScalarGridSpec(
-                num_scalar_prefetch=2,
-                grid=grid,
-                in_specs=[
-                    pl.BlockSpec((bm, bk),
-                                 lambda i, j, k, cnt, idx: (i, idx[j, k])),
-                    pl.BlockSpec((bk, bn),
-                                 lambda i, j, k, cnt, idx: (idx[j, k], j)),
-                    pl.BlockSpec((1, bn),
-                                 lambda i, j, k, cnt, idx: (0, j)),
-                ],
-                out_specs=pl.BlockSpec((bm, bn),
-                                       lambda i, j, k, cnt, idx: (i, j)),
-                scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-            ),
-            out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
-            compiler_params=CompilerParams(
-                dimension_semantics=("parallel", "parallel", "arbitrary")),
-            interpret=interpret,
-        )
         return kernel(jnp.asarray(counts), jnp.asarray(idx), x, w, b)
-    kernel = pl.pallas_call(
-        _bsmm_kernel,
-        grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=2,
-            grid=grid,
-            in_specs=[
-                pl.BlockSpec((bm, bk),
-                             lambda i, j, k, cnt, idx: (i, idx[j, k])),
-                pl.BlockSpec((bk, bn),
-                             lambda i, j, k, cnt, idx: (idx[j, k], j)),
-            ],
-            out_specs=pl.BlockSpec((bm, bn),
-                                   lambda i, j, k, cnt, idx: (i, j)),
-            scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        ),
-        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
-        compiler_params=CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
-        interpret=interpret,
-    )
     return kernel(jnp.asarray(counts), jnp.asarray(idx), x, w)
 
 
@@ -328,6 +339,36 @@ def _bsmm_dx_kernel(count_ref, idx_ref, g_ref, w_ref, o_ref, acc_ref):
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
+def bsmm_dx_spec(idx_t, counts_t, nmax: int, *, M: int, K: int, N: int,
+                 bm: int, tile: int, dtype=jnp.float32) -> KernelSpec:
+    """Launch geometry of the dx backward: the transposed plan steers
+    ``g @ wᵀ`` over live N tiles of each K-row."""
+    idx_t = np.asarray(idx_t, np.int32)
+    counts_t = np.asarray(counts_t, np.int32)
+    bk = bn = tile
+    return KernelSpec(
+        name="bsmm_dx",
+        grid=(M // bm, K // bk, nmax),
+        dims=("parallel", "parallel", "arbitrary"),
+        inputs=(
+            BlockMap("g", (bm, bn),
+                     lambda i, k, t, cnt, idx: (i, idx[k, t]),
+                     (M, N), dtype, gather=True),
+            BlockMap("w", (bk, bn),
+                     lambda i, k, t, cnt, idx: (k, idx[k, t]),
+                     (K, N), dtype, gather=True),
+        ),
+        outputs=(BlockMap("dx", (bm, bk),
+                          lambda i, k, t, cnt, idx: (i, k),
+                          (M, K), dtype),),
+        scratch=(ScratchSpec((bm, bk), jnp.float32, "accumulator"),),
+        scalars=(counts_t, idx_t),
+        guard=lambda i, k, t, cnt, idx: bool(t < cnt[k]),
+        cell_flops=2.0 * bm * bk * bn,
+        notes="transposed plan: live N-tile accumulation per K-row",
+    )
+
+
 def _bsmm_dx(g, w, plan: TilePlan, *, bm: int):
     """g (M, N) @ (w ⊙ bitmap)ᵀ → (M, K), skipping dead N tiles.
 
@@ -337,26 +378,19 @@ def _bsmm_dx(g, w, plan: TilePlan, *, bm: int):
     """
     M, N = g.shape
     K = w.shape[0]
-    bk = bn = plan.tile
-    grid = (M // bm, K // bk, plan.nmax)
+    spec = bsmm_dx_spec(plan.idx_t, plan.counts_t, plan.nmax, M=M, K=K,
+                        N=N, bm=bm, tile=plan.tile, dtype=g.dtype)
     kernel = pl.pallas_call(
         _bsmm_dx_kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=2,
-            grid=grid,
-            in_specs=[
-                pl.BlockSpec((bm, bn),
-                             lambda i, k, t, cnt, idx: (i, idx[k, t])),
-                pl.BlockSpec((bk, bn),
-                             lambda i, k, t, cnt, idx: (k, idx[k, t])),
-            ],
-            out_specs=pl.BlockSpec((bm, bk),
-                                   lambda i, k, t, cnt, idx: (i, k)),
-            scratch_shapes=[pltpu.VMEM((bm, bk), jnp.float32)],
+            num_scalar_prefetch=spec.num_scalar_prefetch,
+            grid=spec.grid,
+            in_specs=spec.pallas_in_specs(),
+            out_specs=spec.pallas_out_specs()[0],
+            scratch_shapes=spec.pallas_scratch(),
         ),
         out_shape=jax.ShapeDtypeStruct((M, K), g.dtype),
-        compiler_params=CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        compiler_params=CompilerParams(dimension_semantics=spec.dims),
         interpret=plan.interpret,
     )
     return kernel(jnp.asarray(plan.counts_t), jnp.asarray(plan.idx_t), g, w)
@@ -379,6 +413,38 @@ def _bsmm_dw_kernel(kk_ref, nn_ref, x_ref, g_ref, o_ref, acc_ref):
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)[None]
 
 
+def bsmm_dw_spec(kk, nn, *, M: int, K: int, N: int, bm: int, tile: int,
+                 dtype=jnp.float32) -> KernelSpec:
+    """Launch geometry of the dw backward: grid (L, M/bm) over the flat
+    live-tile coordinates — no guard, every cell is live by
+    construction (dead tiles are never in ``kk``/``nn``)."""
+    kk = np.asarray(kk, np.int32)
+    nn = np.asarray(nn, np.int32)
+    bk = bn = tile
+    L = int(kk.shape[0])
+    return KernelSpec(
+        name="bsmm_dw",
+        grid=(L, M // bm),
+        dims=("parallel", "arbitrary"),
+        inputs=(
+            BlockMap("x", (bm, bk),
+                     lambda l, m, kk, nn: (m, kk[l]),
+                     (M, K), dtype, gather=True),
+            BlockMap("g", (bm, bn),
+                     lambda l, m, kk, nn: (m, nn[l]),
+                     (M, N), dtype, gather=True),
+        ),
+        outputs=(BlockMap("dw_tiles", (1, bk, bn),
+                          lambda l, m, kk, nn: (l, 0, 0),
+                          (L, bk, bn), dtype),),
+        scratch=(ScratchSpec((bk, bn), jnp.float32, "accumulator"),),
+        scalars=(kk, nn),
+        guard=None,
+        cell_flops=2.0 * bm * bk * bn,
+        notes="live (bk, bn) grad tiles only; scattered to dense after",
+    )
+
+
 def _bsmm_dw(x2, g, plan: TilePlan, *, bm: int, out_dtype):
     """xᵀ (K, M) @ g (M, N) → (K, N), materialising ONLY live tiles.
 
@@ -394,25 +460,19 @@ def _bsmm_dw(x2, g, plan: TilePlan, *, bm: int, out_dtype):
     L = int(plan.kk.shape[0])
     if L == 0:
         return jnp.zeros((K, N), out_dtype)
-    grid = (L, M // bm)
+    spec = bsmm_dw_spec(plan.kk, plan.nn, M=M, K=K, N=N, bm=bm,
+                        tile=plan.tile, dtype=out_dtype)
     kernel = pl.pallas_call(
         _bsmm_dw_kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=2,
-            grid=grid,
-            in_specs=[
-                pl.BlockSpec((bm, bk),
-                             lambda l, m, kk, nn: (m, kk[l])),
-                pl.BlockSpec((bm, bn),
-                             lambda l, m, kk, nn: (m, nn[l])),
-            ],
-            out_specs=pl.BlockSpec((1, bk, bn),
-                                   lambda l, m, kk, nn: (l, 0, 0)),
-            scratch_shapes=[pltpu.VMEM((bk, bn), jnp.float32)],
+            num_scalar_prefetch=spec.num_scalar_prefetch,
+            grid=spec.grid,
+            in_specs=spec.pallas_in_specs(),
+            out_specs=spec.pallas_out_specs()[0],
+            scratch_shapes=spec.pallas_scratch(),
         ),
         out_shape=jax.ShapeDtypeStruct((L, bk, bn), out_dtype),
-        compiler_params=CompilerParams(
-            dimension_semantics=("parallel", "arbitrary")),
+        compiler_params=CompilerParams(dimension_semantics=spec.dims),
         interpret=plan.interpret,
     )
     tiles = kernel(jnp.asarray(plan.kk), jnp.asarray(plan.nn), x2, g)
@@ -578,6 +638,33 @@ def _masked_kernel(x_ref, w_ref, m_ref, o_ref, acc_ref):
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
+def masked_matmul_spec(*, M: int, K: int, N: int, bm: int, bk: int,
+                       bn: int, dtype=jnp.float32) -> KernelSpec:
+    """Launch geometry of the dense-grid masked matmul.  The MXU skip
+    is data-dependent (``jnp.any(mask block)``) so the spec carries no
+    host guard — every block is DMA'd, which is exactly the LTP
+    crossbar-unaware point this kernel exists to demonstrate."""
+    return KernelSpec(
+        name="masked_matmul",
+        grid=(M // bm, N // bn, K // bk),
+        dims=("parallel", "parallel", "arbitrary"),
+        inputs=(
+            BlockMap("x", (bm, bk), lambda i, j, k: (i, k),
+                     (M, K), dtype),
+            BlockMap("w", (bk, bn), lambda i, j, k: (k, j),
+                     (K, N), dtype),
+            BlockMap("mask", (bk, bn), lambda i, j, k: (k, j),
+                     (K, N), dtype),
+        ),
+        outputs=(BlockMap("out", (bm, bn), lambda i, j, k: (i, j),
+                          (M, N), dtype),),
+        scratch=(ScratchSpec((bm, bn), jnp.float32, "accumulator"),),
+        guard=None,
+        cell_flops=2.0 * bm * bk * bn,
+        notes="dense grid; MXU skip is data-dependent, DMA never skips",
+    )
+
+
 def masked_matmul_pallas(x, w, mask, *, bm: int = MXU_TILE,
                          bk: int = MXU_TILE, bn: int = MXU_TILE,
                          interpret: bool = True):
@@ -587,20 +674,16 @@ def masked_matmul_pallas(x, w, mask, *, bm: int = MXU_TILE,
     if M % bm or K % bk or N % bn:
         raise GeometryError(f"shapes must tile {(bm, bk, bn)}",
                             shape=(M, K, N), where="masked_matmul_pallas")
-    grid = (M // bm, N // bn, K // bk)
+    spec = masked_matmul_spec(M=M, K=K, N=N, bm=bm, bk=bk, bn=bn,
+                              dtype=x.dtype)
     kernel = pl.pallas_call(
         _masked_kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
-            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
-            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        grid=spec.grid,
+        in_specs=spec.pallas_in_specs(),
+        out_specs=spec.pallas_out_specs()[0],
+        scratch_shapes=spec.pallas_scratch(),
         out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
-        compiler_params=CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        compiler_params=CompilerParams(dimension_semantics=spec.dims),
         interpret=interpret,
     )
     return kernel(x, w, mask)

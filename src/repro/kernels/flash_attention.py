@@ -23,8 +23,46 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.configs.base import MXU_TILE
 from repro.kernels.compat import CompilerParams
+from repro.kernels.spec import BlockMap, KernelSpec, ScratchSpec
 
 NEG_INF = -1e30
+
+
+def flash_attention_spec(*, B: int, S: int, Hq: int, Hkv: int, hd: int,
+                         bq: int = MXU_TILE, bk: int = MXU_TILE,
+                         causal: bool = True,
+                         dtype=jnp.float32) -> KernelSpec:
+    """Launch geometry of the flash kernel over the (B, H, S, hd)
+    layout: GQA via the ``h // G`` kv index map, causal block skip as
+    the host guard."""
+    G = Hq // Hkv
+
+    def kv_map(b, h, i, j):
+        return (b, h // G, j, 0)
+
+    return KernelSpec(
+        name="flash_attention",
+        grid=(B, Hq, S // bq, S // bk),
+        dims=("parallel", "parallel", "parallel", "arbitrary"),
+        inputs=(
+            BlockMap("q", (1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0),
+                     (B, Hq, S, hd), dtype),
+            BlockMap("k", (1, 1, bk, hd), kv_map,
+                     (B, Hkv, S, hd), dtype),
+            BlockMap("v", (1, 1, bk, hd), kv_map,
+                     (B, Hkv, S, hd), dtype),
+        ),
+        outputs=(BlockMap("out", (1, 1, bq, hd),
+                          lambda b, h, i, j: (b, h, i, 0),
+                          (B, Hq, S, hd), dtype),),
+        scratch=(ScratchSpec((bq, hd), jnp.float32, "accumulator"),
+                 ScratchSpec((bq, 1), jnp.float32, "softmax_state"),
+                 ScratchSpec((bq, 1), jnp.float32, "softmax_state")),
+        guard=(lambda b, h, i, j: bool(j * bk <= i * bq + bq - 1))
+        if causal else None,
+        cell_flops=4.0 * bq * bk * hd,
+        notes="causal fully-masked (i, j) blocks skipped via pl.when",
+    )
 
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
@@ -80,27 +118,17 @@ def flash_attention(q, k, v, *, causal: bool = True,
     qt = q.transpose(0, 2, 1, 3)
     kt = k.transpose(0, 2, 1, 3)
     vt = v.transpose(0, 2, 1, 3)
-    grid = (B, Hq, S // bq, S // bk)
+    spec = flash_attention_spec(B=B, S=S, Hq=Hq, Hkv=Hkv, hd=hd, bq=bq,
+                                bk=bk, causal=causal, dtype=q.dtype)
     kernel = pl.pallas_call(
         functools.partial(_flash_kernel, scale=scale, causal=causal,
                           bq=bq, bk=bk),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
-            pl.BlockSpec((1, 1, bk, hd),
-                         lambda b, h, i, j: (b, h // G, j, 0)),
-            pl.BlockSpec((1, 1, bk, hd),
-                         lambda b, h, i, j: (b, h // G, j, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, 1, bq, hd),
-                               lambda b, h, i, j: (b, h, i, 0)),
+        grid=spec.grid,
+        in_specs=spec.pallas_in_specs(),
+        out_specs=spec.pallas_out_specs()[0],
         out_shape=jax.ShapeDtypeStruct((B, Hq, S, hd), q.dtype),
-        scratch_shapes=[pltpu.VMEM((bq, hd), jnp.float32),
-                        pltpu.VMEM((bq, 1), jnp.float32),
-                        pltpu.VMEM((bq, 1), jnp.float32)],
-        compiler_params=CompilerParams(
-            dimension_semantics=("parallel", "parallel", "parallel",
-                                 "arbitrary")),
+        scratch_shapes=spec.pallas_scratch(),
+        compiler_params=CompilerParams(dimension_semantics=spec.dims),
         interpret=interpret,
     )
     out = kernel(qt, kt, vt)

@@ -42,12 +42,14 @@ from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.configs.base import MXU_TILE
 from repro.kernels.bsmm import GeometryError, default_interpret
 from repro.kernels.compat import CompilerParams
+from repro.kernels.spec import BlockMap, KernelSpec, ScratchSpec
 
 #: tokens per KV block — one MXU tile edge, like the bsmm tile
 BLOCK_TOKENS = MXU_TILE
@@ -204,6 +206,53 @@ def _paged_kernel_kv(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[0] = (acc_ref[...] / l_ref[:, :1]).astype(o_ref.dtype)
 
 
+def paged_attention_spec(geo: PagedGeometry, tables, lengths, *,
+                         fused_v: bool,
+                         dtype=jnp.float32) -> KernelSpec:
+    """Launch geometry of one paged-attention call: the block-table
+    gather in the kv index map, the ``j*T < len`` liveness guard, and
+    the f32 streaming-softmax scratch — exactly what the pallas_call
+    below executes."""
+    # tables/lengths may be tracers (the jitted decode path); keep them
+    # as-is — the auditor builds its specs from concrete numpy arrays
+    if isinstance(tables, np.ndarray):
+        tables = np.asarray(tables, np.int32)
+    if isinstance(lengths, np.ndarray):
+        lengths = np.asarray(lengths, np.int32)
+    T = geo.T
+    inputs = [
+        BlockMap("q", (1, geo.Hq, geo.hd),
+                 lambda b, j, tbl, ln: (b, 0, 0),
+                 (geo.B, geo.Hq, geo.hd), dtype),
+        BlockMap("k_pool", (1, T, geo.Hkv, geo.hd),
+                 lambda b, j, tbl, ln: (tbl[b, j], 0, 0, 0),
+                 (geo.P, T, geo.Hkv, geo.hd), dtype, gather=True),
+    ]
+    if not fused_v:
+        inputs.append(
+            BlockMap("v_pool", (1, T, geo.Hkv, geo.dv),
+                     lambda b, j, tbl, ln: (tbl[b, j], 0, 0, 0),
+                     (geo.P, T, geo.Hkv, geo.dv), dtype, gather=True))
+    return KernelSpec(
+        name="paged_attention_mla" if fused_v else "paged_attention_gqa",
+        grid=(geo.B, geo.NB),
+        dims=("parallel", "arbitrary"),
+        inputs=tuple(inputs),
+        outputs=(BlockMap("out", (1, geo.Hq, geo.dv),
+                          lambda b, j, tbl, ln: (b, 0, 0),
+                          (geo.B, geo.Hq, geo.dv), dtype),),
+        scratch=(ScratchSpec((geo.Hq, geo.dv), jnp.float32,
+                             "accumulator"),
+                 ScratchSpec((geo.Hq, T), jnp.float32, "softmax_state"),
+                 ScratchSpec((geo.Hq, T), jnp.float32, "softmax_state")),
+        scalars=(tables, lengths),
+        guard=lambda b, j, tbl, ln: bool(j * T < ln[b]),
+        cell_flops=2.0 * geo.Hq * T * geo.hd + 2.0 * geo.Hq * T * geo.dv,
+        notes="block-table gather; dead entries must point at a valid "
+              "pool block (the engine's scratch block 0)",
+    )
+
+
 def paged_attention(q, k_pool, v_pool, tables, lengths, *,
                     scale: float, v_dim: Optional[int] = None,
                     interpret: Optional[bool] = None):
@@ -228,48 +277,28 @@ def paged_attention(q, k_pool, v_pool, tables, lengths, *,
     geo = _check_geometry(q, k_pool, v_pool, tables, lengths, v_dim)
     if interpret is None:
         interpret = default_interpret()
-    grid = (geo.B, geo.NB)
+    fused = v_pool is None
+    spec = paged_attention_spec(geo, tables, lengths, fused_v=fused,
+                                dtype=q.dtype)
     tables = jnp.asarray(tables, jnp.int32)
     lengths = jnp.asarray(lengths, jnp.int32)
-    scratch = [
-        pltpu.VMEM((geo.Hq, geo.dv), jnp.float32),      # acc
-        pltpu.VMEM((geo.Hq, geo.T), jnp.float32),       # running max
-        pltpu.VMEM((geo.Hq, geo.T), jnp.float32),       # running denom
-    ]
-    q_spec = pl.BlockSpec((1, geo.Hq, geo.hd),
-                          lambda b, j, tbl, ln: (b, 0, 0))
-    kv_spec = pl.BlockSpec((1, geo.T, geo.Hkv, geo.hd),
-                           lambda b, j, tbl, ln: (tbl[b, j], 0, 0, 0))
-    out_spec = pl.BlockSpec((1, geo.Hq, geo.dv),
-                            lambda b, j, tbl, ln: (b, 0, 0))
-    if v_pool is None:
-        kernel = pl.pallas_call(
-            functools.partial(_paged_kernel, scale=scale, v_dim=geo.dv,
-                              T=geo.T),
-            grid_spec=pltpu.PrefetchScalarGridSpec(
-                num_scalar_prefetch=2, grid=grid,
-                in_specs=[q_spec, kv_spec],
-                out_specs=out_spec, scratch_shapes=scratch),
-            out_shape=jax.ShapeDtypeStruct((geo.B, geo.Hq, geo.dv),
-                                           q.dtype),
-            compiler_params=CompilerParams(
-                dimension_semantics=("parallel", "arbitrary")),
-            interpret=interpret,
-        )
-        return kernel(tables, lengths, q, k_pool)
-    v_spec = pl.BlockSpec((1, geo.T, geo.Hkv, geo.dv),
-                          lambda b, j, tbl, ln: (tbl[b, j], 0, 0, 0))
+    body = functools.partial(_paged_kernel, scale=scale, v_dim=geo.dv,
+                             T=geo.T) if fused \
+        else functools.partial(_paged_kernel_kv, scale=scale, T=geo.T)
     kernel = pl.pallas_call(
-        functools.partial(_paged_kernel_kv, scale=scale, T=geo.T),
+        body,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=2, grid=grid,
-            in_specs=[q_spec, kv_spec, v_spec],
-            out_specs=out_spec, scratch_shapes=scratch),
+            num_scalar_prefetch=spec.num_scalar_prefetch,
+            grid=spec.grid,
+            in_specs=spec.pallas_in_specs(),
+            out_specs=spec.pallas_out_specs()[0],
+            scratch_shapes=spec.pallas_scratch()),
         out_shape=jax.ShapeDtypeStruct((geo.B, geo.Hq, geo.dv), q.dtype),
-        compiler_params=CompilerParams(
-            dimension_semantics=("parallel", "arbitrary")),
+        compiler_params=CompilerParams(dimension_semantics=spec.dims),
         interpret=interpret,
     )
+    if fused:
+        return kernel(tables, lengths, q, k_pool)
     return kernel(tables, lengths, q, k_pool, v_pool)
 
 

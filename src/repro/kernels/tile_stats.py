@@ -14,6 +14,28 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.configs.base import MXU_TILE
+from repro.kernels.spec import BlockMap, KernelSpec
+
+
+def tile_stats_spec(*, K: int, N: int, bk: int = MXU_TILE,
+                    bn: int = MXU_TILE,
+                    dtype=jnp.float32) -> KernelSpec:
+    """Launch geometry of the per-tile stats kernel: one grid cell per
+    (bk, bn) weight tile, two (1, 1) outputs per cell.  VPU-only (no
+    MXU), so the spec carries no flop model."""
+    return KernelSpec(
+        name="tile_stats",
+        grid=(K // bk, N // bn),
+        dims=("parallel", "parallel"),
+        inputs=(BlockMap("w", (bk, bn), lambda i, j: (i, j),
+                         (K, N), dtype),),
+        outputs=(BlockMap("live", (1, 1), lambda i, j: (i, j),
+                          (K // bk, N // bn), jnp.int32),
+                 BlockMap("sums", (1, 1), lambda i, j: (i, j),
+                          (K // bk, N // bn), jnp.float32)),
+        guard=None,
+        notes="reduction outputs, no scratch",
+    )
 
 
 def _tile_stats_kernel(w_ref, live_ref, sum_ref):
@@ -43,13 +65,12 @@ def tile_stats_pallas(w, *, bk: int = MXU_TILE, bn: int = MXU_TILE,
     """w: (K, N) → (live (Kt, Nt) int32, sums (Kt, Nt) f32)."""
     K, N = w.shape
     assert K % bk == 0 and N % bn == 0, (w.shape, bk, bn)
-    grid = (K // bk, N // bn)
+    spec = tile_stats_spec(K=K, N=N, bk=bk, bn=bn, dtype=w.dtype)
     kernel = pl.pallas_call(
         _tile_stats_kernel,
-        grid=grid,
-        in_specs=[pl.BlockSpec((bk, bn), lambda i, j: (i, j))],
-        out_specs=[pl.BlockSpec((1, 1), lambda i, j: (i, j)),
-                   pl.BlockSpec((1, 1), lambda i, j: (i, j))],
+        grid=spec.grid,
+        in_specs=spec.pallas_in_specs(),
+        out_specs=spec.pallas_out_specs(),
         out_shape=[jax.ShapeDtypeStruct((K // bk, N // bn), jnp.int32),
                    jax.ShapeDtypeStruct((K // bk, N // bn), jnp.float32)],
         interpret=interpret,

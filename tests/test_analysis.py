@@ -575,7 +575,11 @@ def test_cli_lint_fails_on_error_findings(monkeypatch):
     assert cli_mod.main(["lint", "--arch", "vgg11", "--json"]) == 1
 
 
-# keep last: every registered rule code must have a defect test above
+# keep last: every registered R/P/J rule code must have a defect test
+# above (K3xx codes are exercised by tests/test_kernel_audit.py, whose
+# own coverage test closes the other half; tests/test_rules_meta.py
+# asserts the two halves tile the registry exactly)
 def test_every_rule_code_is_exercised():
-    assert TESTED == set(RULES), \
-        f"untested rule codes: {sorted(set(RULES) - TESTED)}"
+    expected = {c for c in RULES if not c.startswith("K")}
+    assert TESTED == expected, \
+        f"untested rule codes: {sorted(expected - TESTED)}"

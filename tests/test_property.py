@@ -176,3 +176,96 @@ def test_quantize_roundtrip_bounded(seed, bits):
     # half-ulp rounding bound with float32 slack on the q·scale product
     bound = np.asarray(qt.scale)[0] * 0.502 + 1e-7
     assert (err <= bound[None, :]).all()
+
+
+# ---------------------------------------------------------------------------
+# kernel auditor (K3xx): every valid plan passes, every corruption fails
+# ---------------------------------------------------------------------------
+def _fwd_audit_inputs(bitmap, tile=8, mt=2):
+    """Random bitmap → (spec, truth, cost) for the bsmm fwd kernel."""
+    from repro.core.perf_model import bsmm_fwd_cost
+    from repro.kernels.bsmm import bsmm_fwd_spec, make_tile_plan
+    kt, nt = bitmap.shape
+    m = mt * tile
+    mask = np.repeat(np.repeat(bitmap, tile, 0), tile, 1)
+    plan = make_tile_plan(mask, tile=tile, strict=True)
+    spec = bsmm_fwd_spec(plan.idx, plan.counts, plan.kmax, M=m,
+                         K=kt * tile, N=nt * tile, bm=tile, bk=tile,
+                         bn=tile)
+    truth = {
+        name: {(i, j): [((i, int(k)) if name == "x" else (int(k), j))
+                        for k in np.nonzero(bitmap[:, j])[0]]
+               for i in range(mt) for j in range(nt)}
+        for name in ("x", "w")}
+    return plan, spec, truth, bsmm_fwd_cost(plan, m, bm=tile)
+
+
+@st.composite
+def tile_bitmap_(draw):
+    kt = draw(st.integers(2, 4))
+    nt = draw(st.integers(2, 4))
+    seed = draw(st.integers(0, 2 ** 16))
+    density = draw(st.floats(0.1, 1.0))
+    rng = np.random.RandomState(seed)
+    return (rng.rand(kt, nt) < density).astype(np.int32)
+
+
+@given(tile_bitmap_())
+@settings(**SETTINGS)
+def test_valid_tile_plans_always_pass_kernel_audit(bitmap):
+    """Any evenly-tiling plan yields a spec that is K-clean: coverage
+    exact, all gathers in bounds, guard == the bitmap's liveness, and
+    the perf model agreeing with the spec enumeration."""
+    from repro.analysis import audit_kernel_spec
+    _, spec, truth, cost = _fwd_audit_inputs(bitmap)
+    findings = audit_kernel_spec(spec, expected_gathers=truth, cost=cost)
+    assert findings == [], findings
+
+
+@given(tile_bitmap_())
+@settings(**SETTINGS)
+def test_corrupted_gather_index_always_fails_audit(bitmap):
+    """Pointing any live idx slot past the K tile grid is always K302."""
+    from hypothesis import assume
+    from repro.analysis import audit_kernel_spec
+    from repro.kernels.bsmm import bsmm_fwd_spec
+    plan, spec, truth, cost = _fwd_audit_inputs(bitmap)
+    assume(plan.counts.max() > 0)
+    j = int(np.argmax(plan.counts))
+    bad_idx = np.array(plan.idx)
+    bad_idx[j, 0] = bitmap.shape[0]          # first live slot, off the edge
+    bad = bsmm_fwd_spec(bad_idx, plan.counts, plan.kmax, M=16,
+                        K=bitmap.shape[0] * 8, N=bitmap.shape[1] * 8,
+                        bm=8, bk=8, bn=8)
+    assert "K302" in {f.code for f in audit_kernel_spec(bad)}
+
+
+@given(tile_bitmap_())
+@settings(**SETTINGS)
+def test_corrupted_output_map_always_fails_coverage(bitmap):
+    """Collapsing the output index map onto row 0 is always K301."""
+    import dataclasses
+    from repro.analysis import audit_kernel_spec
+    _, spec, _, _ = _fwd_audit_inputs(bitmap)
+    o = spec.outputs[0]
+    bad = dataclasses.replace(
+        spec, outputs=(dataclasses.replace(
+            o, index_map=lambda i, j, k, cnt, idx: (0, j)),))
+    assert "K301" in {f.code for f in audit_kernel_spec(bad)}
+
+
+@given(tile_bitmap_())
+@settings(**SETTINGS)
+def test_loosened_guard_always_fails_liveness(bitmap):
+    """Unmasking one dead slot always breaks K303 against the truth."""
+    import dataclasses
+    from hypothesis import assume
+    from repro.analysis import audit_kernel_spec
+    plan, spec, truth, _ = _fwd_audit_inputs(bitmap)
+    assume(int(plan.counts.min()) < int(plan.kmax))   # a dead slot exists
+    kmax = int(plan.kmax)
+    bad = dataclasses.replace(
+        spec, guard=lambda i, j, k, cnt, idx: bool(k <= cnt[j])
+        and k < kmax)
+    findings = audit_kernel_spec(bad, expected_gathers=truth)
+    assert "K303" in {f.code for f in findings}

@@ -1,0 +1,53 @@
+"""Registry/test-suite coverage meta-checks.
+
+The rule registry (``analysis.findings.RULES``) is the single source of
+truth for codes, titles, and docs; these tests pin its contract:
+
+* every registered code is exercised as a quoted literal in a
+  seeded-defect test (R/P/J in tests/test_analysis.py, K3xx in
+  tests/test_kernel_audit.py — each file's own terminal coverage test
+  enforces the *semantic* half, this one catches a code being added to
+  the registry with no test at all);
+* the README rules table is generated from the registry and agrees
+  with it verbatim.
+"""
+import re
+from pathlib import Path
+
+from repro.analysis import RULES, rules_markdown
+
+TESTS = Path(__file__).parent
+README = TESTS.parent / "README.md"
+
+_DEFECT_FILES = {
+    "R": "test_analysis.py",
+    "P": "test_analysis.py",
+    "J": "test_analysis.py",
+    "K": "test_kernel_audit.py",
+}
+
+
+def test_every_rule_code_appears_in_its_defect_test_file():
+    sources = {f: (TESTS / f).read_text()
+               for f in set(_DEFECT_FILES.values())}
+    missing = [code for code, rule in RULES.items()
+               if f'"{code}"' not in sources[_DEFECT_FILES[code[0]]]]
+    assert not missing, \
+        f"registered rules with no seeded-defect test: {sorted(missing)}"
+
+
+def test_rule_families_tile_the_registry():
+    assert {c[0] for c in RULES} == set(_DEFECT_FILES)
+    for rule in RULES.values():
+        assert rule.title and rule.doc, rule.code
+        assert re.fullmatch(r"[RPJK]\d{3}", rule.code)
+
+
+def test_readme_rules_table_matches_registry():
+    readme = README.read_text()
+    for line in rules_markdown().splitlines():
+        assert line in readme, \
+            f"README rules table out of date; regenerate with\n" \
+            f"  PYTHONPATH=src python -c \"from repro.analysis import " \
+            f"rules_markdown; print(rules_markdown())\"\n" \
+            f"missing line: {line}"
